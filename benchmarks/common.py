@@ -1,0 +1,94 @@
+"""Shared benchmark harness: corpus build, timed search runs, CSV output.
+
+Methodology follows the paper §III.E: each measurement is repeated
+``--runs`` times and the *median* wall time is reported.  The container is
+CPU-only, so absolute times are not TPU times — the quantities that transfer
+are the *ratios* (progressive vs truncated at matched accuracy) and the
+accuracy columns; the dry-run roofline (benchmarks/roofline.py) covers the
+TPU-side performance story.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    build_index, make_schedule, progressive_search, stage_dims,
+    top1_accuracy, truncated_search,
+)
+from repro.rag import make_corpus
+
+
+def std_args(desc: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=desc)
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--queries", type=int, default=250)
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: 1M docs, full dims (hours on CPU)")
+    return ap
+
+
+def load_corpus(args, *, dim: Optional[int] = None, **kw):
+    if args.full:
+        n_docs, n_queries = 1_000_000, 2470
+        d = dim or 3584
+    else:
+        n_docs, n_queries = args.docs, args.queries
+        d = dim or args.dim
+    c = make_corpus(n_docs=n_docs, dim=d, n_queries=n_queries,
+                    seed=args.seed, **kw)
+    return (jnp.asarray(c.db), jnp.asarray(c.queries),
+            jnp.asarray(c.ground_truth))
+
+
+def timed_median(fn: Callable, runs: int) -> Tuple[float, object]:
+    """Median wall-seconds over ``runs`` executions (post-warmup)."""
+    out = fn()
+    jax.block_until_ready(out)      # warmup / compile
+    ts = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def truncated_row(q, db, gt, dim: int, runs: int, block_n: int = 16384):
+    t, (s, i) = timed_median(
+        lambda: truncated_search(q, db, dim=dim, k=1, block_n=block_n), runs)
+    return {"dim": dim, "acc": float(top1_accuracy(i, gt)) * 100,
+            "runtime_s": t}
+
+
+def progressive_row(q, db, gt, d_start: int, d_max: int, k0: int,
+                    runs: int, *, index=None, dims=None,
+                    block_n: int = 16384):
+    sched = make_schedule(d_start, d_max, k0)
+    kw = {}
+    if index is not None:
+        kw = {"sq_prefix": index["sq_prefix"], "index_dims": dims}
+    t, (s, i) = timed_median(
+        lambda: progressive_search(q, db, sched, block_n=block_n, **kw), runs)
+    return {"d_start": d_start, "d_max": d_max, "k0": k0,
+            "acc": float(top1_accuracy(i, gt)) * 100, "runtime_s": t}
+
+
+def print_csv(name: str, rows: List[Dict], cols: List[str]):
+    print(f"# {name}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    print()

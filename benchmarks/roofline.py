@@ -1,0 +1,131 @@
+"""Roofline report: aggregates results/dryrun/*.json into the per-cell
+three-term table (EXPERIMENTS.md §Roofline reads from this).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--outdir results/dryrun]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_arch, family_of
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_chips: int):
+    """6·N·D (dense) / 6·N_active·D (MoE) per device — the 'useful' FLOPs.
+    Train counts fwd+bwd (3x forward); inference counts 2·N·D.
+    """
+    fam = family_of(arch)
+    mod = get_arch(arch)
+    shape = mod.SHAPES[shape_name]
+    if fam != "lm":
+        return None
+    cfg = mod.CONFIG
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_chips
+    tokens = shape.global_batch          # one decode step
+    return 2.0 * n_active * tokens / n_chips
+
+
+def load_results(outdir: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def merge_exact(recs, costs_dir: str):
+    """Overlay exact per-layer-composed costs (results/costs/*.json) onto
+    dry-run records: scanned-program cost analysis counts loop bodies once,
+    the exact pass composes true trip counts (see launch/costs.py)."""
+    if not os.path.isdir(costs_dir):
+        return recs
+    exact = {}
+    for path in glob.glob(os.path.join(costs_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        exact[(r.get("arch"), r.get("shape"))] = r
+    out = []
+    for r in recs:
+        e = exact.get((r.get("arch"), r.get("shape")))
+        if e and r.get("status") == "ok":
+            r = dict(r)
+            r["flops"] = e["flops"]
+            r["hbm_bytes"] = e["hbm_bytes"]
+            r["collective_total_bytes"] = e["coll_total"]
+            r["collective_bytes"] = e["coll"]
+            r["roofline"] = e["roofline"]
+            r["exact"] = True
+        out.append(r)
+    return out
+
+
+def fmt_seconds(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def report(outdir: str = "results/dryrun", mesh: str = "single",
+           costs_dir: str = "results/costs"):
+    recs = [r for r in load_results(outdir)
+            if r.get("mesh") == mesh]
+    if mesh == "single":
+        recs = merge_exact(recs, costs_dir)
+    rows = []
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append({"cell": f"{r['arch']} x {r['shape']}",
+                         "status": "SKIP (" + r["reason"][:40] + "...)"})
+            continue
+        if r["status"] != "ok":
+            rows.append({"cell": f"{r['arch']} x {r['shape']}",
+                         "status": "ERROR"})
+            continue
+        rf = r["roofline"]
+        mf = model_flops_per_device(r["arch"], r["shape"], r["n_chips"])
+        ratio = (mf / r["flops"]) if (mf and r["flops"]) else None
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / bound if bound else 0.0
+        rows.append({
+            "cell": f"{r['arch']} x {r['shape']}",
+            "status": "ok" + ("*" if r.get("exact") else ""),
+            "compute": fmt_seconds(rf["compute_s"]),
+            "memory": fmt_seconds(rf["memory_s"]),
+            "collective": fmt_seconds(rf["collective_s"]),
+            "dominant": rf["dominant"].replace("_s", ""),
+            "roofline_frac": f"{frac:.3f}",
+            "useful_ratio": f"{ratio:.2f}" if ratio else "-",
+        })
+    cols = ["cell", "status", "compute", "memory", "collective",
+            "dominant", "roofline_frac", "useful_ratio"]
+    widths = {c: max(len(c), *(len(str(row.get(c, ""))) for row in rows))
+              for c in cols}
+    print(" | ".join(c.ljust(widths[c]) for c in cols))
+    print("-+-".join("-" * widths[c] for c in cols))
+    for row in rows:
+        print(" | ".join(str(row.get(c, "")).ljust(widths[c]) for c in cols))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    report(args.outdir, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--docs N] [--dim D]
+
+Order: Table II (truncated, gte) -> Table III (progressive vs truncated,
+gte) -> Table IV (truncated, openai) -> Table V (progressive, openai) ->
+Fig 3/4 scatter -> kernel micro-validation -> roofline summary (if the
+dry-run sweep has produced results/dryrun/*.json).
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import std_args
+
+
+def main() -> None:
+    args = std_args(__doc__).parse_args()
+    t0 = time.time()
+
+    from benchmarks import (fig3_scatter, table2_truncated_gte,
+                            table3_progressive_gte, table4_truncated_openai,
+                            table5_progressive_openai)
+
+    print(f"=== corpus: docs={args.docs} dim={args.dim} "
+          f"queries={args.queries} runs={args.runs} full={args.full} ===\n")
+
+    table2_truncated_gte.run(args)
+    table3_progressive_gte.run(args)
+    table4_truncated_openai.run(args)
+    table5_progressive_openai.run(args)
+    fig3_scatter.run(args)
+
+    # kernel validation micro-bench (interpret mode: correctness + call cost)
+    print("# kernel_validation (interpret mode, CPU)")
+    print("name,us_per_call,max_err_vs_ref")
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.kernels.distance_topk import l2_topk
+    from repro.kernels import ref as kref
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    db = jnp.asarray(rng.normal(size=(2048, 64)), jnp.float32)
+    t1 = time.perf_counter()
+    s, i = l2_topk(q, db, k=8, block_q=32, block_n=256, interpret=True)
+    jax.block_until_ready(s)
+    us = (time.perf_counter() - t1) * 1e6
+    rs, ri = kref.l2_topk_ref(q, db, 8)
+    err = float(jnp.abs(s - rs).max())
+    print(f"distance_topk,{us:.0f},{err:.2e}")
+    print()
+
+    # roofline summary from the dry-run artifacts, if present
+    outdir = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    if os.path.isdir(outdir) and os.listdir(outdir):
+        print("# roofline (single-pod 16x16, from dry-run artifacts)")
+        from benchmarks import roofline
+        roofline.report(outdir, "single")
+
+    print(f"\n=== benchmarks done in {time.time() - t0:.1f}s ===")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end RAG serving driver: batched requests through retrieve ->
+prompt-assemble -> LM decode (the paper's Fig. 1 pipeline as a service).
+
+    PYTHONPATH=src python examples/serve_rag.py [--requests 16] [--docs 2000]
+
+A small LM is instantiated (untrained weights are fine for a serving-path
+demonstration — the retrieval accuracy checks use the embedding geometry,
+which is exact), a document corpus is embedded with the pipeline's
+embedder, and a batch of queries (noisy copies of documents) is served.
+Reports retrieval hit-rate and decode throughput.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import lm as LM
+from repro.rag import RAGPipeline
+from repro.rag.pipeline import mean_pool_embedder
+
+CFG = LMConfig(name="rag-lm", n_layers=4, d_model=128, n_heads=8,
+               n_kv_heads=4, d_head=16, d_ff=256, vocab=2048,
+               param_dtype="float32", compute_dtype="float32", remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--docs", type=int, default=2000)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    print(f"init LM ({CFG.n_layers}L d={CFG.d_model}) + "
+          f"{args.docs}-doc corpus...")
+    params = LM.init_lm(jax.random.PRNGKey(0), CFG)
+    doc_tokens = jnp.asarray(
+        rng.integers(1, CFG.vocab, (args.docs, 24)), jnp.int32)
+    embed = mean_pool_embedder(params, CFG)
+    db = embed(doc_tokens)
+
+    pipe = RAGPipeline(params, CFG, db, doc_tokens, d_start=16, k0=32)
+    print("retrieval schedule:", pipe.sched.describe())
+
+    # queries: token-level corruptions of random documents
+    gt = rng.choice(args.docs, args.requests, replace=False)
+    queries = np.asarray(doc_tokens[gt])
+    flip = rng.random(queries.shape) < 0.15
+    queries = np.where(flip, rng.integers(1, CFG.vocab, queries.shape),
+                       queries)
+    queries = jnp.asarray(queries, jnp.int32)
+
+    t0 = time.perf_counter()
+    out = pipe.serve(queries, max_new_tokens=args.new_tokens)
+    jax.block_until_ready(out["generated"])
+    dt = time.perf_counter() - t0
+
+    hit = float((np.asarray(out["retrieved"][:, 0]) == gt).mean())
+    toks = args.requests * args.new_tokens
+    print(f"served {args.requests} requests in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. retrieval+prefill)")
+    print(f"retrieval hit-rate (top-1 == source doc): {hit*100:.1f}%")
+    print(f"sample generation (request 0): "
+          f"{np.asarray(out['generated'][0]).tolist()}")
+    assert hit > 0.8, "retrieval should recover corrupted queries' sources"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro: production-grade JAX framework implementing *Progressive Searching
+for Retrieval in RAG* (Jeong et al., ICMLA 2025 / CS.IR 2026).
+
+The paper's contribution — a multi-stage progressive ANN search that starts
+from truncated low-dimensional embeddings and incrementally refines the
+candidate set toward the full target dimensionality — is implemented as a
+first-class, shardable retrieval feature (repro.core), integrated into a
+RAG serving pipeline (repro.rag), a two-tower retrieval model
+(repro.models.recsys), and a multi-pod launcher (repro.launch).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,20 @@
+"""EGNN [arXiv:2102.09844; paper]: E(n)-equivariant GNN, 4 layers, hidden 64.
+
+Message passing is segment_sum over an edge list; the four assigned graph
+shapes exercise full-batch small (cora-like), sampled-minibatch (reddit-like,
+real fanout sampler), full-batch-large (ogbn-products), and batched small
+molecules.
+"""
+
+from repro.configs.base import EGNNConfig
+from repro.configs.shapes import GNN_SHAPES
+
+CONFIG = EGNNConfig(
+    name="egnn", n_layers=4, d_hidden=64, n_classes=47,
+)
+
+SMOKE_CONFIG = EGNNConfig(
+    name="egnn-smoke", n_layers=2, d_hidden=16, d_feat_in=8, n_classes=4,
+)
+
+SHAPES = GNN_SHAPES

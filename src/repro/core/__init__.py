@@ -1,0 +1,45 @@
+"""The paper's primary contribution: progressive multi-stage retrieval.
+
+Public API:
+  make_schedule / ProgressiveSchedule   — static stage schedules (§III.D)
+  truncated_search                      — the paper's baseline (§III.C)
+  progressive_search                    — TPU-native per-query variant
+  progressive_search_pooled             — paper-faithful pooled variant
+  sharded_progressive_search            — corpus-sharded multi-device search
+  build_index / index_for_schedule      — prefix-norm index build
+  fit_pca / pca_transform               — compared alternative (§II)
+  build_ivf / ivf_search                — beyond-paper TPU-native ANN
+  top1_accuracy / recall_at_k           — metrics (§III.E)
+"""
+
+from repro.core.schedule import (
+    ProgressiveSchedule,
+    Stage,
+    make_schedule,
+    validate_schedule,
+)
+from repro.core.index import build_index, index_for_schedule, prefix_norm_column, stage_dims
+from repro.core.truncated import (
+    cosine_scores,
+    l2_scores,
+    rescore_candidates,
+    truncated_search,
+)
+from repro.core.progressive import progressive_search, progressive_search_pooled
+from repro.core.distributed import sharded_progressive_search
+from repro.core.pca import (PCAState, fit_pca, fit_pca_power, fit_rotation,
+                            pca_transform, rotate)
+from repro.core.ivf import build_ivf, ivf_progressive_search, ivf_search, kmeans
+from repro.core.metrics import overlap_at_k, recall_at_k, top1_accuracy
+
+__all__ = [
+    "ProgressiveSchedule", "Stage", "make_schedule", "validate_schedule",
+    "build_index", "index_for_schedule", "prefix_norm_column", "stage_dims",
+    "l2_scores", "cosine_scores", "truncated_search", "rescore_candidates",
+    "progressive_search", "progressive_search_pooled",
+    "sharded_progressive_search",
+    "PCAState", "fit_pca", "fit_pca_power", "fit_rotation", "rotate",
+    "pca_transform",
+    "build_ivf", "ivf_search", "ivf_progressive_search", "kmeans",
+    "top1_accuracy", "recall_at_k", "overlap_at_k",
+]

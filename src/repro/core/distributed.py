@@ -1,0 +1,220 @@
+"""Distributed progressive search over a row-sharded corpus.
+
+At production scale the corpus does not fit one device: the (N, D) embedding
+matrix is sharded along the document axis across the ``data`` mesh axis (and,
+multi-pod, across ``('pod', 'data')``).  The key observation that makes
+progressive search embarrassingly parallel:
+
+    the global top-k of stage 0 is contained in the union of per-shard
+    top-k's, and every later stage only *shrinks* each candidate set —
+
+so each shard can run the **entire** progressive pipeline locally on its own
+slab and only the final (score, index) pair per query is combined across
+shards with a single tiny min-reduction.  Collective traffic is
+O(Q · final_k · shards) scalars — effectively free — versus O(N · D) if the
+corpus were gathered.  This is the design a 1000-node deployment wants: zero
+vector movement, one latency-bounded collective at the end.
+
+Two modes:
+
+* ``mode='local'``  (default) — per-shard full pipeline + final merge, as
+  above.  Recall >= single-device progressive search with the same schedule
+  (each shard keeps k0 candidates of *its* slab, a superset of the global
+  stage-0 top-k0 restricted to that slab).
+
+* ``mode='global'`` — after stage 0, per-shard candidates are all-gathered and
+  every shard refines the same global candidate set (paper's semantics across
+  the full DB).  Costs one all-gather of (Q, k0) indices+scores per stage but
+  gives bit-identical results to the single-device per-query variant.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import truncated as T
+from repro.core.progressive import progressive_search
+from repro.core.schedule import ProgressiveSchedule
+
+Array = jax.Array
+
+
+def _merge_final(scores: Array, cand: Array, axis_name: str, global_offset: Array):
+    """All-gather per-shard (Q, k) results and take the global top-k."""
+    cand_g = jnp.where(cand >= 0, cand + global_offset, -1)
+    all_s = jax.lax.all_gather(scores, axis_name, axis=1)   # (Q, S, k)
+    all_i = jax.lax.all_gather(cand_g, axis_name, axis=1)   # (Q, S, k)
+    q_, s_, k_ = all_s.shape
+    flat_s = all_s.reshape(q_, s_ * k_)
+    flat_i = all_i.reshape(q_, s_ * k_)
+    top, pos = jax.lax.top_k(-flat_s, k_)
+    return -top, jnp.take_along_axis(flat_i, pos, axis=1)
+
+
+def build_sharded_search(
+    mesh: jax.sharding.Mesh,
+    sched: ProgressiveSchedule,
+    n: int,
+    *,
+    db_axes: Tuple[str, ...] = ("data",),
+    has_prefix: bool = False,
+    index_dims: Optional[tuple] = None,
+    block_n: int = 16384,
+    metric: str = "l2",
+    mode: str = "local",
+):
+    """Build the shard_map'd search callable ``fn(q, db, sq_prefix)`` for a
+    corpus of ``n`` rows sharded over ``db_axes``.
+
+    Exposed separately from `sharded_progressive_search` so the multi-pod
+    dry-run can ``jit(fn).lower(...)`` it directly (the retrieval_cand cell).
+    """
+    from jax.experimental.shard_map import shard_map
+    n_shards = 1
+    for a in db_axes:
+        n_shards *= mesh.shape[a]
+    if n % n_shards:
+        raise ValueError(f"corpus rows {n} not divisible by {n_shards} shards")
+    rows_local = n // n_shards
+    axis_name = db_axes if len(db_axes) > 1 else db_axes[0]
+
+    def local_fn(q_l, db_l, sqp_l):
+        if not has_prefix:
+            sqp_l = None
+        shard_id = jax.lax.axis_index(axis_name)
+        offset = (shard_id * rows_local).astype(jnp.int32)
+        if mode == "local":
+            s, c = progressive_search(
+                q_l, db_l, sched,
+                sq_prefix=sqp_l, index_dims=index_dims,
+                block_n=min(block_n, rows_local), metric=metric,
+            )
+            return _merge_final(s, c, axis_name, offset)
+        # mode == 'global': stage-0 local scan, gather candidates, then each
+        # shard rescored only its own rows; others masked +inf, merged per stage.
+        s0 = sched.stages[0]
+        dims = index_dims
+        sqp0 = None
+        if sqp_l is not None and dims is not None and s0.dim in dims:
+            sqp0 = sqp_l[:, tuple(dims).index(s0.dim)]
+        s, c = T.truncated_search(
+            q_l, db_l, dim=s0.dim, k=s0.k, db_sq_at_dim=sqp0,
+            block_n=min(block_n, rows_local), metric=metric,
+        )
+        s, c = _merge_final(s, c, axis_name, offset)      # global (Q, k0)
+        for stage in sched.stages[1:]:
+            local_c = jnp.where(
+                (c >= offset) & (c < offset + rows_local), c - offset, -1
+            )
+            sqp_s = None
+            if sqp_l is not None and dims is not None and stage.dim in dims:
+                sqp_s = sqp_l[:, tuple(dims).index(stage.dim)]
+            s_l, c_l = T.rescore_candidates(
+                q_l, db_l, local_c, dim=stage.dim, k=min(stage.k, local_c.shape[1]),
+                db_sq_at_dim=sqp_s, metric=metric,
+            )
+            s, c = _merge_final(s_l, c_l, axis_name, offset)
+            s, c = s[:, : stage.k], c[:, : stage.k]
+        return s, c
+
+    db_spec = P(axis_name)
+    sq_spec = P(axis_name) if has_prefix else P()
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(), db_spec, sq_spec),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+
+def build_sharded_search_staged(
+    mesh: jax.sharding.Mesh,
+    sched: ProgressiveSchedule,
+    n: int,
+    *,
+    db_axes: Tuple[str, ...] = ("data",),
+    dtype_wire=jnp.bfloat16,
+):
+    """Corpus-sharded search over a *staged* index layout.
+
+    Beyond-paper serving optimization (§Perf iteration log): the stage-0 scan
+    touches every row but only the first ``Ds`` columns.  With a row-major
+    (N, D) corpus the hardware still streams full rows (HBM reads are
+    row-granular), so the scan pays N·D bytes for N·Ds of useful data.
+    Storing the stage-0 prefix as its own contiguous (N, Ds) block — in bf16,
+    scores accumulate in fp32 — cuts stage-0 HBM traffic by (D/Ds)·2x;
+    later stages gather full-precision rows from the full-dim block.
+
+    Returns ``fn(q, db0, db, sq_prefix)`` for jit/lowering:
+      db0: (N, Ds) ``dtype_wire`` stage-0 block, row-sharded like db.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n_shards = 1
+    for a in db_axes:
+        n_shards *= mesh.shape[a]
+    if n % n_shards:
+        raise ValueError(f"corpus rows {n} not divisible by {n_shards}")
+    rows_local = n // n_shards
+    axis_name = db_axes if len(db_axes) > 1 else db_axes[0]
+    s0 = sched.stages[0]
+
+    def local_fn(q_l, db0_l, db_l, sqp_l):
+        shard_id = jax.lax.axis_index(axis_name)
+        offset = (shard_id * rows_local).astype(jnp.int32)
+        s, c = T.truncated_search(
+            q_l.astype(dtype_wire), db0_l, dim=s0.dim, k=s0.k,
+            db_sq_at_dim=sqp_l[:, 0], block_n=rows_local)
+        for stage in sched.stages[1:]:
+            s, c = T.rescore_candidates(q_l, db_l, c, dim=stage.dim,
+                                        k=stage.k)
+        return _merge_final(s, c, axis_name, offset)
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+
+def sharded_progressive_search(
+    mesh: jax.sharding.Mesh,
+    q: Array,
+    db: Array,
+    sched: ProgressiveSchedule,
+    *,
+    db_axes: Tuple[str, ...] = ("data",),
+    sq_prefix: Optional[Array] = None,
+    index_dims: Optional[tuple] = None,
+    block_n: int = 16384,
+    metric: str = "l2",
+    mode: str = "local",
+) -> Tuple[Array, Array]:
+    """Run progressive search with the corpus row-sharded over ``db_axes``.
+
+    Args:
+      mesh: device mesh containing ``db_axes``.
+      q:    (Q, D) queries — replicated to every shard.
+      db:   (N, D) corpus — sharded along axis 0 over ``db_axes``;
+            N must divide evenly by the product of those axis sizes.
+      sched, sq_prefix, index_dims, block_n, metric: as `progressive_search`.
+      mode: 'local' (shard-local pipeline + final merge) or 'global'
+            (cross-shard candidate merging after stage 0).
+
+    Returns:
+      ((Q, final_k) scores, (Q, final_k) int32 global indices), replicated.
+    """
+    fn = build_sharded_search(
+        mesh, sched, db.shape[0], db_axes=db_axes,
+        has_prefix=sq_prefix is not None, index_dims=index_dims,
+        block_n=block_n, metric=metric, mode=mode)
+    sqp = (sq_prefix if sq_prefix is not None
+           else jnp.zeros((db.shape[0], 0), jnp.float32))
+    return jax.jit(fn)(q, db, sqp)

@@ -1,0 +1,86 @@
+"""Vector index: the database-side state for truncated / progressive search.
+
+An index holds the document embedding matrix plus precomputed *prefix squared
+norms*: ``sq_prefix[n, j] = sum_{i < dims[j]} db[n, i]^2`` for every stage
+dimensionality a schedule can touch.  Precomputing these once at build time
+moves O(N·D) work out of every query batch — the same role the ``||x||^2``
+cache plays in classic matmul-form L2 search.
+
+The index is a pytree (dict of arrays), so it shards transparently under
+pjit/shard_map: sharding the leading (document) axis across the ``data`` mesh
+axis gives each device a contiguous slab of the corpus.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import ProgressiveSchedule
+
+Array = jax.Array
+
+
+def stage_dims(sched: ProgressiveSchedule) -> tuple:
+    return tuple(s.dim for s in sched.stages)
+
+
+def build_index(
+    db: Array,
+    dims: Sequence[int],
+    *,
+    dtype=jnp.float32,
+) -> Dict[str, Array]:
+    """Build a search index over ``db`` with prefix norms at each dim in ``dims``.
+
+    Args:
+      db:   (N, D) document embeddings.
+      dims: dimensionalities whose prefix squared norms to precompute.  Must be
+            sorted ascending; each must be <= D.
+
+    Returns:
+      dict with keys:
+        'db'        : (N, D) embeddings (cast to ``dtype``)
+        'sq_prefix' : (N, len(dims)) prefix squared norms, float32
+        'dims'      : (len(dims),) int32 — static metadata, kept as an array so
+                      the pytree stays jit-friendly.
+    """
+    db = jnp.asarray(db, dtype)
+    n, d = db.shape
+    dims = tuple(int(x) for x in dims)
+    if list(dims) != sorted(dims):
+        raise ValueError(f"dims must be ascending, got {dims}")
+    if dims and dims[-1] > d:
+        raise ValueError(f"max dim {dims[-1]} exceeds embedding dim {d}")
+
+    # One cumulative-sum pass gives every prefix norm at once:
+    # cumsq[:, j] = sum_{i<=j} db[:, i]^2 ; prefix norm at dim k = cumsq[:, k-1].
+    cumsq = jnp.cumsum(db.astype(jnp.float32) ** 2, axis=1)
+    cols = jnp.asarray([k - 1 for k in dims], jnp.int32)
+    sq_prefix = cumsq[:, cols] if dims else jnp.zeros((n, 0), jnp.float32)
+    return {
+        "db": db,
+        "sq_prefix": sq_prefix,
+        "dims": jnp.asarray(dims, jnp.int32),
+    }
+
+
+def index_for_schedule(db: Array, sched: ProgressiveSchedule, **kw) -> Dict[str, Array]:
+    return build_index(db, stage_dims(sched), **kw)
+
+
+def prefix_norm_column(index: Dict[str, Array], dim: int, dims: Sequence[int]) -> Array:
+    """Return the (N,) prefix squared-norm column for ``dim``.
+
+    ``dims`` is the static tuple the index was built with (the array version in
+    the index is device data; static lookup must use the python tuple so the
+    column index is a compile-time constant).
+    """
+    dims = tuple(int(x) for x in dims)
+    try:
+        j = dims.index(int(dim))
+    except ValueError:
+        raise KeyError(f"dim {dim} not precomputed; index has {dims}") from None
+    return index["sq_prefix"][:, j]

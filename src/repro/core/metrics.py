@@ -1,0 +1,33 @@
+"""Retrieval quality metrics (paper §III.E)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def top1_accuracy(retrieved: Array, ground_truth: Array) -> Array:
+    """Fraction of queries whose top-1 retrieved index equals the ground truth.
+
+    Args:
+      retrieved:    (Q,) or (Q, k) retrieved indices (column 0 = best).
+      ground_truth: (Q,) true document index per query.
+    """
+    if retrieved.ndim == 2:
+        retrieved = retrieved[:, 0]
+    return jnp.mean((retrieved == ground_truth).astype(jnp.float32))
+
+
+def recall_at_k(retrieved: Array, ground_truth: Array, k: int) -> Array:
+    """Fraction of queries whose ground truth appears in the top-k retrieved."""
+    hits = (retrieved[:, :k] == ground_truth[:, None]).any(axis=1)
+    return jnp.mean(hits.astype(jnp.float32))
+
+
+def overlap_at_k(a: Array, b: Array, k: int) -> Array:
+    """Mean per-query overlap |a_k ∩ b_k| / k between two retrieval results."""
+    eq = a[:, :k, None] == b[:, None, :k]
+    inter = eq.any(axis=2).sum(axis=1)
+    return jnp.mean(inter.astype(jnp.float32)) / k

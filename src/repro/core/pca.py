@@ -1,0 +1,101 @@
+"""PCA dimensionality reduction — the paper's compared alternative (§II, §III.C).
+
+The paper evaluated PCA against plain truncation and found truncation slightly
+better for retrieval accuracy at much lower cost; we implement PCA so the
+comparison benchmark (`benchmarks/table2`) can reproduce that finding.
+
+Fit is exact via eigendecomposition of the covariance when D is modest, or via
+(blocked) subspace power iteration for large D — both pure JAX, jit-able, and
+deterministic given a PRNG key.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class PCAState(NamedTuple):
+    mean: Array          # (D,)
+    components: Array    # (D, K)  orthonormal columns, sorted by variance desc
+    explained_var: Array # (K,)
+
+
+@functools.partial(jax.jit, static_argnames=("n_components",))
+def fit_pca(x: Array, n_components: int) -> PCAState:
+    """Exact PCA via eigh on the (D, D) covariance.  O(N·D² + D³)."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+    cov = (xc.T @ xc) / (x.shape[0] - 1)
+    evals, evecs = jnp.linalg.eigh(cov)           # ascending
+    order = jnp.argsort(-evals)[:n_components]
+    return PCAState(
+        mean=mean,
+        components=evecs[:, order],
+        explained_var=evals[order],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_components", "n_iter"))
+def fit_pca_power(
+    x: Array, n_components: int, *, n_iter: int = 8, key: Array | None = None
+) -> PCAState:
+    """Subspace (block power) iteration PCA — avoids the D×D eigh for large D.
+
+    Cost O(n_iter · N · D · K); accurate for the leading components, which is
+    all retrieval truncation needs.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+    d = x.shape[1]
+    v = jax.random.normal(key, (d, n_components), jnp.float32)
+    v, _ = jnp.linalg.qr(v)
+
+    def body(_, v):
+        w = xc.T @ (xc @ v)
+        v, _ = jnp.linalg.qr(w)
+        return v
+
+    v = jax.lax.fori_loop(0, n_iter, body, v)
+    # Rayleigh quotients as explained variance estimates, then sort.
+    proj = xc @ v
+    var = jnp.sum(proj**2, axis=0) / (x.shape[0] - 1)
+    order = jnp.argsort(-var)
+    return PCAState(mean=mean, components=v[:, order], explained_var=var[order])
+
+
+@jax.jit
+def pca_transform(state: PCAState, x: Array) -> Array:
+    """Project ``x`` onto the fitted components: (N, D) -> (N, K)."""
+    return (x.astype(jnp.float32) - state.mean) @ state.components
+
+
+def fit_rotation(db: Array) -> PCAState:
+    """Full-rank PCA rotation — the beyond-paper enabler for progressive
+    search over *arbitrary* learned embeddings.
+
+    The paper's truncation works because trained text embeddings concentrate
+    signal in leading dimensions; embeddings trained without a Matryoshka
+    objective (e.g. a fresh two-tower model) spread variance uniformly, and
+    truncation-based stages lose recall.  A full-rank orthogonal PCA
+    rotation preserves all pairwise L2 distances exactly (so full-dim
+    results are unchanged) while reordering variance into the leading dims —
+    after which the paper's progressive schedule applies to any embedding.
+    Rotate the corpus once at index-build time and each query at search time
+    (one (D, D) matmul).
+    """
+    return fit_pca(db, db.shape[1])
+
+
+def rotate(state: PCAState, x: Array) -> Array:
+    """Apply the distance-preserving rotation (centering included)."""
+    return pca_transform(state, x)

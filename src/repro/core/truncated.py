@@ -1,0 +1,200 @@
+"""Truncated Retrieval — the paper's baseline (§III.C).
+
+Brute-force exact k-NN over the full database at a truncated dimensionality.
+Distances are computed in matmul form so the MXU does the heavy lifting:
+
+    ||q - x||^2 = ||q||^2 - 2 q·x + ||x||^2
+
+``||q||^2`` is constant per query row, so for *ranking* we score
+``s = ||x||^2 - 2 q·x`` and only add ``||q||^2`` when the caller asks for true
+distances.  The database scan is tiled with ``lax.map`` over document blocks so
+the (Q, N) score matrix never materializes at once — the same streaming
+structure the Pallas kernel (`repro.kernels.distance_topk`) implements on-chip.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def l2_scores(q: Array, db: Array, db_sq: Optional[Array] = None) -> Array:
+    """Rank-equivalent squared-L2 scores: ``||x||^2 - 2 q·x`` (no ||q||^2 term).
+
+    Args:
+      q:     (Q, d) queries.
+      db:    (N, d) documents.
+      db_sq: optional precomputed (N,) squared norms of db rows.
+
+    Returns:
+      (Q, N) float32 scores; argmin over axis 1 == exact 1-NN by L2.
+    """
+    if db_sq is None:
+        db_sq = jnp.sum(db.astype(jnp.float32) ** 2, axis=-1)
+    # Accumulate the inner product in f32 regardless of storage dtype.
+    ip = jax.lax.dot_general(
+        q, db,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return db_sq[None, :] - 2.0 * ip
+
+
+def cosine_scores(q: Array, db: Array, db_sq: Optional[Array] = None) -> Array:
+    """Negated cosine similarity (so lower is better, matching L2 convention)."""
+    if db_sq is None:
+        db_sq = jnp.sum(db.astype(jnp.float32) ** 2, axis=-1)
+    q_n = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    ip = jax.lax.dot_general(
+        q_n, db,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return -(ip / jnp.maximum(jnp.sqrt(db_sq)[None, :], 1e-12))
+
+
+_METRICS = {"l2": l2_scores, "cosine": cosine_scores}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dim", "k", "block_n", "metric")
+)
+def truncated_search(
+    q: Array,
+    db: Array,
+    *,
+    dim: int,
+    k: int = 1,
+    db_sq_at_dim: Optional[Array] = None,
+    block_n: int = 65536,
+    metric: str = "l2",
+) -> Tuple[Array, Array]:
+    """Exact k-NN over ``db`` truncated to the first ``dim`` dimensions.
+
+    The scan over documents is blocked: each step scores a (Q, block_n) tile
+    and folds it into a running per-query top-k, so peak memory is
+    O(Q·(k + block_n)) instead of O(Q·N).
+
+    Args:
+      q:            (Q, D) queries (D >= dim; only [:, :dim] is used).
+      db:           (N, D) documents.
+      dim:          truncation dimensionality (static).
+      k:            neighbours to return (static).
+      db_sq_at_dim: optional (N,) precomputed prefix squared norms at ``dim``
+                    (ignored for cosine).
+      block_n:      document tile size (static).
+      metric:       'l2' or 'cosine'.
+
+    Returns:
+      (scores, indices): ((Q, k) float32, (Q, k) int32), ascending by score.
+      L2 scores omit the constant ``||q||^2`` term (rank-equivalent).
+    """
+    if metric not in _METRICS:
+        raise ValueError(f"unknown metric {metric!r}")
+    n, _ = db.shape
+    qd = q[:, :dim]
+    dbd = db[:, :dim]
+
+    n_blocks = max(-(-n // block_n), 1)
+    pad = n_blocks * block_n - n
+
+    if pad:
+        dbd = jnp.pad(dbd, ((0, pad), (0, 0)))
+        if db_sq_at_dim is not None:
+            # +inf norms keep padded rows out of every top-k.
+            db_sq_at_dim = jnp.pad(
+                db_sq_at_dim, (0, pad), constant_values=jnp.inf
+            )
+
+    score_fn = _METRICS[metric]
+
+    def scan_block(carry, blk):
+        best_s, best_i = carry
+        db_blk, sq_blk, base = blk
+        s = score_fn(qd, db_blk, sq_blk)  # (Q, block_n)
+        if metric == "cosine" and pad:
+            # padded rows have zero norm -> score 0; push them to +inf
+            valid = (base + jnp.arange(block_n)) < n
+            s = jnp.where(valid[None, :], s, jnp.inf)
+        idx = base + jnp.arange(block_n, dtype=jnp.int32)[None, :]
+        cat_s = jnp.concatenate([best_s, s], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(idx, s.shape)], axis=1)
+        top_s, pos = jax.lax.top_k(-cat_s, k)
+        new_s = -top_s
+        new_i = jnp.take_along_axis(cat_i, pos, axis=1)
+        return (new_s, new_i), None
+
+    db_blocks = dbd.reshape(n_blocks, block_n, dim)
+    if db_sq_at_dim is None and metric == "l2":
+        sq_blocks = jnp.sum(
+            db_blocks.astype(jnp.float32) ** 2, axis=-1
+        )
+        if pad:
+            row = jnp.arange(n_blocks * block_n).reshape(n_blocks, block_n)
+            sq_blocks = jnp.where(row < n, sq_blocks, jnp.inf)
+    elif metric == "l2":
+        sq_blocks = db_sq_at_dim.reshape(n_blocks, block_n)
+    else:
+        sq_blocks = jnp.sum(db_blocks.astype(jnp.float32) ** 2, axis=-1)
+
+    bases = (jnp.arange(n_blocks, dtype=jnp.int32) * block_n)
+    init = (
+        jnp.full((q.shape[0], k), jnp.inf, jnp.float32),
+        jnp.full((q.shape[0], k), -1, jnp.int32),
+    )
+    (best_s, best_i), _ = jax.lax.scan(
+        scan_block, init, (db_blocks, sq_blocks, bases)
+    )
+    return best_s, best_i
+
+
+def rescore_candidates(
+    q: Array,
+    db: Array,
+    cand: Array,
+    *,
+    dim: int,
+    k: int,
+    db_sq_at_dim: Optional[Array] = None,
+    metric: str = "l2",
+) -> Tuple[Array, Array]:
+    """Exact k-NN of each query against *its own* candidate rows at ``dim`` dims.
+
+    This is the refinement step of progressive search: gather each query's
+    surviving candidate vectors and rescore them at a higher dimensionality.
+
+    Args:
+      q:    (Q, D) queries.
+      db:   (N, D) documents.
+      cand: (Q, C) int32 candidate indices per query (may contain -1 padding;
+            padded entries are scored +inf).
+      dim:  scoring dimensionality (static).
+      k:    candidates kept (static, k <= C).
+
+    Returns:
+      (scores, indices): ((Q, k) float32, (Q, k) int32 — *global* db indices).
+    """
+    qd = q[:, :dim]
+    safe = jnp.maximum(cand, 0)
+    gathered = db[safe, :dim]                       # (Q, C, dim)
+    ip = jnp.einsum(
+        "qd,qcd->qc", qd, gathered, preferred_element_type=jnp.float32
+    )
+    if metric == "l2":
+        if db_sq_at_dim is not None:
+            sq = db_sq_at_dim[safe]
+        else:
+            sq = jnp.sum(gathered.astype(jnp.float32) ** 2, axis=-1)
+        s = sq - 2.0 * ip
+    else:
+        qn = jnp.maximum(jnp.linalg.norm(qd, axis=-1, keepdims=True), 1e-12)
+        gn = jnp.maximum(jnp.linalg.norm(gathered, axis=-1), 1e-12)
+        s = -(ip / (qn * gn))
+    s = jnp.where(cand >= 0, s, jnp.inf)
+    top_s, pos = jax.lax.top_k(-s, k)
+    return -top_s, jnp.take_along_axis(cand, pos, axis=1)

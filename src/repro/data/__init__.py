@@ -1,0 +1,7 @@
+from repro.data.synth import (
+    lm_batch_stream,
+    recsys_batch_stream,
+    synthetic_markov_lm,
+)
+
+__all__ = ["lm_batch_stream", "recsys_batch_stream", "synthetic_markov_lm"]

@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the compute hot-spots of progressive retrieval
+and the architecture zoo, each with a pure-jnp oracle in `ref.py`.
+
+  distance_topk   — fused L2 scores + streaming top-k (stage-0 full-DB scan)
+  gather_rescore  — DMA-gather candidates + high-dim rescore (late stages)
+  embedding_bag   — fused gather + bag-reduce (recsys tables)
+  flash_attention — online-softmax attention (LM prefill/decode)
+  segment_sum     — sorted-CSR scatter as per-block MXU matmuls (GNN)
+
+Use the `ops` wrappers in model code; they pick interpret mode on CPU and
+fall back to the references when REPRO_NO_PALLAS=1 (dry-run lowering).
+"""
+
+from repro.kernels.ops import (
+    embedding_bag_op,
+    flash_attention_op,
+    gather_rescore_op,
+    l2_topk_op,
+    use_pallas,
+)
+
+__all__ = [
+    "l2_topk_op", "gather_rescore_op", "embedding_bag_op",
+    "flash_attention_op", "use_pallas",
+]

@@ -1,0 +1,201 @@
+"""Fused L2-distance + streaming top-k Pallas TPU kernel.
+
+This is the stage-0 hot loop of progressive retrieval: score every database
+row against a query block at a truncated dimensionality and keep the best k
+per query.  The fusion is the point — for Q=2470 queries and N=1M docs the
+(Q, N) score matrix is ~10 GB; computing it through HBM makes the scan
+memory-bound.  The kernel keeps the running top-k in VMEM scratch, so HBM
+traffic collapses to *one streaming read of the database* (N·d bytes) plus a
+(Q, k) result — which pushes the scan from the memory roofline onto the
+compute (MXU) roofline.
+
+Tiling (grid = (Q/bq, N/bn); the document axis is the inner, sequential,
+dimension so the top-k carry in scratch is valid — TPU grids execute in
+row-major order and revisit scratch in place):
+
+              d (stage dim)                 k
+    q_ref  : (bq, d)    VMEM     out_s  : (bq, k)  VMEM
+    db_ref : (bn, d)    VMEM     out_i  : (bq, k)  VMEM
+    sq_ref : (1, bn)    VMEM     scratch: best_s/best_i (bq, k)
+
+Per tile: ``scores = sq - 2 * q @ db^T`` on the MXU (f32 accumulate), then the
+tile's candidates are folded into the carry.  Two merge strategies:
+
+* ``merge='sort'``   — concat (k + bn) columns, one ``lax.top_k``.  Fewer,
+  larger ops; relies on Mosaic's sort lowering.
+* ``merge='select'`` — k iterations of (argmin, mask).  Only min/where/iota —
+  lowers everywhere, and is the guaranteed path on older toolchains.
+
+Both are validated against `repro.kernels.ref.l2_topk_ref` in interpret mode
+(this container is CPU-only; real-TPU runs select the same code path with
+``interpret=False``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_NEG_INF = float("-inf")
+
+
+def _merge_topk_sort(cat_s: Array, cat_i: Array, k: int) -> Tuple[Array, Array]:
+    """Top-k smallest via one descending top_k on negated scores."""
+    neg, pos = jax.lax.top_k(-cat_s, k)
+    return -neg, jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+def _merge_topk_select(cat_s: Array, cat_i: Array, k: int) -> Tuple[Array, Array]:
+    """Top-k smallest via k rounds of (min, argmin-mask).
+
+    O(k · width) VPU work, but only elementwise ops + reductions, which lower
+    on every Mosaic version.  Ties broken by lowest column index.
+    """
+    bq, width = cat_s.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, width), 1)
+
+    def body(j, carry):
+        s, out_s, out_i = carry
+        m = jnp.min(s, axis=1, keepdims=True)                    # (bq, 1)
+        is_min = s == m
+        # lowest column among the minima
+        first = jnp.min(jnp.where(is_min, cols, width), axis=1, keepdims=True)
+        hit = cols == first
+        out_s = out_s.at[:, j].set(m[:, 0])
+        out_i = out_i.at[:, j].set(
+            jnp.sum(jnp.where(hit, cat_i, 0), axis=1)
+        )
+        s = jnp.where(hit, jnp.inf, s)
+        return s, out_s, out_i
+
+    out_s = jnp.zeros((bq, k), cat_s.dtype)
+    out_i = jnp.zeros((bq, k), cat_i.dtype)
+    _, out_s, out_i = jax.lax.fori_loop(0, k, body, (cat_s, out_s, out_i))
+    return out_s, out_i
+
+
+def _kernel(
+    q_ref, db_ref, sq_ref, out_s_ref, out_i_ref, best_s, best_i,
+    *, k: int, bn: int, merge: str, n_valid: int,
+):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_s[...] = jnp.full_like(best_s, jnp.inf)
+        best_i[...] = jnp.full_like(best_i, -1)
+
+    q = q_ref[...]
+    db = db_ref[...]
+    sq = sq_ref[...]  # (1, bn)
+
+    ip = jax.lax.dot_general(
+        q, db, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    scores = sq - 2.0 * ip                                     # (bq, bn)
+    base = j * bn
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + base
+    # Mask rows past the true db length (padding tile).
+    scores = jnp.where(col < n_valid, scores, jnp.inf)
+
+    cat_s = jnp.concatenate([best_s[...], scores], axis=1)
+    cat_i = jnp.concatenate([best_i[...], col], axis=1)
+    if merge == "sort":
+        new_s, new_i = _merge_topk_sort(cat_s, cat_i, k)
+    else:
+        new_s, new_i = _merge_topk_select(cat_s, cat_i, k)
+    best_s[...] = new_s
+    best_i[...] = new_i
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        out_s_ref[...] = best_s[...]
+        out_i_ref[...] = best_i[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_q", "block_n", "merge", "interpret"),
+)
+def l2_topk(
+    q: Array,
+    db: Array,
+    *,
+    k: int,
+    db_sq: Optional[Array] = None,
+    block_q: int = 256,
+    block_n: int = 512,
+    merge: str = "sort",
+    interpret: bool = False,
+) -> Tuple[Array, Array]:
+    """Fused distance+top-k scan of ``db`` for each row of ``q``.
+
+    Args:
+      q:      (Q, d) queries.
+      db:     (N, d) database (same trailing dim; truncate before calling).
+      k:      neighbours kept (static; k <= block_n).
+      db_sq:  optional (N,) precomputed squared norms.
+      block_q/block_n: VMEM tile sizes.  ``d * (block_q + block_n) * 4`` bytes
+        plus the (block_q, block_n) score tile must fit VMEM (~16 MB/core).
+      merge:  'sort' | 'select' (see module docstring).
+      interpret: run the kernel in interpret mode (CPU validation).
+
+    Returns:
+      ((Q, k) float32 rank-equivalent scores ascending, (Q, k) int32 indices).
+    """
+    nq, d = q.shape
+    n, d2 = db.shape
+    assert d == d2, (d, d2)
+    if k > block_n:
+        raise ValueError(f"k={k} must be <= block_n={block_n}")
+    if db_sq is None:
+        db_sq = jnp.sum(db.astype(jnp.float32) ** 2, axis=-1)
+
+    # Pad every axis to tile multiples.
+    pq = -nq % block_q
+    pn = -n % block_n
+    if pq:
+        q = jnp.pad(q, ((0, pq), (0, 0)))
+    if pn:
+        db = jnp.pad(db, ((0, pn), (0, 0)))
+        db_sq = jnp.pad(db_sq, (0, pn), constant_values=jnp.inf)
+    sq2d = db_sq.reshape(1, -1)
+
+    grid = (q.shape[0] // block_q, db.shape[0] // block_n)
+    kernel = functools.partial(
+        _kernel, k=k, bn=block_n, merge=merge, n_valid=n
+    )
+    out_s, out_i = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((q.shape[0], k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.MemorySpace.VMEM((block_q, k), jnp.float32),
+            pltpu.MemorySpace.VMEM((block_q, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, db, sq2d)
+    return out_s[:nq], out_i[:nq]

@@ -1,0 +1,103 @@
+"""Backend-aware entry points for the Pallas kernels.
+
+Each ``*_op`` dispatches to the Pallas kernel with ``interpret=True`` on CPU
+(validation / this container) and ``interpret=False`` on TPU (production).
+Model code should call these, never the kernels directly, so the same model
+definition lowers everywhere.
+
+``use_pallas(False)`` (or REPRO_NO_PALLAS=1) falls back to the pure-jnp
+reference implementations — this is what the multi-pod dry-run uses, since
+the roofline terms must reflect the XLA program a real run would execute,
+not interpret-mode scaffolding.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.distance_topk import l2_topk as _l2_topk
+from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.gather_rescore import gather_rescore as _gather_rescore
+
+Array = jax.Array
+
+_FORCE_REF = os.environ.get("REPRO_NO_PALLAS", "0") == "1"
+_ENABLED = not _FORCE_REF
+
+
+def use_pallas(enabled: bool) -> None:
+    """Globally enable/disable Pallas kernels (ref fallback when disabled)."""
+    global _ENABLED
+    _ENABLED = enabled and not _FORCE_REF
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def l2_topk_op(
+    q: Array, db: Array, *, k: int, db_sq: Optional[Array] = None, **kw
+) -> Tuple[Array, Array]:
+    if not _ENABLED:
+        return _ref.l2_topk_ref(q, db, k, db_sq)
+    return _l2_topk(q, db, k=k, db_sq=db_sq, interpret=_interpret(), **kw)
+
+
+def gather_rescore_op(q: Array, db: Array, cand: Array, **kw) -> Array:
+    if not _ENABLED:
+        return _ref.gather_rescore_ref(q, db, cand)
+    return _gather_rescore(q, db, cand, interpret=_interpret(), **kw)
+
+
+def embedding_bag_op(table: Array, indices: Array, *, mode: str = "sum", **kw) -> Array:
+    if not _ENABLED or mode == "max":
+        return _ref.embedding_bag_ref(table, indices, mode=mode)
+    return _embedding_bag(table, indices, mode=mode, interpret=_interpret(), **kw)
+
+
+def flash_attention_op(
+    q: Array, k: Array, v: Array, *, causal: bool = False,
+    window: Optional[int] = None, **kw
+) -> Array:
+    if not _ENABLED:
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_attention(
+        q, k, v, causal=causal, window=window, interpret=_interpret(), **kw
+    )
+
+
+def segment_sum_op(data: Array, seg_ids: Array, *, num_segments: int,
+                   block_n: int = 128, **kw) -> Array:
+    """Segment-sum with the sorted-CSR Pallas kernel (GNN scatter hot path).
+
+    Accepts *unsorted* (data, seg_ids) with -1 padding: sorts by segment,
+    builds the CSR indptr, pads, and calls `sorted_segment_sum`.
+    """
+    if not _ENABLED:
+        return _ref.segment_sum_ref(
+            jnp.where((seg_ids >= 0)[:, None], data, 0),
+            jnp.maximum(seg_ids, 0), num_segments)
+    from repro.kernels.segment_sum import sorted_segment_sum
+    e, d = data.shape
+    seg = jnp.where(seg_ids >= 0, seg_ids, num_segments).astype(jnp.int32)
+    order = jnp.argsort(seg)
+    data_s = data[order]
+    seg_s = seg[order]
+    n_pad = -num_segments % block_n
+    n_total = num_segments + n_pad
+    indptr = jnp.searchsorted(seg_s, jnp.arange(n_total + 1)).astype(jnp.int32)
+    # tail padding so chunked DMA may read past the last valid edge
+    ec = kw.get("edge_chunk", 256)
+    data_s = jnp.pad(data_s, ((0, ec), (0, 0)))
+    seg_s = jnp.pad(seg_s, (0, ec), constant_values=n_total)
+    out = sorted_segment_sum(
+        data_s, seg_s, indptr, num_segments=n_total, block_n=block_n,
+        interpret=_interpret(), **kw)
+    return out[:num_segments]

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification the kernel must match
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+No tiling, no memory-space tricks — just the math.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def l2_topk_ref(
+    q: Array, db: Array, k: int, db_sq: Optional[Array] = None
+) -> Tuple[Array, Array]:
+    """Exact top-k by rank-equivalent L2 score ``||x||^2 - 2 q.x``.
+
+    Returns ((Q, k) scores ascending, (Q, k) int32 indices).
+    """
+    if db_sq is None:
+        db_sq = jnp.sum(db.astype(jnp.float32) ** 2, axis=-1)
+    ip = jax.lax.dot_general(
+        q, db, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = db_sq[None, :] - 2.0 * ip
+    neg, idx = jax.lax.top_k(-s, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def gather_rescore_ref(
+    q: Array, db: Array, cand: Array
+) -> Array:
+    """Distances of each query to its own candidate rows at full dims.
+
+    Args:
+      q:    (Q, D); db: (N, D); cand: (Q, C) int32, -1 = padding.
+    Returns:
+      (Q, C) float32 scores, +inf at padded slots.
+    """
+    safe = jnp.maximum(cand, 0)
+    rows = db[safe]  # (Q, C, D)
+    sq = jnp.sum(rows.astype(jnp.float32) ** 2, axis=-1)
+    ip = jnp.einsum("qd,qcd->qc", q, rows, preferred_element_type=jnp.float32)
+    s = sq - 2.0 * ip
+    return jnp.where(cand >= 0, s, jnp.inf)
+
+
+def embedding_bag_ref(
+    table: Array, indices: Array, *, mode: str = "sum",
+    weights: Optional[Array] = None,
+) -> Array:
+    """EmbeddingBag: reduce table rows per bag.
+
+    Args:
+      table:   (V, D) embedding table.
+      indices: (B, L) int32 ids, -1 = padding.
+      mode:    'sum' | 'mean' | 'max'.
+      weights: optional (B, L) per-sample weights (sum/mean only).
+    Returns:
+      (B, D) float32.
+    """
+    safe = jnp.maximum(indices, 0)
+    rows = table[safe].astype(jnp.float32)            # (B, L, D)
+    valid = (indices >= 0)[..., None].astype(jnp.float32)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    if mode == "sum":
+        return jnp.sum(rows * valid, axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1), 1.0)
+        return jnp.sum(rows * valid, axis=1) / cnt
+    if mode == "max":
+        neg = jnp.where(valid > 0, rows, -jnp.inf)
+        out = jnp.max(neg, axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown mode {mode}")
+
+
+def flash_attention_ref(
+    q: Array, k: Array, v: Array, *, causal: bool = False,
+    window: Optional[int] = None, scale: Optional[float] = None,
+) -> Array:
+    """Plain softmax attention. q,k,v: (B, H, S, Dh) (k/v may have Hkv heads).
+
+    GQA: if k/v have fewer heads, they are repeated to match q.
+    ``window``: optional sliding-window size (attend to [i-window+1, i]).
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    skv = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (decode-friendly)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum(
+        "bhqk,bhkd->bhqd", p, v, preferred_element_type=jnp.float32
+    ).astype(q.dtype)
+
+
+def segment_sum_ref(data: Array, segment_ids: Array, num_segments: int) -> Array:
+    """Scatter-add rows of ``data`` into ``num_segments`` buckets."""
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)

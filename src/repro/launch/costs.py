@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_NO_PALLAS", "1")
+os.environ["REPRO_DRYRUN_UNROLL"] = "1"      # unrolled attention tiles
+os.environ.setdefault("REPRO_ATTN_BLOCK_Q", "2048")
+os.environ.setdefault("REPRO_ATTN_BLOCK_K", "8192")
+
+"""Exact per-device cost accounting for the roofline (§Roofline).
+
+XLA's static cost analysis counts while-loop bodies ONCE, so a full
+scanned-layers program under-reports FLOPs/bytes/collectives by ~n_layers
+(verified: scan-of-10-matmuls reports 1 matmul of FLOPs).  Instead of
+unrolling 94-layer programs (intractable compile times on 1 CPU core), this
+module lowers ONE layer of each distinct kind with the production shardings
+and composes:
+
+    total = Σ_groups  n_layers(group) x cost(one layer of group)
+          + cost(embed + lm-head + loss [+ their grads])
+          + cost(optimizer update over the full parameter tree)   [train]
+
+which is exact for these architectures: every layer in a group is
+structurally identical (same shapes, same shardings, same collectives —
+FSDP gathers cannot be hoisted out of the layer loop on real hardware
+because the gathered weights of all layers never fit HBM simultaneously).
+Inner attention loops are unrolled via REPRO_DRYRUN_UNROLL (tile count is
+small for a single layer), so every FLOP is visible to cost analysis.
+
+    PYTHONPATH=src python -m repro.launch.costs --arch mistral-nemo-12b \
+        --shape train_4k
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import (COLLECTIVES, parse_collective_bytes,
+                                       roofline)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _measure(fn, args, in_shardings, mesh) -> dict:
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_shardings).lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll, counts = parse_collective_bytes(compiled.as_text())
+    # Memory traffic bounds:
+    #  * boundary = arguments + outputs of the (per-layer) program — the
+    #    traffic assuming full on-chip fusion inside the layer (what the
+    #    Pallas flash/topk kernels deliver on TPU): the roofline's memory
+    #    term for matmul-class layers.
+    #  * unfused  = XLA 'bytes accessed' — every operand of every op; the
+    #    no-fusion upper bound (retained as diagnostic).
+    mem = compiled.memory_analysis()
+    boundary = 0.0
+    if mem is not None:
+        boundary = float(getattr(mem, "argument_size_in_bytes", 0)
+                         + getattr(mem, "output_size_in_bytes", 0))
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "hbm_bytes": boundary,
+        "hbm_bytes_unfused": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+        "coll_total": float(sum(coll.values())),
+    }
+
+
+def _combine(parts):
+    """parts: list of (multiplier, cost dict)."""
+    tot = {"flops": 0.0, "hbm_bytes": 0.0, "hbm_bytes_unfused": 0.0,
+           "coll_total": 0.0, "coll": {k: 0.0 for k in COLLECTIVES}}
+    for mult, c in parts:
+        tot["flops"] += mult * c["flops"]
+        tot["hbm_bytes"] += mult * c["hbm_bytes"]
+        tot["hbm_bytes_unfused"] += mult * c["hbm_bytes_unfused"]
+        tot["coll_total"] += mult * c["coll_total"]
+        for k in COLLECTIVES:
+            tot["coll"][k] += mult * c["coll"][k]
+    return tot
+
+
+# ----------------------------------------------------------------- LM -----
+
+def _lm_layer_groups(cfg):
+    """(count, moe_layer, window, theta) per structurally-distinct layer."""
+    n_dense = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    groups = {}
+    for l in range(cfg.n_layers):
+        moe_layer = cfg.moe is not None and l >= n_dense
+        w = cfg.layer_window(l)
+        theta = (cfg.rope_theta_local
+                 if (cfg.rope_theta_local and w > 0) else cfg.rope_theta)
+        key = (moe_layer, w, theta)
+        groups[key] = groups.get(key, 0) + 1
+    return [(n,) + key for key, n in groups.items()]
+
+
+def exact_lm_costs(arch: str, shape_name: str) -> dict:
+    from repro.configs import get_arch
+    from repro.launch.inputs import (_LM_RULES_BY_KIND, _cache_logical_by_ndim,
+                                     lm_rules_for)
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import lm as LM
+    from repro.models.lm import _block, _layer_init, _layer_logical
+    from repro.layers.common import dtype_of, softmax_xent
+    from repro.optim import adamw_init
+    from repro.optim.adamw import adamw_update, opt_state_logical
+    from repro.sharding.specs import make_ctx
+
+    mod = get_arch(arch)
+    cfg = mod.CONFIG
+    shape = mod.SHAPES[shape_name]
+    kind = shape.kind
+    mesh = make_production_mesh()
+    if kind == "decode" and shape.seq_len >= 262144:
+        rules = _LM_RULES_BY_KIND["decode_long"]
+    else:
+        rules = lm_rules_for(cfg, kind, mesh)
+    ctx = make_ctx(mesh, rules)
+    cdt = dtype_of(cfg.compute_dtype)
+
+    if kind == "train":
+        b, s = shape.global_batch, shape.seq_len
+    elif kind == "prefill":
+        b, s = shape.global_batch, shape.seq_len
+    else:
+        b, s = shape.global_batch, 1
+
+    parts = []
+
+    # ---- per-layer costs ----
+    for n, moe_layer, window, theta in _lm_layer_groups(cfg):
+        p_l = jax.eval_shape(lambda: _layer_init(
+            jax.random.PRNGKey(0), cfg, moe_layer=moe_layer))
+        p_shard = ctx.tree_shardings(
+            _layer_logical(cfg, moe_layer=moe_layer), p_l)
+        if kind in ("train", "prefill"):
+            x = SDS((b, s, cfg.d_model), cdt)
+            x_shard = ctx.sharding(("batch", "seq_act", "embed_act"), x.shape)
+
+            def fwd(p, x, _moe=moe_layer, _w=window, _t=theta):
+                y, aux = _block(p, x, cfg=cfg, window=jnp.int32(_w),
+                                theta=jnp.float32(_t), moe_layer=_moe,
+                                ctx=ctx, impl="chunked")
+                return y, aux
+
+            if kind == "train":
+                def layer_loss(p, x):
+                    f = fwd
+                    if cfg.remat:
+                        f = jax.checkpoint(f)
+                    y, aux = f(p, x)
+                    return y.astype(jnp.float32).sum() + aux
+
+                fn = jax.grad(layer_loss, argnums=(0, 1))
+            else:
+                fn = fwd
+            c = _measure(fn, (p_l, x), (p_shard, x_shard), mesh)
+        else:
+            # decode layer: block attention against the cache + ffn
+            x = SDS((b, 1, cfg.d_model), cdt)
+            x_shard = ctx.sharding(("batch", None, "embed_act"), x.shape)
+            if cfg.mla is not None:
+                from repro.layers import mla as M
+                from repro.layers.common import rmsnorm, ffn_apply
+                from repro.models.lm import _decode_block_tail
+                m = cfg.mla
+                ckv = SDS((b, shape.seq_len, m.kv_lora_rank), cdt)
+                kr = SDS((b, shape.seq_len, m.d_rope), cdt)
+                cs = ctx.sharding(("batch", "kv_seq", None), ckv.shape)
+                ks = ctx.sharding(("batch", "kv_seq", None), kr.shape)
+
+                def fn(p, x, ckv, kr, _moe=moe_layer):
+                    from repro.layers.common import rmsnorm
+                    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+                    a, ckv, kr = M.mla_decode(
+                        p["attn"], h, ckv, kr, pos=jnp.int32(shape.seq_len - 1),
+                        n_heads=cfg.n_heads, cfg=m, rope_theta=cfg.rope_theta)
+                    x = _decode_block_tail(p, x, a, cfg, ctx)
+                    return x, ckv, kr
+
+                c = _measure(fn, (p_l, x, ckv, kr),
+                             (p_shard, x_shard, cs, ks), mesh)
+            else:
+                from repro.layers import attention as A
+                from repro.models.lm import _decode_block_tail
+                from repro.layers.common import rmsnorm
+                cache_len = (min(window, shape.seq_len)
+                             if (window and cfg.local_global_period > 0)
+                             else shape.seq_len)
+                kc = SDS((b, cfg.n_kv_heads, cache_len, cfg.d_head), cdt)
+                vc = SDS((b, cfg.n_kv_heads, cache_len, cfg.d_head), cdt)
+                kvs = ctx.sharding(("batch", "kv_heads", "kv_seq", None),
+                                   kc.shape)
+
+                def fn(p, x, kc, vc, _w=window):
+                    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+                    ring = _w > 0 and cfg.local_global_period > 0
+                    a, kc, vc = A.mha_decode(
+                        p["attn"], h, kc, vc,
+                        pos=jnp.int32(shape.seq_len - 1),
+                        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                        d_head=cfg.d_head, window=jnp.int32(_w),
+                        rope_theta=theta, ring=ring)
+                    x = _decode_block_tail(p, x, a, cfg, ctx)
+                    return x, kc, vc
+
+                c = _measure(fn, (p_l, x, kc, vc),
+                             (p_shard, x_shard, kvs, kvs), mesh)
+        parts.append((n, c))
+
+    # ---- embed + head + loss ----
+    embed = SDS((cfg.vocab, cfg.d_model), dtype_of(cfg.param_dtype))
+    e_shard = ctx.sharding(("vocab", "embed"), embed.shape)
+    if kind == "train":
+        tokens = SDS((b, s + 1), jnp.int32)
+        t_shard = ctx.sharding(("batch", None), tokens.shape)
+
+        def top_loss(embed, tokens):
+            x = embed[tokens[:, :-1]].astype(cdt)
+            x = ctx.constrain(x, ("batch", "seq_act", "embed_act"))
+            logits = jnp.einsum("bsd,dv->bsv", x, embed.T.astype(cdt),
+                                preferred_element_type=jnp.float32)
+            logits = ctx.constrain(logits, ("batch", "seq_act", "vocab"))
+            loss, _ = softmax_xent(logits, tokens[:, 1:])
+            return loss
+
+        c = _measure(jax.grad(top_loss), (embed, tokens),
+                     (e_shard, t_shard), mesh)
+        parts.append((1, c))
+
+        # ---- optimizer over the full tree ----
+        params = jax.eval_shape(lambda: LM.init_lm(jax.random.PRNGKey(0), cfg))
+        logical = LM.lm_param_logical(cfg)
+        p_shard_full = ctx.tree_shardings(logical, params)
+        opt = jax.eval_shape(lambda: adamw_init(params))
+        o_shard = ctx.tree_shardings(opt_state_logical(logical), opt)
+
+        def opt_fn(p, g, o):
+            return adamw_update(p, g, o, lr=1e-4, grad_dtype="bfloat16")
+
+        c = _measure(opt_fn, (params, params, opt),
+                     (p_shard_full, p_shard_full, o_shard), mesh)
+        parts.append((1, c))
+    else:
+        tokens = SDS((b, s), jnp.int32)
+        t_shard = ctx.sharding(("batch", None), tokens.shape)
+
+        def top_fwd(embed, tokens):
+            x = embed[tokens].astype(cdt)
+            logits = jnp.einsum("bd,dv->bv", x[:, -1], embed.T.astype(cdt),
+                                preferred_element_type=jnp.float32)
+            return ctx.constrain(logits, ("batch", "vocab"))
+
+        c = _measure(top_fwd, (embed, tokens), (e_shard, t_shard), mesh)
+        parts.append((1, c))
+
+    total = _combine(parts)
+    total["roofline"] = roofline(total["flops"], total["hbm_bytes"],
+                                 total["coll_total"], mesh.size)
+    total["method"] = "per-layer-composition"
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default="results/costs")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    if args.all:
+        from repro.configs import LM_ARCHS, get_arch
+        fails = 0
+        for arch in LM_ARCHS:
+            for shape in get_arch(arch).SHAPES:
+                if get_arch(arch).SHAPES[shape].skip_reason:
+                    continue
+                path = os.path.join(args.outdir, f"{arch}__{shape}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[costs] cached  {arch} x {shape}")
+                    continue
+                print(f"[costs] running {arch} x {shape} ...", flush=True)
+                r = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.costs",
+                     "--arch", arch, "--shape", shape, "--outdir", args.outdir],
+                    capture_output=True, text=True)
+                if r.returncode != 0:
+                    fails += 1
+                    print(f"[costs]   FAILED:\n{r.stderr[-2000:]}")
+                else:
+                    print("[costs]   ok")
+        sys.exit(1 if fails else 0)
+
+    t0 = time.time()
+    rec = exact_lm_costs(args.arch, args.shape)
+    rec["arch"], rec["shape"] = args.arch, args.shape
+    rec["wall_s"] = round(time.time() - t0, 1)
+    path = os.path.join(args.outdir, f"{args.arch}__{args.shape}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(json.dumps(rec["roofline"], indent=2))
+
+
+if __name__ == "__main__":
+    main()

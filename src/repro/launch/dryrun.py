@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines — before ANY other import — jax locks the
+# device count at first init.  512 placeholder host devices back both the
+# 16x16 single-pod mesh and the 2x16x16 multi-pod mesh.
+os.environ.setdefault("REPRO_NO_PALLAS", "1")
+# ^ dry-run lowers the pure-jnp reference paths: the roofline must reflect
+# the XLA program a real TPU run executes, not interpret-mode scaffolding.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # sweep
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch gemma3-4b --shape decode_32k --mesh single         # one cell
+
+Each cell must ``.lower().compile()`` — sharding mismatches, OOM at compile,
+or unsupported collectives are bugs in the system, not acceptable failures.
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json:
+  memory_analysis   bytes per device (args/outputs/temps/peak)
+  cost_analysis     HLO FLOPs + bytes accessed
+  collectives       per-op-type byte totals parsed from the partitioned HLO
+  roofline          compute/memory/collective seconds + dominant term
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link (~4 links usable; 1-link figure
+                         # is the conservative roofline denominator)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[d0,d1,...]' (or tuple thereof) HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum output-operand bytes of every collective op in partitioned HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # '%x = bf16[...] all-gather(' / '%x = (f32[...], ...) all-reduce('
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        # 'all-gather-start'/'-done' async pairs: count only starts
+        base = op.replace("-start", "")
+        if base.endswith("-done") or base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue
+        out[base] += _shape_bytes(m.group(1))
+        counts[base] += 1
+    return out, counts
+
+
+def roofline(flops, hbm_bytes, coll_bytes, n_chips):
+    """Three per-device roofline terms in seconds (cost numbers are already
+    per-device in the partitioned module)."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {**terms, "dominant": dominant, "n_chips": n_chips}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.launch.inputs import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    shape = get_arch(arch).SHAPES[shape_name]
+    if shape.skip_reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": shape.skip_reason}
+
+    cell = build_cell(arch, shape_name, mesh)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_d[attr] = int(v)
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+
+    coll, coll_counts = parse_collective_bytes(compiled.as_text())
+    coll_total = sum(coll.values())
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "flops": flops, "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll, "collective_counts": coll_counts,
+        "collective_total_bytes": coll_total,
+        "roofline": roofline(flops, hbm_bytes, coll_total, n_chips),
+        "meta": cell.meta,
+    }
+    return rec
+
+
+def _result_path(outdir, arch, shape, mesh_kind):
+    return os.path.join(outdir, f"{arch}__{shape}__{mesh_kind}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every cell x mesh in subprocesses")
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+
+    if args.all:
+        from repro.configs import get_arch, list_archs
+        cells = []
+        for arch in list_archs():
+            for shape in get_arch(arch).SHAPES:
+                for mesh_kind in ("single", "multi"):
+                    cells.append((arch, shape, mesh_kind))
+        failures = 0
+        for arch, shape, mesh_kind in cells:
+            path = _result_path(args.outdir, arch, shape, mesh_kind)
+            if os.path.exists(path) and not args.force:
+                print(f"[dryrun] cached  {arch} x {shape} x {mesh_kind}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--outdir", args.outdir, "--quiet"]
+            print(f"[dryrun] running {arch} x {shape} x {mesh_kind} ...",
+                  flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                failures += 1
+                err = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "status": "error",
+                       "stderr": r.stderr[-4000:], "stdout": r.stdout[-1000:]}
+                with open(path, "w") as f:
+                    json.dump(err, f, indent=2)
+                print(f"[dryrun]   FAILED (see {path})")
+            else:
+                print(f"[dryrun]   ok")
+        print(f"[dryrun] sweep done, {failures} failures")
+        sys.exit(1 if failures else 0)
+
+    rec = run_cell(args.arch, args.shape, args.mesh)
+    path = _result_path(args.outdir, args.arch, args.shape, args.mesh)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    if not args.quiet:
+        print(json.dumps(rec, indent=2))
+    else:
+        print(f"[dryrun] {args.arch} x {args.shape} x {args.mesh}: "
+              f"{rec['status']}")
+
+
+if __name__ == "__main__":
+    main()

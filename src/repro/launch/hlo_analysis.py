@@ -1,0 +1,78 @@
+"""Shared HLO-artifact analysis: collective-byte parsing + roofline terms.
+
+No jax imports and no env side effects — safe to import from both
+launch/dryrun.py and launch/costs.py (each of which must set XLA_FLAGS
+before importing jax themselves).
+"""
+
+from __future__ import annotations
+
+import re
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link (conservative 1-link figure)
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[d0,d1,...]' (or tuple thereof) HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum output-operand bytes of every collective op in partitioned HLO.
+
+    Async '-start'/'-done' pairs are counted once (at the start op).
+    NOTE: ops inside while-loop bodies appear once in the text; callers that
+    lower scanned programs must account for trip counts themselves (the
+    exact-cost pass lowers single layers, where this is a non-issue).
+    """
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue
+        base = op.replace("-start", "")
+        if base not in COLLECTIVES:
+            continue
+        out[base] += shape_bytes(m.group(1))
+        counts[base] += 1
+    return out, counts
+
+
+def roofline(flops, hbm_bytes, coll_bytes, n_chips):
+    """Per-device roofline terms in seconds."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {**terms, "dominant": dominant, "n_chips": n_chips}

@@ -1,0 +1,378 @@
+"""Per-(architecture x shape) dry-run cell construction.
+
+``build_cell(arch, shape_name, mesh)`` returns everything the dry-run needs:
+
+    fn              — the function to lower (train_step / prefill / decode /
+                      serve / retrieval)
+    args            — pytree of jax.ShapeDtypeStruct stand-ins (no allocation)
+    in_shardings    — matching NamedSharding pytree
+    out_shardings   — or None (inferred)
+    donate_argnums  — buffers the step may reuse (params/opt/cache)
+
+Everything here is *abstract*: params come from ``jax.eval_shape`` over the
+real initializers, so the lowered program is byte-identical to what a real
+run would execute (REPRO_NO_PALLAS=1 is set by dryrun.py so the jnp
+reference paths — not interpret-mode Pallas — are lowered).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import family_of, get_arch
+from repro.configs.base import ShapeSpec
+from repro.core.distributed import build_sharded_search
+from repro.core.schedule import make_schedule
+from repro.models import egnn as EG
+from repro.models import lm as LM
+from repro.models import recsys as RS
+from repro.models.graph import Graph
+from repro.optim import adamw_init
+from repro.optim.adamw import opt_state_logical
+from repro.sharding.specs import ShardingCtx, make_ctx
+from repro.train.loop import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+class Cell(NamedTuple):
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any              # None -> inferred
+    donate_argnums: tuple
+    meta: Dict[str, Any]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ------------------------------------------------------------------ LM ----
+
+_LM_RULES_BY_KIND = {
+    "train": {"seq_act": ("model",)},
+    "prefill": {"seq_act": ("model",), "kv_seq": ("model",)},
+    "decode": {"kv_seq": ("model",)},
+    "decode_long": {"kv_seq": ("pod", "data", "model"), "batch": ()},
+}
+
+# per-device HBM budget for deciding whether FSDP (params sharded over
+# 'data', gathered per layer) is actually needed: bf16 params + bf16 grads
+# + fp32 adam moments = 12 B/param, sharded over the 'model' axis only.
+_FSDP_BYTES_PER_PARAM = 12
+_FSDP_HBM_BUDGET = 12e9
+
+
+def lm_rules_for(cfg, kind: str, mesh) -> dict:
+    """Sharding-rule overrides for an LM cell.
+
+    Size-aware FSDP (§Perf): a 3-12B dense model's full training state fits
+    per-device when sharded over 'model' alone, so the per-layer ZeRO-3
+    weight gathers (the dominant collective for mistral train) are pure
+    waste — drop the 'embed -> data' rule and pay only the gradient
+    all-reduce.  The ~235B MoEs keep FSDP (state would be ~90 GB/device
+    without it).
+    """
+    rules = dict(_LM_RULES_BY_KIND[kind])
+    n_model = mesh.shape.get("model", 1)
+    state_bytes = cfg.param_count() * _FSDP_BYTES_PER_PARAM / n_model
+    if kind == "train" and state_bytes < _FSDP_HBM_BUDGET:
+        rules["embed"] = ()
+    return rules
+
+
+def _cache_logical_by_ndim(leaf_ndim: int):
+    if leaf_ndim == 5:       # (L, B, Hkv, S, Dh)
+        return ("layers", "batch", "kv_heads", "kv_seq", None)
+    if leaf_ndim == 4:       # (L, B, S, rank) — MLA latent
+        return ("layers", "batch", "kv_seq", None)
+    raise ValueError(leaf_ndim)
+
+
+def _lm_cell(arch: str, shape: ShapeSpec, mesh) -> Cell:
+    cfg = get_arch(arch).CONFIG
+    kind = shape.kind
+    if kind == "decode" and shape.seq_len >= 262144:
+        rules = _LM_RULES_BY_KIND["decode_long"]
+    else:
+        rules = lm_rules_for(cfg, kind, mesh)
+    ctx = make_ctx(mesh, rules)
+
+    params = jax.eval_shape(lambda: LM.init_lm(jax.random.PRNGKey(0), cfg))
+    logical = LM.lm_param_logical(cfg)
+    pshard = ctx.tree_shardings(logical, params)
+
+    if kind == "train":
+        opt = jax.eval_shape(lambda: adamw_init(params))
+        oshard = ctx.tree_shardings(opt_state_logical(logical), opt)
+        batch = {"tokens": SDS((shape.global_batch, shape.seq_len + 1),
+                               jnp.int32)}
+        bshard = {"tokens": ctx.sharding(
+            ("batch", None), (shape.global_batch, shape.seq_len + 1))}
+        step = make_train_step(
+            lambda p, b: LM.lm_loss(p, b, cfg, ctx), jit=False,
+            grad_dtype="bfloat16")
+        return Cell(
+            fn=step, args=(params, opt, batch),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+            meta={"kind": "train",
+                  "tokens": shape.global_batch * shape.seq_len},
+        )
+
+    if kind == "prefill":
+        tokens = SDS((shape.global_batch, shape.seq_len), jnp.int32)
+        tshard = ctx.sharding(("batch", None), tokens.shape)
+        cache_shape = jax.eval_shape(
+            lambda p, t: LM.prefill(p, t, cfg, ctx), params, tokens)[1]
+        cshard = jax.tree.map(
+            lambda l: ctx.sharding(_cache_logical_by_ndim(l.ndim), l.shape),
+            cache_shape)
+        fn = functools.partial(LM.prefill, cfg=cfg, ctx=ctx)
+        return Cell(
+            fn=lambda p, t: fn(p, t),
+            args=(params, tokens),
+            in_shardings=(pshard, tshard),
+            out_shardings=(None, cshard),
+            donate_argnums=(),
+            meta={"kind": "prefill",
+                  "tokens": shape.global_batch * shape.seq_len},
+        )
+
+    # decode
+    cache = jax.eval_shape(
+        lambda: LM.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cshard = jax.tree.map(
+        lambda l: ctx.sharding(_cache_logical_by_ndim(l.ndim), l.shape),
+        cache)
+    tokens = SDS((shape.global_batch, 1), jnp.int32)
+    tshard = ctx.sharding(("batch", None), tokens.shape)
+    pos = SDS((), jnp.int32)
+
+    def fn(p, c, t, pos):
+        return LM.decode_step(p, c, t, pos, cfg, ctx)
+
+    return Cell(
+        fn=fn, args=(params, cache, tokens, pos),
+        in_shardings=(pshard, cshard, tshard, None),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+        meta={"kind": "decode", "tokens": shape.global_batch},
+    )
+
+
+# ----------------------------------------------------------------- GNN ----
+
+def _graph_sds(n_nodes: int, n_edges: int, d_feat: int, mesh,
+               n_classes: int) -> Tuple[Graph, Graph]:
+    nodes_pad = _round_up(n_nodes, 512)
+    edges_pad = _round_up(n_edges, 512)
+    g = Graph(
+        nodes=SDS((nodes_pad, d_feat), jnp.float32),
+        coords=SDS((nodes_pad, 3), jnp.float32),
+        senders=SDS((edges_pad,), jnp.int32),
+        receivers=SDS((edges_pad,), jnp.int32),
+        edge_attr=SDS((edges_pad, 0), jnp.float32),
+        node_mask=SDS((nodes_pad,), jnp.bool_),
+        edge_mask=SDS((edges_pad,), jnp.bool_),
+        labels=SDS((nodes_pad,), jnp.int32),
+    )
+    ctx = make_ctx(mesh)
+    shard = Graph(
+        nodes=ctx.sharding(("nodes", None), g.nodes.shape),
+        coords=ctx.sharding(("nodes", None), g.coords.shape),
+        senders=ctx.sharding(("edges",), g.senders.shape),
+        receivers=ctx.sharding(("edges",), g.receivers.shape),
+        edge_attr=ctx.sharding(("edges", None), g.edge_attr.shape),
+        node_mask=ctx.sharding(("nodes",), g.node_mask.shape),
+        edge_mask=ctx.sharding(("edges",), g.edge_mask.shape),
+        labels=ctx.sharding(("nodes",), g.labels.shape),
+    )
+    return g, shard
+
+
+def _gnn_cell(arch: str, shape: ShapeSpec, mesh) -> Cell:
+    base = get_arch(arch).CONFIG
+    ctx = make_ctx(mesh)
+
+    if shape.name == "minibatch_lg":
+        f = shape.fanout
+        n_nodes = shape.batch_nodes * (1 + f[0] + f[0] * f[1])
+        n_edges = shape.batch_nodes * f[0] + shape.batch_nodes * f[0] * f[1]
+        d_feat = shape.d_feat
+    elif shape.name == "molecule":
+        n_nodes = shape.graph_batch * shape.n_nodes
+        n_edges = shape.graph_batch * shape.n_edges
+        d_feat = shape.d_feat
+    else:
+        n_nodes, n_edges, d_feat = shape.n_nodes, shape.n_edges, shape.d_feat
+
+    # NOTE (§Perf): bf16 messages / bf16 params / replicated-node layouts
+    # were each measured and did NOT reduce the collective term — GSPMD's
+    # node<->edge resharding falls back to replicate+repartition in f32
+    # (involuntary-remat warning).  Baseline layout retained; the real fix
+    # is shard_map message passing with explicit psum (future work).
+    cfg = dataclasses.replace(base, d_feat_in=d_feat)
+    params = jax.eval_shape(lambda: EG.egnn_init(jax.random.PRNGKey(0), cfg))
+    logical = EG.egnn_param_logical(cfg)
+    pshard = ctx.tree_shardings(logical, params)
+    opt = jax.eval_shape(lambda: adamw_init(params))
+    oshard = ctx.tree_shardings(
+        opt_state_logical(logical), opt)
+    g, gshard = _graph_sds(n_nodes, n_edges, d_feat, mesh, cfg.n_classes)
+
+    step = make_train_step(lambda p, b: EG.egnn_loss(p, b, cfg, ctx),
+                           jit=False)
+    return Cell(
+        fn=step, args=(params, opt, g),
+        in_shardings=(pshard, oshard, gshard),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1),
+        meta={"kind": "train", "edges": n_edges, "nodes": n_nodes},
+    )
+
+
+# -------------------------------------------------------------- recsys ----
+
+def _recsys_batch_sds(cfg, batch: int, mesh, ctx) -> Tuple[dict, dict]:
+    b = {}
+    if cfg.family == "two_tower":
+        nf = max(cfg.n_sparse // 2, 1)
+        b["user_ids"] = SDS((batch, nf, cfg.multi_hot), jnp.int32)
+        b["item_ids"] = SDS((batch, nf, cfg.multi_hot), jnp.int32)
+    elif cfg.family == "din":
+        b["hist"] = SDS((batch, cfg.seq_len), jnp.int32)
+        b["target"] = SDS((batch,), jnp.int32)
+        b["label"] = SDS((batch,), jnp.float32)
+    else:
+        b["ids"] = SDS((batch, cfg.n_sparse, cfg.multi_hot), jnp.int32)
+        b["label"] = SDS((batch,), jnp.float32)
+        if cfg.family == "dlrm":
+            b["dense"] = SDS((batch, cfg.n_dense), jnp.float32)
+    shard = {k: ctx.sharding(("batch",) + (None,) * (v.ndim - 1), v.shape)
+             for k, v in b.items()}
+    return b, shard
+
+
+def _recsys_cell(arch: str, shape: ShapeSpec, mesh) -> Cell:
+    cfg = get_arch(arch).CONFIG
+    ctx = make_ctx(mesh)
+    params = jax.eval_shape(lambda: RS.recsys_init(jax.random.PRNGKey(0), cfg))
+    logical = RS.recsys_param_logical(cfg, params)
+    pshard = ctx.tree_shardings(logical, params)
+
+    if shape.name == "train_batch":
+        opt = jax.eval_shape(lambda: adamw_init(params))
+        oshard = ctx.tree_shardings(opt_state_logical(logical), opt)
+        batch, bshard = _recsys_batch_sds(cfg, shape.global_batch, mesh, ctx)
+        step = make_train_step(lambda p, b: RS.recsys_loss(p, b, cfg, ctx),
+                               jit=False)
+        return Cell(
+            fn=step, args=(params, opt, batch),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+            meta={"kind": "train", "examples": shape.global_batch},
+        )
+
+    if shape.name in ("serve_p99", "serve_bulk"):
+        batch, bshard = _recsys_batch_sds(cfg, shape.global_batch, mesh, ctx)
+        if cfg.family == "two_tower":
+            def fn(p, b):
+                u = RS.tower_user(p, b["user_ids"], ctx)
+                v = RS.tower_item(p, b["item_ids"], ctx)
+                return jnp.einsum("bd,bd->b", u, v)
+        else:
+            def fn(p, b):
+                return RS.recsys_forward(p, b, cfg, ctx)
+        return Cell(
+            fn=fn, args=(params, batch),
+            in_shardings=(pshard, bshard), out_shardings=None,
+            donate_argnums=(),
+            meta={"kind": "serve", "examples": shape.global_batch},
+        )
+
+    # retrieval_cand: 1 query vs n_candidates
+    c = shape.n_candidates
+    if cfg.family == "two_tower":
+        # The paper's workload: progressive search over the item-embedding
+        # DB, with the staged-index layout (§Perf): the stage-0 prefix is a
+        # contiguous bf16 (C, Ds) block so the full-corpus scan streams only
+        # Ds·2 bytes/row instead of D·4.
+        from repro.core.distributed import build_sharded_search_staged
+        d_emb = cfg.tower_mlp[-1]
+        sched = make_schedule(cfg.retrieval_d_start, d_emb, cfg.retrieval_k0)
+        db_axes = _batch_axes(mesh)
+        db0 = SDS((c, sched.stages[0].dim), jnp.bfloat16)
+        db = SDS((c, d_emb), jnp.float32)
+        sqp = SDS((c, 1), jnp.float32)
+        nf = max(cfg.n_sparse // 2, 1)
+        user_ids = SDS((8, nf, cfg.multi_hot), jnp.int32)
+        search = build_sharded_search_staged(mesh, sched, c, db_axes=db_axes)
+
+        def fn(p, uids, db0, db, sqp):
+            q = RS.tower_user(p, uids, ctx).astype(jnp.float32)
+            return search(q, db0, db, sqp)
+
+        return Cell(
+            fn=fn, args=(params, user_ids, db0, db, sqp),
+            in_shardings=(pshard, None,
+                          ctx.sharding(("rows", None), db0.shape),
+                          ctx.sharding(("rows", None), db.shape),
+                          ctx.sharding(("rows", None), sqp.shape)),
+            out_shardings=None, donate_argnums=(),
+            meta={"kind": "retrieval", "candidates": c,
+                  "schedule": sched.describe(), "staged_index": True},
+        )
+
+    batch, bshard = _recsys_batch_sds(cfg, 1, mesh, ctx)
+    batch.pop("label", None)
+    bshard.pop("label", None)
+    cand = SDS((c,), jnp.int32)
+    cshard = ctx.sharding(("cand",), cand.shape)
+
+    def fn(p, b, cand):
+        return RS.serve_candidates(p, b, cand, cfg, ctx)
+
+    return Cell(
+        fn=fn, args=(params, batch, cand),
+        in_shardings=(pshard, bshard, cshard),
+        out_shardings=None, donate_argnums=(),
+        meta={"kind": "retrieval", "candidates": c},
+    )
+
+
+# ------------------------------------------------------------- factory ----
+
+def build_cell(arch: str, shape_name: str, mesh) -> Optional[Cell]:
+    """Returns None for documented skips (shape.skip_reason non-empty)."""
+    mod = get_arch(arch)
+    shape = mod.SHAPES[shape_name]
+    if shape.skip_reason:
+        return None
+    fam = family_of(arch)
+    if fam == "lm":
+        return _lm_cell(arch, shape, mesh)
+    if fam == "gnn":
+        return _gnn_cell(arch, shape, mesh)
+    return _recsys_cell(arch, shape, mesh)
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (public
+    helper mirroring the shannon/kernels pattern)."""
+    cell = build_cell(arch, shape_name, mesh)
+    return None if cell is None else cell.args

@@ -1,0 +1,1 @@
+"""Shared neural-net layers (pure JAX; params are plain pytrees)."""

@@ -1,0 +1,283 @@
+"""GQA attention: dense, chunked (flash-equivalent jnp), and decode paths.
+
+The chunked implementation is the memory-safe lowering used by the multi-pod
+dry-run: an online-softmax scan over kv blocks, so peak memory is
+O(bq · bk) per (batch, head) instead of O(S²).  It is bit-compatible (up to
+fp reassociation) with `repro.kernels.flash_attention`, which replaces it on
+real TPU.
+
+``window`` may be a *traced* scalar (0 = full attention): the gemma3
+local/global 5:1 pattern passes per-layer windows as scan xs so a single
+stacked-layer scan serves both layer kinds.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import dense_init
+from repro.layers.rope import apply_rope
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+def _dryrun_attn_opts():
+    """Dry-run cost-accounting knobs (read per call, set by launch/costs.py):
+    unrolled tiles so XLA's static cost analysis sees every FLOP, and coarser
+    tiles to keep the unrolled HLO small."""
+    import os
+    unroll = os.environ.get("REPRO_DRYRUN_UNROLL", "0") == "1"
+    bq = int(os.environ.get("REPRO_ATTN_BLOCK_Q", "512"))
+    bk = int(os.environ.get("REPRO_ATTN_BLOCK_K", "1024"))
+    return unroll, bq, bk
+
+
+# ---------------------------------------------------------------- params --
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, d_head: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * d_head, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * d_head, dtype),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model, dtype,
+                         scale=(n_heads * d_head) ** -0.5),
+    }
+
+
+def attn_specs():
+    return {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+# ------------------------------------------------------------ mask math --
+
+def _mask(q_pos, k_pos, window, causal: bool):
+    m = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        m &= k_pos <= q_pos
+    # traced window: 0 disables
+    m &= (k_pos > q_pos - window) | (window <= 0)
+    return m
+
+
+# --------------------------------------------------------------- dense ---
+
+def dense_attention(q, k, v, *, causal: bool, window, q_offset=0) -> Array:
+    """Reference attention; q (B,H,Sq,Dh), k/v (B,Hkv,Skv,Dh)."""
+    b, h, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=1)
+        v = jnp.repeat(v, h // hkv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * dh**-0.5
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq) + q_offset
+    k_pos = jnp.arange(skv)[None, :]
+    m = _mask(q_pos, k_pos, window, causal)
+    s = jnp.where(m[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# -------------------------------------------------------------- chunked --
+
+def chunked_attention(
+    q, k, v, *, causal: bool, window, block_q: int = 512, block_k: int = 1024,
+    unroll: bool = False,
+) -> Array:
+    """Online-softmax attention, O(bq·bk) score memory.  Shapes as dense.
+
+    q/k share their head dim; v may differ (MLA: d_nope+d_rope vs d_v).
+    """
+    b, h, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = h // hkv
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pq, pk = -sq % bq, -skv % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    sqp, skp = q.shape[2], k.shape[2]
+    nq, nk = sqp // bq, skp // bk
+
+    # (B, Hkv, rep, nq, bq, dh): group q heads by their kv head
+    qg = q.reshape(b, hkv, rep, sqp, dh).reshape(b, hkv, rep, nq, bq, dh)
+    kg = k.reshape(b, hkv, nk, bk, dh)
+    vg = v.reshape(b, hkv, nk, bk, dv)
+    scale = dh**-0.5
+    offset = skv - sq
+
+    def q_block(iq, q_blk):
+        # q_blk: (b, hkv, rep, bq, dh)
+        q_pos = iq * bq + jnp.arange(bq)[:, None] + offset
+
+        def kv_step(carry, j):
+            m_i, l_i, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kg, j, 2, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vg, j, 2, keepdims=False)
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = j * bk + jnp.arange(bk)[None, :]
+            msk = _mask(q_pos, k_pos, window, causal) & (k_pos < skv)
+            s = jnp.where(msk[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m_i, s.max(axis=-1, keepdims=True))
+            p = jnp.where(msk[None, None, None], jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m_i - m_new)
+            l_new = l_i * alpha + p.sum(axis=-1, keepdims=True)
+            pv = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * alpha + pv), None
+
+        init = (
+            jnp.full((b, hkv, rep, bq, 1), _NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, rep, bq, 1), jnp.float32),
+            jnp.zeros((b, hkv, rep, bq, dv), jnp.float32),
+        )
+        (m_i, l_i, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk),
+                                          unroll=True if unroll else 1)
+        return (acc / jnp.maximum(l_i, 1e-30)).astype(q.dtype)
+
+    if unroll:
+        # static loop: every tile visible in HLO (exact cost accounting for
+        # the dry-run roofline — XLA counts while-loop bodies once).
+        out = jnp.stack([q_block(jnp.int32(i), qg[:, :, :, i])
+                         for i in range(nq)])
+    else:
+        out = jax.lax.map(
+            lambda args: q_block(*args),
+            (jnp.arange(nq), jnp.moveaxis(qg, 3, 0)),
+        )                                              # (nq, b, hkv, rep, bq, dv)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, rep, sqp, dv)
+    out = out.reshape(b, h, sqp, dv)
+    return out[:, :, :sq]
+
+
+# --------------------------------------------------------------- decode --
+
+def decode_attention(q, k_cache, v_cache, *, pos, window, ring: bool = False) -> Array:
+    """Single-token decode: q (B,H,1,Dh) vs cache (B,Hkv,S,Dh).
+
+    ``pos`` is the (traced) index of the current token; cache entries at
+    positions > pos are masked.  Window semantics match training.
+
+    ``ring=True`` treats the cache as a circular buffer of the last
+    ``cache_len`` tokens (local/sliding-window layers keep a window-sized
+    cache; the buffer *is* the window, so only the unfilled-prefix mask
+    applies).
+    """
+    b, h, _, dh = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, hkv, rep, dh)
+    logits = jnp.einsum("bgrd,bgsd->bgrs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * dh**-0.5
+    k_pos = jnp.arange(s)
+    if ring:
+        msk = (k_pos <= pos) | (pos >= s)
+    else:
+        msk = (k_pos <= pos) & ((k_pos > pos - window) | (window <= 0))
+    logits = jnp.where(msk[None, None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bgsd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, 1, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------- wiring ----
+
+def mha_forward(
+    p, x, *, n_heads: int, n_kv_heads: int, d_head: int,
+    causal: bool = True, window=0, rope_theta: float = 10000.0,
+    positions: Optional[Array] = None, impl: str = "chunked",
+    return_kv: bool = False, constrain=lambda a, names: a,
+):
+    """Full-sequence attention block (training / prefill).
+
+    x: (B, S, D).  Returns (B, S, D) and optionally the rotated (k, v) for
+    cache construction during prefill.
+
+    ``constrain`` pins q/k/v to head-sharded layouts so GSPMD keeps the
+    attention tiles device-local under sequence-parallel residuals.
+    """
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q = (x @ p["wq"]).reshape(b, s, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, d_head)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, d_head)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    # Sequence-length-adaptive SP attention scheme (§Perf iterations 3/6):
+    #  * short sequences (train_4k): KV-replicated — q keeps its sequence
+    #    shard, only k/v replicate across 'model' (bf16, 2.5-5x fewer bytes
+    #    than resharding the f32 residual);
+    #  * long sequences (32k prefill): replicating k/v costs S·2·Hkv·dh per
+    #    device and GSPMD then keeps whole layers replicated (measured 8-11x
+    #    flop inflation) — head-sharded q/k/v tiles are right there.
+    if s >= 16384:
+        q = constrain(q, ("batch", "heads", None, None))
+        k = constrain(k, ("batch", "kv_heads", None, None))
+        v = constrain(v, ("batch", "kv_heads", None, None))
+    else:
+        q = constrain(q, ("batch", None, "seq_act", None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+    if impl == "dense":
+        o = dense_attention(q, k, v, causal=causal, window=window)
+    else:
+        unroll, bq, bk = _dryrun_attn_opts()
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk, unroll=unroll)
+    if s >= 16384:
+        o = constrain(o, ("batch", "heads", None, None))
+    else:
+        o = constrain(o, ("batch", None, "seq_act", None))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * d_head)
+    out = o @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def mha_decode(
+    p, x, k_cache, v_cache, *, pos, n_heads: int, n_kv_heads: int,
+    d_head: int, window=0, rope_theta: float = 10000.0, ring: bool = False,
+):
+    """One-token decode step.  x: (B, 1, D); caches (B, Hkv, S, Dh).
+
+    ``ring=True``: the cache holds only the last ``S`` tokens (sliding-window
+    layer); the new kv is written at ``pos % S``.
+
+    Returns (out (B,1,D), k_cache', v_cache').
+    """
+    b, _, d = x.shape
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, d_head).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, 1, n_kv_heads, d_head).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(b, 1, n_kv_heads, d_head).transpose(0, 2, 1, 3)
+    posv = jnp.asarray(pos)[None]
+    q = apply_rope(q, posv, rope_theta)
+    k = apply_rope(k, posv, rope_theta)
+    slot = jax.lax.rem(pos, k_cache.shape[2]) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=2)
+    o = decode_attention(q, k_cache, v_cache, pos=pos, window=0 if ring else window, ring=ring)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, n_heads * d_head)
+    return o @ p["wo"], k_cache, v_cache

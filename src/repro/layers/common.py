@@ -1,0 +1,137 @@
+"""Core layers: norms, dense projections, FFN variants, initializers.
+
+Params are nested dicts of jnp arrays.  Every init function has a matching
+``*_specs`` twin returning a pytree of *logical axis tuples* with identical
+structure — `repro.sharding.specs` maps logical names to mesh axes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- init ----
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    if scale is None:
+        scale = d_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.truncated_normal(key, -3, 3, (vocab, d), jnp.float32)
+            ).astype(dtype)
+
+
+# --------------------------------------------------------------- norms ----
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """RMSNorm in fp32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- FFN ----
+
+def ffn_init(key, d_model: int, d_ff: int, ffn_type: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if ffn_type == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn_specs(ffn_type: str):
+    p = {"w_in": ("embed", "mlp"), "w_out": ("mlp", "embed")}
+    if ffn_type == "swiglu":
+        p["w_gate"] = ("embed", "mlp")
+    return p
+
+
+def ffn_apply(p, x: Array, ffn_type: str) -> Array:
+    h = x @ p["w_in"]
+    if ffn_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w_out"]
+
+
+# ----------------------------------------------------------------- MLP ----
+
+def mlp_init(key, dims: Tuple[int, ...], dtype, *, bias: bool = True):
+    """Plain MLP tower: dims = (d_in, h1, ..., d_out)."""
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, (a, b) in enumerate(zip(dims, dims[1:])):
+        layer = {"w": dense_init(ks[i], a, b, dtype)}
+        if bias:
+            layer["b"] = jnp.zeros((b,), dtype)
+        layers.append(layer)
+    return layers
+
+
+def mlp_specs(dims: Tuple[int, ...], *, bias: bool = True):
+    out = []
+    for _ in range(len(dims) - 1):
+        layer = {"w": ("embed", "mlp")}
+        if bias:
+            layer["b"] = ("mlp",)
+        out.append(layer)
+    return out
+
+
+def mlp_apply(layers, x: Array, *, act=jax.nn.relu, final_act: bool = False) -> Array:
+    n = len(layers)
+    for i, l in enumerate(layers):
+        x = x @ l["w"]
+        if "b" in l:
+            x = x + l["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ------------------------------------------------------------- losses ----
+
+def softmax_xent(logits: Array, labels: Array, *, z_loss: float = 0.0):
+    """Token cross-entropy in fp32 with optional z-loss; labels -100 ignored.
+
+    Returns (mean_loss, n_valid_tokens).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    nll = jnp.where(valid, nll, 0.0)
+    n = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / n, n

@@ -1,0 +1,166 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Keys/values are compressed through a shared low-rank latent ``c_kv`` (rank
+``kv_lora_rank``) plus a small decoupled-RoPE key shared across heads.  The
+decode path caches only (c_kv, k_rope) — the famous ~1/60 KV-cache shrink —
+and uses the *absorbed* formulation: the per-head up-projections W_uk / W_uv
+are folded into the query / output projections so attention runs directly in
+the latent space:
+
+    score_h ∝ (W_uk_hᵀ q_nope_h) · c_kv  +  q_rope_h · k_rope
+    out_h    = W_uv_h (softmax · c_kv)
+
+Training materializes per-head k/v (standard formulation) — cheaper when
+Sq == Skv and fully shardable over heads.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.layers.attention import chunked_attention, dense_attention
+from repro.layers.common import dense_init, rmsnorm
+from repro.layers.rope import apply_rope
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+def mla_init(key, d_model: int, n_heads: int, cfg: MLAConfig, dtype):
+    ks = jax.random.split(key, 8)
+    h = n_heads
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], d_model, cfg.q_lora_rank, dtype)
+        p["q_norm"] = jnp.zeros((cfg.q_lora_rank,), jnp.float32)
+        p["wq_b"] = dense_init(ks[1], cfg.q_lora_rank, h * (cfg.d_nope + cfg.d_rope), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d_model, h * (cfg.d_nope + cfg.d_rope), dtype)
+    p["wkv_a"] = dense_init(ks[2], d_model, cfg.kv_lora_rank + cfg.d_rope, dtype)
+    p["kv_norm"] = jnp.zeros((cfg.kv_lora_rank,), jnp.float32)
+    p["wkv_b"] = dense_init(ks[3], cfg.kv_lora_rank, h * (cfg.d_nope + cfg.d_v), dtype)
+    p["wo"] = dense_init(ks[4], h * cfg.d_v, d_model, dtype,
+                         scale=(h * cfg.d_v) ** -0.5)
+    return p
+
+
+def mla_specs(cfg: MLAConfig):
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = ("embed", None)
+        p["q_norm"] = (None,)
+        p["wq_b"] = (None, "heads")
+    else:
+        p["wq"] = ("embed", "heads")
+    p["wkv_a"] = ("embed", None)
+    p["kv_norm"] = (None,)
+    p["wkv_b"] = (None, "heads")
+    p["wo"] = ("heads", "embed")
+    return p
+
+
+def _project_q(p, x, n_heads, cfg: MLAConfig):
+    b, s, _ = x.shape
+    if cfg.q_lora_rank:
+        ql = rmsnorm(x @ p["wq_a"], p["q_norm"])
+        q = ql @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, n_heads, cfg.d_nope + cfg.d_rope).transpose(0, 2, 1, 3)
+    return q[..., : cfg.d_nope], q[..., cfg.d_nope:]        # nope, rope parts
+
+
+def mla_forward(
+    p, x, *, n_heads: int, cfg: MLAConfig, rope_theta: float = 10000.0,
+    positions: Optional[Array] = None, impl: str = "chunked",
+    constrain=lambda a, names: a,
+) -> Array:
+    """Training / prefill MLA.  x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope = _project_q(p, x, n_heads, cfg)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    kv_a = x @ p["wkv_a"]                                    # (B,S,rank+d_rope)
+    c_kv = rmsnorm(kv_a[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = kv_a[..., cfg.kv_lora_rank:]                    # (B,S,d_rope)
+    k_rope = apply_rope(k_rope[:, None], positions, rope_theta)  # (B,1,S,d_rope)
+
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, n_heads, cfg.d_nope + cfg.d_v)
+    kv = kv.transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., : cfg.d_nope], kv[..., cfg.d_nope:]
+
+    k_rope_b = jnp.broadcast_to(k_rope, (b, n_heads, s, cfg.d_rope))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # pin per-head layouts so GSPMD keeps attention tiles device-local
+    # (same fix as mha_forward; §Perf iteration log)
+    q = constrain(q, ("batch", "heads", None, None))
+    k = constrain(k, ("batch", "heads", None, None))
+    v = constrain(v, ("batch", "heads", None, None))
+    # scale uses the full qk dim (nope+rope), matching DeepSeek
+    if impl == "chunked":
+        from repro.layers.attention import _dryrun_attn_opts
+        unroll, bq, bk = _dryrun_attn_opts()
+        o = chunked_attention(q, k, v, causal=True, window=0,
+                              block_q=bq, block_k=bk, unroll=unroll)
+    else:
+        o = dense_attention(q, k, v, causal=True, window=0)
+    o = constrain(o, ("batch", "heads", None, None))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * cfg.d_v)
+    return o @ p["wo"]
+
+
+def mla_decode(
+    p, x, ckv_cache, krope_cache, *, pos, n_heads: int, cfg: MLAConfig,
+    rope_theta: float = 10000.0,
+) -> Tuple[Array, Array, Array]:
+    """Absorbed-matmul decode.  x: (B, 1, D).
+
+    ckv_cache:   (B, S, kv_lora_rank)
+    krope_cache: (B, S, d_rope)
+    Returns (out (B,1,D), ckv_cache', krope_cache').
+    """
+    b = x.shape[0]
+    rank = cfg.kv_lora_rank
+    posv = jnp.asarray(pos)[None]
+
+    q_nope, q_rope = _project_q(p, x, n_heads, cfg)          # (B,H,1,*)
+    q_rope = apply_rope(q_rope, posv, rope_theta)
+
+    kv_a = x @ p["wkv_a"]                                    # (B,1,rank+d_rope)
+    c_kv_new = rmsnorm(kv_a[..., :rank], p["kv_norm"])
+    k_rope_new = apply_rope(kv_a[:, None, :, rank:], posv, rope_theta)[:, 0]
+
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_kv_new.astype(ckv_cache.dtype), pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, k_rope_new.astype(krope_cache.dtype), pos, axis=1)
+
+    # absorb W_uk into q:  q_lat[b,h,r] = sum_n q_nope[b,h,n] * W_uk[r,h,n]
+    wkv_b = p["wkv_b"].reshape(rank, n_heads, cfg.d_nope + cfg.d_v)
+    w_uk = wkv_b[..., : cfg.d_nope]                          # (rank,H,d_nope)
+    w_uv = wkv_b[..., cfg.d_nope:]                           # (rank,H,d_v)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, :, 0], w_uk)
+
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0], krope_cache,
+                        preferred_element_type=jnp.float32)
+    scale = (cfg.d_nope + cfg.d_rope) ** -0.5
+    logits = (s_lat + s_rope) * scale
+    k_pos = jnp.arange(ckv_cache.shape[1])
+    logits = jnp.where((k_pos <= pos)[None, None], logits, _NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1)
+
+    o_lat = jnp.einsum("bhs,bsr->bhr", attn.astype(ckv_cache.dtype), ckv_cache,
+                       preferred_element_type=jnp.float32)   # (B,H,rank)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat.astype(x.dtype), w_uv)
+    o = o.reshape(b, 1, n_heads * cfg.d_v)
+    return o @ p["wo"], ckv_cache, krope_cache

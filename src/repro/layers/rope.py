@@ -1,0 +1,32 @@
+"""Rotary position embeddings (RoPE), plain and decoupled (MLA)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(d: int, theta: float) -> Array:
+    """(d/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate the last dim of ``x`` by position.
+
+    Args:
+      x:         (..., S, D) with D even (pairs (x[2i], x[2i+1]) rotated).
+      positions: (S,) or broadcastable to x's S axis.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)

@@ -1,0 +1,192 @@
+"""Graph substrate: padded edge-list graphs, synthetic generators, and a real
+k-hop neighbor sampler (GraphSAGE-style fanout) over CSR adjacency.
+
+JAX has no sparse message-passing primitive beyond BCOO, so graphs are
+(senders, receivers) int32 edge lists with -1 padding and aggregation is
+``jax.ops.segment_sum`` — scatter-add over the edge index IS the
+message-passing kernel on TPU (taxonomy §GNN / §B.11).
+
+Static shapes everywhere: sampled subgraphs are padded to the fanout bound,
+full-batch graphs to a fixed edge budget; masks ride along.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Graph:
+    """Padded edge-list graph (a pytree via jax.tree_util registration below)."""
+
+    nodes: Array        # (N, F) node features
+    coords: Array       # (N, 3) coordinates (EGNN) — zeros if unused
+    senders: Array      # (E,) int32, -1 padding
+    receivers: Array    # (E,) int32, -1 padding
+    edge_attr: Array    # (E, Fe) or (E, 0)
+    node_mask: Array    # (N,) bool
+    edge_mask: Array    # (E,) bool
+    labels: Array       # (N,) int32 node labels (or graph label per node 0)
+
+
+def _graph_flatten(g: Graph):
+    return ((g.nodes, g.coords, g.senders, g.receivers, g.edge_attr,
+             g.node_mask, g.edge_mask, g.labels), None)
+
+
+def _graph_unflatten(_, leaves):
+    return Graph(*leaves)
+
+
+jax.tree_util.register_pytree_node(Graph, _graph_flatten, _graph_unflatten)
+
+
+# ------------------------------------------------------------ generators --
+
+def random_graph(
+    rng: np.random.Generator, n_nodes: int, n_edges: int, d_feat: int,
+    *, n_classes: int = 16, d_edge: int = 0, power_law: bool = True,
+) -> Graph:
+    """Synthetic graph with (optionally) power-law degree distribution."""
+    if power_law:
+        w = rng.pareto(2.0, n_nodes) + 1.0
+        p = w / w.sum()
+        senders = rng.choice(n_nodes, n_edges, p=p).astype(np.int32)
+        receivers = rng.choice(n_nodes, n_edges, p=p).astype(np.int32)
+    else:
+        senders = rng.integers(0, n_nodes, n_edges, dtype=np.int32)
+        receivers = rng.integers(0, n_nodes, n_edges, dtype=np.int32)
+    feats = rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+    coords = rng.normal(size=(n_nodes, 3)).astype(np.float32)
+    labels = rng.integers(0, n_classes, n_nodes, dtype=np.int32)
+    ea = (rng.normal(size=(n_edges, d_edge)).astype(np.float32)
+          if d_edge else np.zeros((n_edges, 0), np.float32))
+    return Graph(
+        nodes=jnp.asarray(feats), coords=jnp.asarray(coords),
+        senders=jnp.asarray(senders), receivers=jnp.asarray(receivers),
+        edge_attr=jnp.asarray(ea),
+        node_mask=jnp.ones((n_nodes,), bool),
+        edge_mask=jnp.ones((n_edges,), bool),
+        labels=jnp.asarray(labels),
+    )
+
+
+def batched_molecules(
+    rng: np.random.Generator, batch: int, n_nodes: int, n_edges: int,
+    d_feat: int, *, n_classes: int = 16,
+) -> Graph:
+    """``batch`` disjoint small graphs packed into one padded graph
+    (block-diagonal adjacency — the standard molecule batching)."""
+    gs = [random_graph(rng, n_nodes, n_edges, d_feat, n_classes=n_classes,
+                       power_law=False) for _ in range(batch)]
+    off = np.arange(batch)[:, None] * n_nodes
+    return Graph(
+        nodes=jnp.concatenate([g.nodes for g in gs]),
+        coords=jnp.concatenate([g.coords for g in gs]),
+        senders=jnp.concatenate(
+            [np.asarray(g.senders) + o for g, o in zip(gs, off)]).astype(jnp.int32),
+        receivers=jnp.concatenate(
+            [np.asarray(g.receivers) + o for g, o in zip(gs, off)]).astype(jnp.int32),
+        edge_attr=jnp.concatenate([g.edge_attr for g in gs]),
+        node_mask=jnp.ones((batch * n_nodes,), bool),
+        edge_mask=jnp.ones((batch * n_edges,), bool),
+        labels=jnp.concatenate([g.labels for g in gs]),
+    )
+
+
+# --------------------------------------------------------------- sampler --
+
+class CSRGraph:
+    """Host-side CSR adjacency for neighbor sampling (build once, sample often)."""
+
+    def __init__(self, n_nodes: int, senders: np.ndarray, receivers: np.ndarray):
+        order = np.argsort(senders, kind="stable")
+        self.dst = receivers[order]
+        self.indptr = np.zeros(n_nodes + 1, np.int64)
+        np.add.at(self.indptr, senders + 1, 1)
+        self.indptr = np.cumsum(self.indptr)
+        self.n_nodes = n_nodes
+
+    def sample_khop(
+        self, rng: np.random.Generator, seeds: np.ndarray,
+        fanout: Tuple[int, ...],
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """GraphSAGE fanout sampling.
+
+        Returns (node_ids, senders, receivers) where senders/receivers index
+        into node_ids (local ids), padded to the static fanout bound with -1.
+        Layer-l edges connect frontier-l nodes to their sampled neighbours.
+        """
+        node_ids = [seeds.astype(np.int64)]
+        id_of = {int(s): i for i, s in enumerate(seeds)}
+        send, recv = [], []
+        frontier = seeds.astype(np.int64)
+        for f in fanout:
+            nxt = []
+            max_edges = len(frontier) * f
+            s_pad = np.full(max_edges, -1, np.int32)
+            r_pad = np.full(max_edges, -1, np.int32)
+            e = 0
+            for u in frontier:
+                lo, hi = self.indptr[u], self.indptr[u + 1]
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                take = rng.integers(0, deg, f)
+                for v in self.dst[lo + take]:
+                    v = int(v)
+                    if v not in id_of:
+                        id_of[v] = len(id_of)
+                        nxt.append(v)
+                    s_pad[e] = id_of[v]       # message flows neighbor -> node
+                    r_pad[e] = id_of[int(u)]
+                    e += 1
+            send.append(s_pad)
+            recv.append(r_pad)
+            frontier = np.asarray(nxt, np.int64)
+            node_ids.append(frontier)
+        all_ids = np.concatenate(node_ids) if node_ids else seeds
+        return all_ids, np.concatenate(send), np.concatenate(recv)
+
+
+def sampled_subgraph(
+    rng: np.random.Generator, csr: CSRGraph, features: np.ndarray,
+    labels: np.ndarray, coords: Optional[np.ndarray],
+    batch_nodes: int, fanout: Tuple[int, ...],
+    *, node_budget: int, edge_budget: int,
+) -> Graph:
+    """Sample a fanout subgraph and pad to (node_budget, edge_budget)."""
+    seeds = rng.choice(csr.n_nodes, batch_nodes, replace=False)
+    ids, s, r = csr.sample_khop(rng, seeds, fanout)
+    ids = ids[:node_budget]
+    n = len(ids)
+    feat = np.zeros((node_budget, features.shape[1]), np.float32)
+    feat[:n] = features[ids]
+    lab = np.full(node_budget, -1, np.int32)
+    lab[:batch_nodes] = labels[seeds]        # loss only on seed nodes
+    co = np.zeros((node_budget, 3), np.float32)
+    if coords is not None:
+        co[:n] = coords[ids]
+    e = min(len(s), edge_budget)
+    s_pad = np.full(edge_budget, -1, np.int32)
+    r_pad = np.full(edge_budget, -1, np.int32)
+    s_pad[:e], r_pad[:e] = s[:e], r[:e]
+    valid_e = (s_pad >= 0) & (s_pad < node_budget) & (r_pad >= 0) & (r_pad < node_budget)
+    s_pad = np.where(valid_e, s_pad, -1)
+    r_pad = np.where(valid_e, r_pad, -1)
+    return Graph(
+        nodes=jnp.asarray(feat), coords=jnp.asarray(co),
+        senders=jnp.asarray(s_pad), receivers=jnp.asarray(r_pad),
+        edge_attr=jnp.zeros((edge_budget, 0), jnp.float32),
+        node_mask=jnp.asarray(np.arange(node_budget) < n),
+        edge_mask=jnp.asarray(valid_e),
+        labels=jnp.asarray(lab),
+    )

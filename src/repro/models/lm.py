@@ -1,0 +1,505 @@
+"""Config-driven transformer LM: dense GQA, MoE (Qwen3/DeepSeek), MLA,
+gemma-style local:global attention — one code path, scan-over-layers.
+
+Entry points
+  init_lm(key, cfg)                       -> params pytree
+  lm_param_logical(cfg)                   -> matching logical-axes pytree
+  lm_forward(params, tokens, cfg, ctx)    -> (logits, aux_loss)
+  lm_loss(params, batch, cfg, ctx)        -> (loss, metrics)
+  prefill(params, tokens, cfg, ctx)       -> (last_logits, cache)
+  init_cache(cfg, batch, seq, dtype)      -> empty cache pytree
+  decode_step(params, cache, tok, pos, …) -> (logits, cache')
+
+Layers are scanned over stacked params (small HLO, fast multi-pod compiles);
+per-layer attention window / rope theta ride along as scan xs, which is how
+the gemma3 5:1 local:global pattern fits a single homogeneous scan.  When the
+config has a local:global pattern, *decode* unrolls the layer loop instead so
+local layers can keep ring-buffer caches of window size — at 512k context the
+cache memory drops ~(period-1)/period vs naive full-length caches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.layers import attention as A
+from repro.layers import mla as M
+from repro.layers import moe as E
+from repro.layers.common import (
+    dense_init,
+    dtype_of,
+    embed_init,
+    ffn_apply,
+    ffn_init,
+    ffn_specs,
+    rmsnorm,
+    softmax_xent,
+)
+from repro.sharding.specs import NULL_CTX, ShardingCtx
+
+Array = jax.Array
+
+
+# ============================================================ init =======
+
+def _layer_init(key, cfg: LMConfig, *, moe_layer: bool):
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.mla is not None:
+        p["attn"] = M.mla_init(ks[0], cfg.d_model, cfg.n_heads, cfg.mla, dt)
+    else:
+        p["attn"] = A.attn_init(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, dt)
+    if moe_layer:
+        p["moe"] = E.moe_init(ks[1], cfg.d_model, cfg.moe, cfg.ffn_type, dt)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_type, dt)
+    return p
+
+
+def _layer_logical(cfg: LMConfig, *, moe_layer: bool):
+    p: Dict[str, Any] = {"ln1": (None,), "ln2": (None,)}
+    if cfg.mla is not None:
+        p["attn"] = M.mla_specs(cfg.mla)
+    else:
+        p["attn"] = A.attn_specs()
+    if moe_layer:
+        p["moe"] = E.moe_specs(cfg.moe, cfg.ffn_type)
+    else:
+        p["ffn"] = ffn_specs(cfg.ffn_type)
+    return p
+
+
+def _n_dense_prefix(cfg: LMConfig) -> int:
+    return cfg.moe.first_k_dense if cfg.moe is not None else 0
+
+
+def init_lm(key, cfg: LMConfig):
+    dt = dtype_of(cfg.param_dtype)
+    k_embed, k_head, k_layers, k_dense = jax.random.split(key, 4)
+    n_dense = _n_dense_prefix(cfg)
+    n_main = cfg.n_layers - n_dense
+
+    main_keys = jax.random.split(k_layers, n_main)
+    layers = jax.vmap(
+        lambda k: _layer_init(k, cfg, moe_layer=cfg.moe is not None)
+    )(main_keys)
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+        "layers": layers,
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if n_dense:
+        dense_keys = jax.random.split(k_dense, n_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, moe_layer=False)
+        )(dense_keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+def _stack_logical(layer_logical):
+    """Prepend the stacked-layers axis to every leaf's logical tuple."""
+    return jax.tree.map(
+        lambda log: ("layers",) + log,
+        layer_logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def lm_param_logical(cfg: LMConfig):
+    log: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "layers": _stack_logical(_layer_logical(cfg, moe_layer=cfg.moe is not None)),
+        "final_ln": (None,),
+    }
+    if _n_dense_prefix(cfg):
+        log["dense_layers"] = _stack_logical(_layer_logical(cfg, moe_layer=False))
+    if not cfg.tie_embeddings:
+        log["lm_head"] = ("embed", "vocab")
+    return log
+
+
+# ========================================================= forward =======
+
+def _windows_thetas(cfg: LMConfig, n_layers: int, offset: int = 0):
+    wins = jnp.asarray(
+        [cfg.layer_window(offset + l) for l in range(n_layers)], jnp.int32)
+    thetas = jnp.asarray(
+        [cfg.rope_theta_local
+         if (cfg.rope_theta_local and cfg.layer_window(offset + l) > 0)
+         else cfg.rope_theta
+         for l in range(n_layers)], jnp.float32)
+    return wins, thetas
+
+
+def _block(p, x, *, cfg: LMConfig, window, theta, moe_layer: bool,
+           ctx: ShardingCtx, impl: str):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a = M.mla_forward(p["attn"], h, n_heads=cfg.n_heads, cfg=cfg.mla,
+                          rope_theta=cfg.rope_theta, impl=impl,
+                          constrain=ctx.constrain)
+    else:
+        a = A.mha_forward(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, causal=True, window=window, rope_theta=theta,
+            impl=impl, constrain=ctx.constrain)
+    # residual stream in sequence-parallel layout (Megatron-SP): the 'seq_act'
+    # rule maps to 'model' for train/prefill shapes, so per-layer saved
+    # activations shard n_model-ways; GSPMD inserts the all-gather /
+    # reduce-scatter pair around attention/FFN automatically.
+    x = ctx.constrain(x + a, ("batch", "seq_act", "embed_act"))
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if moe_layer:
+        y, aux = E.moe_apply(p["moe"], h2, cfg.moe, cfg.ffn_type,
+                             constrain=ctx.constrain, ctx=ctx)
+    else:
+        y, aux = ffn_apply(p["ffn"], h2, cfg.ffn_type), 0.0
+    x = ctx.constrain(x + y, ("batch", "seq_act", "embed_act"))
+    return x, aux
+
+
+def _scan_layers(stacked, x, wins, thetas, *, cfg, moe_layer, ctx, impl):
+    def body(x, sl):
+        p, w, th = sl
+        fn = functools.partial(
+            _block, cfg=cfg, moe_layer=moe_layer, ctx=ctx, impl=impl)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x, aux = fn(p, x, window=w, theta=th)
+        return x, aux
+
+    x, auxs = jax.lax.scan(body, x, (stacked, wins, thetas))
+    return x, jnp.sum(auxs) if cfg.moe is not None else 0.0
+
+
+def lm_forward(
+    params, tokens: Array, cfg: LMConfig, ctx: ShardingCtx = NULL_CTX,
+    *, impl: str = "chunked",
+) -> Tuple[Array, Array]:
+    """tokens (B, S) int32 -> (logits (B, S, V) f32, aux loss scalar)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    x = ctx.constrain(x, ("batch", None, "embed_act"))
+
+    n_dense = _n_dense_prefix(cfg)
+    aux_total = 0.0
+    if n_dense:
+        wins, thetas = _windows_thetas(cfg, n_dense)
+        x, _ = _scan_layers(params["dense_layers"], x, wins, thetas,
+                            cfg=cfg, moe_layer=False, ctx=ctx, impl=impl)
+    wins, thetas = _windows_thetas(cfg, cfg.n_layers - n_dense, offset=n_dense)
+    x, aux = _scan_layers(params["layers"], x, wins, thetas,
+                          cfg=cfg, moe_layer=cfg.moe is not None, ctx=ctx,
+                          impl=impl)
+    aux_total = aux_total + aux
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    logits = ctx.constrain(logits, ("batch", "seq_act", "vocab"))
+    return logits, aux_total
+
+
+def lm_loss(params, batch: Dict[str, Array], cfg: LMConfig,
+            ctx: ShardingCtx = NULL_CTX, *, impl: str = "chunked"):
+    """batch['tokens']: (B, S+1) int32.  Returns (loss, metrics dict)."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = lm_forward(params, inputs, cfg, ctx, impl=impl)
+    xent, n_tok = softmax_xent(logits, labels)
+    loss = xent + aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux, "tokens": n_tok}
+
+
+# ========================================================== serving ======
+
+def _cache_dtype(cfg: LMConfig):
+    return dtype_of(cfg.compute_dtype)
+
+
+def init_cache(cfg: LMConfig, batch: int, seq: int, dtype=None):
+    """Empty decode cache.
+
+    Homogeneous archs: stacked (L, ...) arrays scanned during decode.
+    local:global archs: separate local (ring, window-sized) / global stacks.
+    """
+    dt = dtype or _cache_dtype(cfg)
+    L = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((L, batch, seq, m.kv_lora_rank), dt),
+            "krope": jnp.zeros((L, batch, seq, m.d_rope), dt),
+        }
+    if cfg.local_global_period > 0:
+        wins = [cfg.layer_window(l) for l in range(L)]
+        n_local = sum(1 for w in wins if w > 0)
+        n_global = L - n_local
+        w = min(cfg.window, seq) if cfg.window else seq
+        return {
+            "k_local": jnp.zeros((n_local, batch, cfg.n_kv_heads, w, cfg.d_head), dt),
+            "v_local": jnp.zeros((n_local, batch, cfg.n_kv_heads, w, cfg.d_head), dt),
+            "k_global": jnp.zeros((n_global, batch, cfg.n_kv_heads, seq, cfg.d_head), dt),
+            "v_global": jnp.zeros((n_global, batch, cfg.n_kv_heads, seq, cfg.d_head), dt),
+        }
+    return {
+        "k": jnp.zeros((L, batch, cfg.n_kv_heads, seq, cfg.d_head), dt),
+        "v": jnp.zeros((L, batch, cfg.n_kv_heads, seq, cfg.d_head), dt),
+    }
+
+
+def cache_logical(cfg: LMConfig):
+    if cfg.mla is not None:
+        return {"ckv": ("layers", "batch", "kv_seq", None),
+                "krope": ("layers", "batch", "kv_seq", None)}
+    if cfg.local_global_period > 0:
+        log = ("layers", "batch", "kv_heads", "kv_seq", None)
+        return {"k_local": log, "v_local": log,
+                "k_global": log, "v_global": log}
+    log = ("layers", "batch", "kv_heads", "kv_seq", None)
+    return {"k": log, "v": log}
+
+
+def decode_step(
+    params, cache, tokens: Array, pos, cfg: LMConfig,
+    ctx: ShardingCtx = NULL_CTX,
+) -> Tuple[Array, Any]:
+    """One decode step.  tokens: (B, 1) int32; pos: traced scalar.
+
+    Returns (logits (B, V) f32, cache').
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)          # (B, 1, D)
+
+    if cfg.local_global_period > 0:
+        x, cache = _decode_unrolled(params, cache, x, pos, cfg, ctx)
+    elif cfg.mla is not None:
+        x, cache = _decode_scan_mla(params, cache, x, pos, cfg, ctx)
+    else:
+        x, cache = _decode_scan_gqa(params, cache, x, pos, cfg, ctx)
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt),
+                        preferred_element_type=jnp.float32)[:, 0]
+    return ctx.constrain(logits, ("batch", "vocab")), cache
+
+
+def _decode_block_tail(p, x, a, cfg, ctx):
+    x = x + a
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = E.moe_apply(p["moe"], h2, cfg.moe, cfg.ffn_type,
+                           constrain=ctx.constrain, ctx=ctx)
+    else:
+        y = ffn_apply(p["ffn"], h2, cfg.ffn_type)
+    return ctx.constrain(x + y, ("batch", None, "embed_act"))
+
+
+def _decode_scan_gqa(params, cache, x, pos, cfg, ctx):
+    n_dense = _n_dense_prefix(cfg)
+    assert n_dense == 0, "dense-prefix MoE archs use MLA decode path"
+    wins, thetas = _windows_thetas(cfg, cfg.n_layers)
+
+    def body(x, sl):
+        p, k_c, v_c, w, th = sl
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, k_c, v_c = A.mha_decode(
+            p["attn"], h, k_c, v_c, pos=pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head, window=w,
+            rope_theta=th)
+        x = _decode_block_tail(p, x, a, cfg, ctx)
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], wins, thetas))
+    return x, {"k": k_new, "v": v_new}
+
+
+def _decode_scan_mla(params, cache, x, pos, cfg, ctx):
+    n_dense = _n_dense_prefix(cfg)
+
+    def body_factory(stacked_has_moe):
+        def body(carry, sl):
+            x = carry
+            p, ckv, krope = sl
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            a, ckv, krope = M.mla_decode(
+                p["attn"], h, ckv, krope, pos=pos, n_heads=cfg.n_heads,
+                cfg=cfg.mla, rope_theta=cfg.rope_theta)
+            x = _decode_block_tail(p, x, a, cfg, ctx)
+            return x, (ckv, krope)
+        return body
+
+    ckv, krope = cache["ckv"], cache["krope"]
+    outs_ckv, outs_krope = [], []
+    if n_dense:
+        x, (c0, r0) = jax.lax.scan(
+            body_factory(False), x,
+            (params["dense_layers"], ckv[:n_dense], krope[:n_dense]))
+        outs_ckv.append(c0)
+        outs_krope.append(r0)
+    x, (c1, r1) = jax.lax.scan(
+        body_factory(True), x,
+        (params["layers"], ckv[n_dense:], krope[n_dense:]))
+    outs_ckv.append(c1)
+    outs_krope.append(r1)
+    return x, {"ckv": jnp.concatenate(outs_ckv, axis=0),
+               "krope": jnp.concatenate(outs_krope, axis=0)}
+
+
+def _decode_unrolled(params, cache, x, pos, cfg, ctx):
+    """local:global decode: python loop over layers, ring caches for local."""
+    k_l, v_l = cache["k_local"], cache["v_local"]
+    k_g, v_g = cache["k_global"], cache["v_global"]
+    il = ig = 0
+    for l in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[l], params["layers"])
+        w = cfg.layer_window(l)
+        theta = (cfg.rope_theta_local
+                 if (cfg.rope_theta_local and w > 0) else cfg.rope_theta)
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if w > 0:
+            a, nk, nv = A.mha_decode(
+                p["attn"], h, k_l[il], v_l[il], pos=pos, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                window=w, rope_theta=theta, ring=True)
+            k_l, v_l = k_l.at[il].set(nk), v_l.at[il].set(nv)
+            il += 1
+        else:
+            a, nk, nv = A.mha_decode(
+                p["attn"], h, k_g[ig], v_g[ig], pos=pos, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                window=0, rope_theta=theta)
+            k_g, v_g = k_g.at[ig].set(nk), v_g.at[ig].set(nv)
+            ig += 1
+        x = _decode_block_tail(p, x, a, cfg, ctx)
+    return x, {"k_local": k_l, "v_local": v_l, "k_global": k_g, "v_global": v_g}
+
+
+def prefill_to_decode_cache(cfg: LMConfig, cache, prompt_len: int, decode_len: int):
+    """Convert a prefill cache (full-length k/v per layer) into the decode
+    layout: pad the sequence axis to ``decode_len`` and, for local:global
+    archs, fold sliding-window layers into ring buffers.
+    """
+    if cfg.local_global_period <= 0 or "k" not in cache:
+        def pad_seq(v):
+            ax = 3 if v.ndim == 5 else 2
+            pad = [(0, 0)] * v.ndim
+            pad[ax] = (0, decode_len - v.shape[ax])
+            return jnp.pad(v, pad)
+        return {k: pad_seq(v) for k, v in cache.items()}
+
+    w = min(cfg.window, decode_len)
+    wins = [cfg.layer_window(l) for l in range(cfg.n_layers)]
+    loc_idx = [l for l, x in enumerate(wins) if x > 0]
+    glo_idx = [l for l, x in enumerate(wins) if x == 0]
+
+    def to_ring(kv):                                   # (B, H, S, D) -> (B, H, W, D)
+        s = kv.shape[2]
+        # token t lives at slot t % w; keep the last w tokens of the prompt
+        tok = jnp.maximum(jnp.arange(s - w, s), 0)
+        slots = tok % w
+        ring = jnp.zeros(kv.shape[:2] + (w,) + kv.shape[3:], kv.dtype)
+        return ring.at[:, :, slots].set(kv[:, :, tok])
+
+    def pad_full(kv):
+        pad = [(0, 0)] * kv.ndim
+        pad[2] = (0, decode_len - kv.shape[2])
+        return jnp.pad(kv, pad)
+
+    out = {
+        "k_local": jnp.stack([to_ring(cache["k"][l]) for l in loc_idx]),
+        "v_local": jnp.stack([to_ring(cache["v"][l]) for l in loc_idx]),
+        "k_global": jnp.stack([pad_full(cache["k"][l]) for l in glo_idx]),
+        "v_global": jnp.stack([pad_full(cache["v"][l]) for l in glo_idx]),
+    }
+    return out
+
+
+def prefill(params, tokens: Array, cfg: LMConfig, ctx: ShardingCtx = NULL_CTX,
+            *, impl: str = "chunked"):
+    """Inference prefill: forward pass returning (last-token logits, cache).
+
+    The cache length equals the prompt length; serving pads to the decode
+    budget before calling `decode_step`.
+    """
+    b, s = tokens.shape
+    cdt = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    x = ctx.constrain(x, ("batch", None, "embed_act"))
+    dt = _cache_dtype(cfg)
+
+    n_dense = _n_dense_prefix(cfg)
+    layer_sets = []
+    if n_dense:
+        layer_sets.append(("dense_layers", 0, n_dense, False))
+    layer_sets.append(("layers", n_dense, cfg.n_layers, cfg.moe is not None))
+
+    caches = {k: [] for k in ("k", "v", "ckv", "krope",
+                              "k_local", "v_local", "k_global", "v_global")}
+
+    for name, lo, hi, moe_layer in layer_sets:
+        wins, thetas = _windows_thetas(cfg, hi - lo, offset=lo)
+
+        def body(x, sl):
+            p, w, th = sl
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            if cfg.mla is not None:
+                kv_a = h @ p["attn"]["wkv_a"]
+                m = cfg.mla
+                ckv = rmsnorm(kv_a[..., : m.kv_lora_rank], p["attn"]["kv_norm"])
+                from repro.layers.rope import apply_rope
+                krope = apply_rope(kv_a[:, None, :, m.kv_lora_rank:],
+                                   jnp.arange(s), cfg.rope_theta)[:, 0]
+                a = M.mla_forward(p["attn"], h, n_heads=cfg.n_heads, cfg=m,
+                                  rope_theta=cfg.rope_theta)
+                kv_out = (ckv.astype(dt), krope.astype(dt))
+            else:
+                a, (k, v) = A.mha_forward(
+                    p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    d_head=cfg.d_head, causal=True, window=w, rope_theta=th,
+                    return_kv=True)
+                kv_out = (k.astype(dt), v.astype(dt))
+            x = ctx.constrain(x + a, ("batch", None, "embed_act"))
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            if moe_layer:
+                y, _ = E.moe_apply(p["moe"], h2, cfg.moe, cfg.ffn_type,
+                                   constrain=ctx.constrain, ctx=ctx)
+            else:
+                y = ffn_apply(p["ffn"], h2, cfg.ffn_type)
+            x = ctx.constrain(x + y, ("batch", None, "embed_act"))
+            return x, kv_out
+
+        x, (kv_a_out, kv_b_out) = jax.lax.scan(
+            body, x, (params[name], wins, thetas))
+        if cfg.mla is not None:
+            caches["ckv"].append(kv_a_out)
+            caches["krope"].append(kv_b_out)
+        else:
+            caches["k"].append(kv_a_out)
+            caches["v"].append(kv_b_out)
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last = x[:, -1]
+    logits = jnp.einsum("bd,dv->bv", last, head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    cache = {k: (jnp.concatenate(v, axis=0) if len(v) > 1 else v[0])
+             for k, v in caches.items() if v}
+    return ctx.constrain(logits, ("batch", "vocab")), cache

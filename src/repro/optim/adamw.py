@@ -1,0 +1,98 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (pure JAX pytrees).
+
+Optimizer moments are fp32 regardless of (bf16) param dtype — the standard
+mixed-precision recipe; `opt_state_logical` mirrors the params' logical axes
+so moments shard identically to their parameters (ZeRO-style: with the
+``embed -> data`` FSDP rule the whole optimizer state is sharded, nothing is
+replicated but norm scales).
+
+Distributed-optimization hooks:
+  * ``grad_dtype='bfloat16'`` — gradients cast before the (GSPMD-inserted)
+    data-parallel reduction: 2x less all-reduce traffic (gradient
+    compression; stochastic rounding left to XLA).
+  * grad accumulation lives in `repro.train.loop.accumulate_grads`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class OptState(NamedTuple):
+    step: Array          # () int32
+    mu: object           # pytree like params, fp32
+    nu: object           # pytree like params, fp32
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def opt_state_logical(param_logical):
+    """Logical axes for OptState given the params' logical tree."""
+    return OptState(step=(), mu=param_logical, nu=param_logical)
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    warm = base_lr * (step + 1) / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(
+    params, grads, state: OptState, *,
+    lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1, max_grad_norm: float = 1.0,
+    grad_dtype: Optional[str] = None,
+):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    if grad_dtype:
+        grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    b1c = 1 - b1**step.astype(jnp.float32)
+    b2c = 1 - b2**step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * gf
+        nu = b2 * nu + (1 - b2) * gf * gf
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_mu, new_nu), {"grad_norm": gnorm}

@@ -1,0 +1,4 @@
+from repro.rag.corpus import SyntheticCorpus, make_corpus
+from repro.rag.pipeline import RAGPipeline
+
+__all__ = ["SyntheticCorpus", "make_corpus", "RAGPipeline"]

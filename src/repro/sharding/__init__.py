@@ -1,0 +1,8 @@
+from repro.sharding.specs import (
+    DEFAULT_RULES,
+    NULL_CTX,
+    ShardingCtx,
+    make_ctx,
+)
+
+__all__ = ["ShardingCtx", "NULL_CTX", "DEFAULT_RULES", "make_ctx"]

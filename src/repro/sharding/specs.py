@@ -1,0 +1,146 @@
+"""Logical-axis sharding: one rules table maps model-space axis names to mesh
+axes; every param/activation carries logical names, and the same model code
+lowers on a laptop (no mesh), one pod (16x16 'data' x 'model'), or multi-pod
+(2 x 16 x 16 'pod' x 'data' x 'model').
+
+Rules (defaults; shapes may override — e.g. long-context decode moves the
+kv sequence axis onto 'data', batch=1 cells clear 'batch'):
+
+    batch    -> ('pod', 'data')   data parallelism (+ pod axis folded in)
+    embed    -> ('data',)         FSDP: parameters sharded over data, gathered
+                                  per layer by GSPMD (ZeRO-3 equivalent)
+    vocab    -> ('model',)        Megatron-style vocab-parallel embed/logits
+    heads    -> ('model',)        tensor parallelism over attention heads
+    kv_heads -> ('model',)
+    mlp      -> ('model',)        tensor parallelism over FFN hidden
+    expert   -> ('model',)        expert parallelism (MoE dispatch all-to-all)
+    kv_seq   -> ()                decode cache sequence axis (overridden to
+                                  ('data',) / ('pod','data') for long-context)
+    rows     -> ('data',)         corpus/document axis of retrieval DBs,
+                                  embedding-table row sharding
+    fields   -> ('model',)        recsys: table-wise parallelism over fields
+    nodes/edges -> ('data',)      GNN: graph partitioned over devices
+
+Unknown logical names map to replicated.  An axis rule is dropped when the
+mesh lacks that axis or the dimension is not divisible by the axis size —
+graceful degradation instead of GSPMD errors on small smoke meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": ("data",),
+    "embed_act": (),
+    "embed_moe": (),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "layers": (),
+    "kv_seq": (),
+    "rows": ("pod", "data"),
+    "fields": ("model",),
+    "nodes": ("data",),
+    "edges": ("pod", "data", "model"),
+    "cand": ("data",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Binds a mesh + rules table; translates logical axes to shardings."""
+
+    mesh: Optional[Mesh]
+    rules: Tuple[Tuple[str, Tuple[str, ...]], ...]  # hashable rules
+
+    @property
+    def rules_dict(self) -> Dict[str, Tuple[str, ...]]:
+        return dict(self.rules)
+
+    def spec(self, logical: Tuple[Optional[str], ...],
+             shape: Optional[Tuple[int, ...]] = None) -> P:
+        """PartitionSpec for a tuple of logical axis names (None = replicated).
+
+        If ``shape`` is given, axis rules whose mesh-size doesn't divide the
+        dimension are dropped (prevents uneven-shard errors on odd configs).
+        """
+        if self.mesh is None:
+            return P()
+        rules = self.rules_dict
+        axes_in_mesh = set(self.mesh.axis_names)
+        used = set()
+        out = []
+        for i, name in enumerate(logical):
+            if name is None or name not in rules:
+                out.append(None)
+                continue
+            cand = [a for a in rules[name] if a in axes_in_mesh and a not in used]
+            if shape is not None and cand:
+                keep, size = [], 1
+                for a in cand:
+                    nsize = size * self.mesh.shape[a]
+                    if shape[i] % nsize == 0:
+                        keep.append(a)
+                        size = nsize
+                cand = keep
+            if not cand:
+                out.append(None)
+            elif len(cand) == 1:
+                out.append(cand[0])
+                used.update(cand)
+            else:
+                out.append(tuple(cand))
+                used.update(cand)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, logical, shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    def constrain(self, x: Array, logical: Tuple[Optional[str], ...]) -> Array:
+        """with_sharding_constraint by logical names (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical, x.shape))
+        )
+
+    def tree_shardings(self, logical_tree, param_tree):
+        """Match a logical-axes pytree against a param pytree -> shardings.
+
+        ``logical_tree`` mirrors ``param_tree``'s structure with tuples of
+        logical names at the leaves (a leaf = tuple of str/None).
+        """
+        def leaf(log, p):
+            return self.sharding(log, tuple(p.shape))
+
+        return jax.tree.map(
+            leaf, logical_tree, param_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        )
+
+
+NULL_CTX = ShardingCtx(mesh=None, rules=tuple(DEFAULT_RULES.items()))
+
+
+def make_ctx(mesh: Optional[Mesh], overrides: Optional[Dict[str, Tuple[str, ...]]] = None) -> ShardingCtx:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return ShardingCtx(mesh=mesh, rules=tuple(sorted(rules.items())))

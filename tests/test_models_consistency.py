@@ -1,0 +1,140 @@
+"""Cross-path consistency + physics invariants."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import LMConfig, MLAConfig, MoEConfig
+from repro.models import lm as LM
+from repro.models import egnn as EG
+from repro.models.graph import random_graph
+
+RNG = np.random.default_rng(7)
+KEY = jax.random.PRNGKey(7)
+
+
+def _decode_matches_forward(cfg, S=12, atol=5e-4):
+    params = LM.init_lm(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, S), 0, cfg.vocab)
+    full, _ = LM.lm_forward(params, toks, cfg)
+    _, pc = LM.prefill(params, toks[:, : S - 1], cfg)
+    dc = LM.prefill_to_decode_cache(cfg, pc, S - 1, S)
+    dl, _ = LM.decode_step(params, dc, toks[:, S - 1:], S - 1, cfg)
+    err = np.abs(np.asarray(dl) - np.asarray(full[:, -1])).max()
+    assert err < atol, err
+
+
+def test_decode_matches_forward_dense():
+    _decode_matches_forward(get_arch("starcoder2-3b").SMOKE_CONFIG)
+
+
+def test_decode_matches_forward_gqa_swiglu():
+    _decode_matches_forward(get_arch("mistral-nemo-12b").SMOKE_CONFIG)
+
+
+def test_decode_matches_forward_local_global():
+    _decode_matches_forward(get_arch("gemma3-4b").SMOKE_CONFIG, S=20)
+
+
+def test_decode_matches_forward_mla():
+    cfg = dataclasses.replace(get_arch("deepseek-v2-236b").SMOKE_CONFIG,
+                              moe=None)   # isolate MLA from MoE capacity drops
+    _decode_matches_forward(cfg)
+
+
+def test_multi_step_greedy_decode_matches_forward():
+    """Decode 4 tokens autoregressively == teacher-forced forward argmax."""
+    cfg = get_arch("starcoder2-3b").SMOKE_CONFIG
+    params = LM.init_lm(KEY, cfg)
+    prompt = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    total = 12
+
+    logits, pc = LM.prefill(params, prompt, cfg)
+    cache = LM.prefill_to_decode_cache(cfg, pc, 8, total)
+    toks = jnp.argmax(logits, -1)[:, None]
+    seq = [prompt, toks]
+    for i in range(3):
+        lg, cache = LM.decode_step(params, cache, toks, 8 + i, cfg)
+        toks = jnp.argmax(lg, -1)[:, None]
+        seq.append(toks)
+    decoded = jnp.concatenate(seq, 1)
+    # teacher-forced check
+    full, _ = LM.lm_forward(params, decoded[:, :-1], cfg)
+    greedy = jnp.argmax(full[:, 7:], -1)
+    np.testing.assert_array_equal(np.asarray(decoded[:, 8:]),
+                                  np.asarray(greedy))
+
+
+def test_moe_aux_loss_encourages_balance():
+    """Uniform routing should give aux loss ~= coef (its minimum)."""
+    from repro.layers.moe import moe_apply, moe_init
+    cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=16, aux_loss_coef=1.0)
+    p = moe_init(KEY, 32, cfg, "swiglu", jnp.float32)
+    x = jax.random.normal(KEY, (256, 32))
+    _, aux = moe_apply(p, x, cfg, "swiglu")
+    # minimum is coef * E * k * (1/E) * ... = coef * k for top-k
+    assert float(aux) >= cfg.top_k * 0.99
+    assert float(aux) < cfg.top_k * 3.0
+
+
+def test_moe_capacity_drops_bounded():
+    """Output of MoE with generous capacity == dense expert mixture."""
+    from repro.layers.moe import moe_apply, moe_init
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=16,
+                    capacity_factor=8.0)  # no drops
+    p = moe_init(KEY, 16, cfg, "swiglu", jnp.float32)
+    x = jax.random.normal(KEY, (32, 16))
+    y, _ = moe_apply(p, x, cfg, "swiglu")
+    # dense reference: route every token through its top-2 explicitly
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gv, ge = jax.lax.top_k(probs, 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for t in range(32):
+        for j in range(2):
+            e = int(ge[t, j])
+            h = x[t] @ p["w_in"][e]
+            g = jax.nn.silu(x[t] @ p["w_gate"][e]) * h
+            ref = ref.at[t].add(gv[t, j] * (g @ p["w_out"][e]))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_egnn_equivariance():
+    """E(3): rotation+translation of inputs rotates coordinate outputs and
+    leaves feature logits invariant."""
+    cfg = get_arch("egnn").SMOKE_CONFIG
+    g = random_graph(RNG, 60, 200, cfg.d_feat_in, n_classes=cfg.n_classes)
+    params = EG.egnn_init(KEY, cfg)
+    Q = np.linalg.qr(RNG.normal(size=(3, 3)))[0].astype(np.float32)
+    t = RNG.normal(size=(3,)).astype(np.float32)
+    g2 = dataclasses.replace(g, coords=g.coords @ jnp.asarray(Q) + t)
+    l1, x1 = EG.egnn_forward(params, g, cfg)
+    l2, x2 = EG.egnn_forward(params, g2, cfg)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(x1 @ jnp.asarray(Q) + t),
+                               np.asarray(x2), rtol=2e-3, atol=2e-3)
+
+
+def test_egnn_padded_edges_are_noops():
+    """Adding masked (padded) edges must not change any output."""
+    cfg = get_arch("egnn").SMOKE_CONFIG
+    g = random_graph(RNG, 40, 100, cfg.d_feat_in, n_classes=cfg.n_classes)
+    params = EG.egnn_init(KEY, cfg)
+    g_pad = dataclasses.replace(
+        g,
+        senders=jnp.concatenate([g.senders, jnp.full((20,), -1, jnp.int32)]),
+        receivers=jnp.concatenate([g.receivers, jnp.full((20,), -1, jnp.int32)]),
+        edge_attr=jnp.zeros((120, 0), jnp.float32),
+        edge_mask=jnp.concatenate([g.edge_mask, jnp.zeros((20,), bool)]),
+    )
+    l1, x1 = EG.egnn_forward(params, g, cfg)
+    l2, x2 = EG.egnn_forward(params, g_pad, cfg)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), atol=1e-5)

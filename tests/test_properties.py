@@ -1,0 +1,138 @@
+"""Property-based (hypothesis) tests on system invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (
+    build_index, make_schedule, progressive_search, stage_dims,
+    truncated_search, rescore_candidates,
+)
+from repro.kernels import ref as kref
+from repro.layers.common import softmax_xent
+
+
+F32 = st.floats(-10, 10, width=32, allow_nan=False, allow_infinity=False)
+
+
+@given(
+    data=st.data(),
+    n=st.integers(8, 60),
+    d=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 6),
+)
+@settings(max_examples=30, deadline=None)
+def test_truncated_topk_is_sorted_and_valid(data, n, d, k):
+    db = data.draw(hnp.arrays(np.float32, (n, d), elements=F32))
+    q = data.draw(hnp.arrays(np.float32, (3, d), elements=F32))
+    s, i = truncated_search(jnp.asarray(q), jnp.asarray(db), dim=d,
+                            k=min(k, n), block_n=16)
+    s, i = np.asarray(s), np.asarray(i)
+    assert (np.diff(s, axis=1) >= -1e-5).all()          # ascending scores
+    assert ((i >= 0) & (i < n)).all()                    # valid indices
+    for row in i:                                        # no duplicates
+        assert len(set(row.tolist())) == len(row)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d_start=st.sampled_from([4, 8]),
+    mult=st.integers(1, 3),
+    k0=st.sampled_from([2, 4, 16]),
+)
+@settings(max_examples=25, deadline=None)
+def test_progressive_candidates_subset_of_db(seed, d_start, mult, k0):
+    rng = np.random.default_rng(seed)
+    d_max = d_start * 2**mult
+    n = 64
+    db = rng.normal(size=(n, d_max)).astype(np.float32)
+    q = rng.normal(size=(5, d_max)).astype(np.float32)
+    sched = make_schedule(d_start, d_max, k0)
+    s, c = progressive_search(jnp.asarray(q), jnp.asarray(db), sched,
+                              block_n=32)
+    c = np.asarray(c)
+    assert ((c >= 0) & (c < n)).all()
+    # final score equals true distance-ranked score of that candidate
+    s = np.asarray(s)
+    d2 = ((q[:, None] - db[c[:, 0]][:, None]) ** 2).sum(-1)[:, 0]
+    sq = (db[c[:, 0]] ** 2).sum(-1)
+    ip = np.einsum("qd,qd->q", q, db[c[:, 0]])
+    np.testing.assert_allclose(s[:, 0], sq - 2 * ip, rtol=2e-3, atol=2e-3)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(10, 50),
+    c=st.integers(2, 10),
+)
+@settings(max_examples=25, deadline=None)
+def test_rescore_never_invents_candidates(seed, n, c):
+    rng = np.random.default_rng(seed)
+    db = rng.normal(size=(n, 16)).astype(np.float32)
+    q = rng.normal(size=(4, 16)).astype(np.float32)
+    cand = rng.choice(n, size=(4, c)).astype(np.int32)
+    k = min(3, c)
+    _, out = rescore_candidates(jnp.asarray(q), jnp.asarray(db),
+                                jnp.asarray(cand), dim=16, k=k)
+    out = np.asarray(out)
+    for row_out, row_in in zip(out, cand):
+        assert set(row_out.tolist()) <= set(row_in.tolist())
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    v=st.integers(5, 50),
+    b=st.integers(1, 8),
+    l=st.integers(1, 6),
+)
+@settings(max_examples=25, deadline=None)
+def test_embedding_bag_ref_linearity(seed, v, b, l):
+    """bag(t1 + t2) == bag(t1) + bag(t2): the reduce is linear in the table."""
+    rng = np.random.default_rng(seed)
+    t1 = rng.normal(size=(v, 8)).astype(np.float32)
+    t2 = rng.normal(size=(v, 8)).astype(np.float32)
+    idx = rng.integers(0, v, (b, l)).astype(np.int32)
+    a = kref.embedding_bag_ref(jnp.asarray(t1 + t2), jnp.asarray(idx))
+    bsum = (kref.embedding_bag_ref(jnp.asarray(t1), jnp.asarray(idx))
+            + kref.embedding_bag_ref(jnp.asarray(t2), jnp.asarray(idx)))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bsum),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_softmax_xent_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(4, 7, 11)).astype(np.float32)
+    labels = rng.integers(0, 11, (4, 7)).astype(np.int32)
+    labels[0, 0] = -100   # ignored
+    loss, n = softmax_xent(jnp.asarray(logits), jnp.asarray(labels))
+    # numpy reference
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    p = e / e.sum(-1, keepdims=True)
+    valid = labels >= 0
+    nll = -np.log(p.reshape(-1, 11)[np.arange(labels.size),
+                                    np.maximum(labels, 0).reshape(-1)])
+    expected = nll.reshape(labels.shape)[valid].mean()
+    np.testing.assert_allclose(float(loss), expected, rtol=1e-4)
+    assert int(n) == valid.sum()
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    causal=st.booleans(),
+)
+@settings(max_examples=15, deadline=None)
+def test_attention_rows_are_convex_combinations(seed, causal):
+    """Attention output rows lie in the convex hull of V rows: for V >= 0,
+    outputs are >= 0 and <= max(V)."""
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(1, 2, 8, 4)).astype(np.float32)
+    k = rng.normal(size=(1, 2, 8, 4)).astype(np.float32)
+    v = rng.uniform(0, 1, size=(1, 2, 8, 4)).astype(np.float32)
+    o = kref.flash_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), causal=causal)
+    o = np.asarray(o)
+    assert (o >= -1e-5).all() and (o <= 1 + 1e-5).all()

@@ -1,0 +1,67 @@
+"""Schedule construction invariants (paper §III.D parameterization)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_schedule, validate_schedule
+
+
+def test_paper_example_schedule():
+    # (Ds=128, Dm=2048, K=16) from Table III row 2
+    s = make_schedule(128, 2048, 16)
+    assert [(st_.dim, st_.k) for st_ in s.stages] == [
+        (128, 16), (256, 8), (512, 4), (1024, 2), (2048, 1)]
+    assert s.stages[0].pool == -1
+    assert [st_.pool for st_ in s.stages[1:]] == [16, 8, 4, 2]
+
+
+def test_single_stage_when_equal_dims():
+    s = make_schedule(256, 256, 32)
+    assert len(s.stages) == 1
+    assert s.stages[0].dim == 256
+
+
+def test_final_stage_exact_dmax_non_power_of_two():
+    s = make_schedule(128, 3584, 64)   # paper Table III row 3
+    assert s.stages[-1].dim == 3584
+    assert s.stages[-1].k == 1
+    dims = [x.dim for x in s.stages]
+    assert dims == sorted(set(dims))
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        make_schedule(0, 128, 4)
+    with pytest.raises(ValueError):
+        make_schedule(256, 128, 4)
+    with pytest.raises(ValueError):
+        make_schedule(16, 128, 0)
+    s = make_schedule(64, 128, 4)
+    with pytest.raises(ValueError):
+        validate_schedule(s, n_db=2, d_emb=128)    # k0 > N
+    with pytest.raises(ValueError):
+        validate_schedule(s, n_db=100, d_emb=64)   # d_max > D
+
+
+@given(
+    d_start=st.sampled_from([16, 32, 64, 128, 256, 512]),
+    mult=st.integers(1, 6),
+    k0=st.sampled_from([1, 2, 4, 8, 16, 64, 256, 1024]),
+)
+@settings(max_examples=60, deadline=None)
+def test_schedule_properties(d_start, mult, k0):
+    d_max = d_start * (2 ** mult)
+    s = make_schedule(d_start, d_max, k0)
+    dims = [x.dim for x in s.stages]
+    ks = [x.k for x in s.stages]
+    # dims strictly increasing, start/end pinned
+    assert dims[0] == d_start and dims[-1] == d_max
+    assert all(a < b for a, b in zip(dims, dims[1:]))
+    # intermediate dims double
+    for a, b in zip(dims[:-1], dims[1:-1]):
+        assert b == 2 * a
+    # K non-increasing, >= 1, ends at final_k
+    assert all(a >= b for a, b in zip(ks, ks[1:]))
+    assert all(k >= 1 for k in ks)
+    assert ks[-1] == 1
+    validate_schedule(s, n_db=10**9, d_emb=d_max)
