@@ -20,8 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    build_index, make_schedule, progressive_search, stage_dims,
-    top1_accuracy, truncated_search,
+    make_schedule,
+    progressive_search,
+    top1_accuracy,
+    truncated_search,
 )
 from repro.rag import make_corpus
 
@@ -92,3 +94,20 @@ def print_csv(name: str, rows: List[Dict], cols: List[str]):
             f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
             for c in cols))
     print()
+
+
+def clamp_configs(grid, d_full: int):
+    """Clamp (trunc_dim, (d_start, d_max, k0)) rows to a dim budget and dedupe.
+
+    Small corpora (CI smoke runs) have fewer dims than the paper-scaled
+    grids assume; clamping keeps every config runnable and deduping drops
+    the rows clamping made identical.
+    """
+    out, seen = [], set()
+    for trunc_dim, (ds, dm, k0) in grid:
+        cfg = (min(trunc_dim, d_full),
+               (min(ds, d_full), min(dm, d_full), k0))
+        if cfg[1][0] <= cfg[1][1] and cfg not in seen:
+            seen.add(cfg)
+            out.append(cfg)
+    return out

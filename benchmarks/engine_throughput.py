@@ -1,0 +1,121 @@
+"""Retrieval-engine throughput benchmark: QPS and latency percentiles as a
+function of the bucket ladder.
+
+Replays a stream of single-query requests through ``RetrievalEngine``'s
+queue for several bucket configurations (the static batch shapes the engine
+pads to).  Reports per-config QPS, p50/p95 request latency, batch count, and
+padding waste, and writes a ``results/BENCH_engine.json`` record for CI/
+regression tracking.
+
+    PYTHONPATH=src python -m benchmarks.engine_throughput [--smoke]
+    PYTHONPATH=src python -m benchmarks.engine_throughput \
+        --docs 20000 --dim 256 --requests 512 --configs "1|8|32|1,2,4,8,16,32"
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def run_config(db, queries, buckets, *, d_start, k0, capacity):
+    from repro.engine import RetrievalEngine
+
+    eng = RetrievalEngine(
+        db.shape[1], d_start=d_start, k0=k0,
+        buckets=buckets, capacity=capacity,
+    )
+    eng.add_docs(db)
+    # Warm every bucket so steady-state numbers exclude XLA compiles.
+    eng.warmup()
+
+    t0 = time.perf_counter()
+    rids = [eng.submit(q) for q in queries]
+    eng.run_until_idle()
+    wall = time.perf_counter() - t0
+    for rid in rids:
+        assert eng.poll(rid) is not None
+    s = eng.stats.summary()
+    return {
+        "buckets": list(buckets),
+        "requests": len(queries),
+        "qps": len(queries) / wall,
+        "wall_s": wall,
+        "latency_ms_p50": s["latency_ms_p50"],
+        "latency_ms_p95": s["latency_ms_p95"],
+        "queue_ms_p50": s["queue_ms_p50"],
+        "n_batches": s["n_batches"],
+        "n_padded_slots": s["n_padded_slots"],
+        "n_compiles_steady": s["n_compiles"],   # 0 expected after warmup
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--d-start", type=int, default=32)
+    ap.add_argument("--k0", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--configs", type=str,
+                    default="1|8|32|1,2,4,8,16,32",
+                    help="'|'-separated bucket ladders, each comma-separated")
+    ap.add_argument("--out", type=str, default=None,
+                    help="output JSON path (default results/BENCH_engine.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast run for CI (overrides sizes)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.docs, args.dim, args.requests = 512, 64, 48
+        args.d_start, args.k0 = 8, 16
+        args.configs = "4|1,2,4,8"
+
+    from repro.rag import make_corpus
+
+    corpus = make_corpus(n_docs=args.docs, dim=args.dim,
+                         n_queries=args.requests, seed=args.seed)
+    configs = [tuple(int(x) for x in c.split(","))
+               for c in args.configs.split("|")]
+
+    print(f"# engine_throughput docs={args.docs} dim={args.dim} "
+          f"requests={args.requests} smoke={args.smoke}")
+    print("buckets,qps,p50_ms,p95_ms,batches,padded_slots")
+    records = []
+    for buckets in configs:
+        rec = run_config(
+            corpus.db, corpus.queries, buckets,
+            d_start=args.d_start, k0=args.k0, capacity=args.docs,
+        )
+        records.append(rec)
+        print(f"\"{','.join(map(str, buckets))}\","
+              f"{rec['qps']:.1f},{rec['latency_ms_p50']:.2f},"
+              f"{rec['latency_ms_p95']:.2f},{rec['n_batches']},"
+              f"{rec['n_padded_slots']}")
+
+    out_path = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "results", "BENCH_engine.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    payload = {
+        "benchmark": "engine_throughput",
+        "docs": args.docs,
+        "dim": args.dim,
+        "requests": args.requests,
+        "smoke": args.smoke,
+        "records": records,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.normpath(out_path)}")
+
+
+if __name__ == "__main__":
+    main()

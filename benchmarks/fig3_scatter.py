@@ -5,8 +5,6 @@ statistic: the fraction of progressive configurations that dominate the
 truncated frontier (above the accuracy-for-time curve), plus the pooled
 (paper-faithful) vs per-query variant comparison."""
 
-import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import (load_corpus, print_csv, progressive_row,
                                std_args, timed_median, truncated_row)

@@ -5,11 +5,8 @@ Also reproduces the §III.C PCA-vs-truncation comparison that led the paper
 to choose truncation.
 """
 
-import numpy as np
-import jax.numpy as jnp
 
-from benchmarks.common import (load_corpus, print_csv, std_args,
-                               timed_median, truncated_row)
+from benchmarks.common import load_corpus, print_csv, std_args, truncated_row
 
 PAPER_GTE = {16: 6.56, 32: 39.55, 64: 78.42, 128: 88.79, 256: 92.79,
              512: 93.81, 1024: 94.49, 2048: 94.82, 3072: 94.98, 3584: 95.02}
@@ -35,7 +32,6 @@ def run(args=None):
 
     # PCA vs truncation (paper §III.C: truncation slightly better, cheaper)
     from repro.core import fit_pca_power, pca_transform, truncated_search, top1_accuracy
-    import jax
     k = min(128, d_full)
     st = fit_pca_power(db, k, n_iter=6)
     db_p, q_p = pca_transform(st, db), pca_transform(st, q)

@@ -4,10 +4,9 @@ as truncated-at-d_max with substantially lower runtime (2x at mid dims,
 ~5x at full dims).
 """
 
-import jax.numpy as jnp
 
-from benchmarks.common import (load_corpus, print_csv, progressive_row,
-                               std_args, truncated_row)
+from benchmarks.common import (clamp_configs, load_corpus, print_csv,
+                               progressive_row, std_args, truncated_row)
 from repro.core import build_index, stage_dims, make_schedule
 
 # (trunc_dim, (d_start, d_max, k0)) pairs; scaled from the paper's
@@ -21,10 +20,11 @@ def configs_for(d_full: int):
     # scaled grid mirrors the paper's selection logic: fast aggressive
     # configs AND a generous matched-accuracy one ((Ds=Dm/2, K=128) plays
     # the role of the paper's (512, 3584, 16) row)
-    return [(128, (64, 128, 128)), (256, (64, 256, 128)),
+    grid = [(128, (64, 128, 128)), (256, (64, 256, 128)),
             (d_full // 2, (128, d_full // 2, 128)),
             (d_full, (128, d_full, 128)),
             (d_full, (d_full // 2, d_full, 64))]
+    return clamp_configs(grid, d_full)
 
 
 def run(args=None):

@@ -1,7 +1,7 @@
 """Paper Table V: truncated vs progressive, text-embedding-3-large regime."""
 
-from benchmarks.common import (load_corpus, print_csv, progressive_row,
-                               std_args, truncated_row)
+from benchmarks.common import (clamp_configs, load_corpus, print_csv,
+                               progressive_row, std_args, truncated_row)
 from repro.core import build_index, make_schedule, stage_dims
 
 
@@ -10,10 +10,11 @@ def configs_for(d_full: int):
         return [(256, (128, 256, 128)), (512, (256, 512, 16)),
                 (1024, (128, 2048, 32)), (2048, (128, 3072, 64)),
                 (3072, (256, 3072, 64))]
-    return [(96, (48, 96, 128)), (192, (96, 192, 64)),
+    grid = [(96, (48, 96, 128)), (192, (96, 192, 64)),
             (d_full // 2, (96, d_full // 2, 128)),
             (d_full, (96, d_full, 128)),
             (d_full, (d_full // 2, d_full, 64))]
+    return clamp_configs(grid, d_full)
 
 
 def run(args=None):

@@ -16,7 +16,6 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -34,8 +33,8 @@ def main():
     sched = make_schedule(64, 256, 128)
     idx = build_index(db, stage_dims(sched))
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((8,), ("data",))
     for mode in ("local", "global"):
         t0 = time.perf_counter()
         s, i = sharded_progressive_search(

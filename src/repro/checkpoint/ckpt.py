@@ -104,7 +104,7 @@ def all_steps(ckpt_dir: str):
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(ckpt_dir, name, "manifest.msgpack")):
                 out.append(int(name[5:]))
-    return out
+    return sorted(out)  # listdir order is filesystem-dependent
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

@@ -18,7 +18,13 @@ from repro.core.schedule import (
     make_schedule,
     validate_schedule,
 )
-from repro.core.index import build_index, index_for_schedule, prefix_norm_column, stage_dims
+from repro.core.index import (
+    build_index,
+    index_for_schedule,
+    prefix_norm_column,
+    prefix_squared_norms,
+    stage_dims,
+)
 from repro.core.truncated import (
     cosine_scores,
     l2_scores,
@@ -34,7 +40,8 @@ from repro.core.metrics import overlap_at_k, recall_at_k, top1_accuracy
 
 __all__ = [
     "ProgressiveSchedule", "Stage", "make_schedule", "validate_schedule",
-    "build_index", "index_for_schedule", "prefix_norm_column", "stage_dims",
+    "build_index", "index_for_schedule", "prefix_norm_column",
+    "prefix_squared_norms", "stage_dims",
     "l2_scores", "cosine_scores", "truncated_search", "rescore_candidates",
     "progressive_search", "progressive_search_pooled",
     "sharded_progressive_search",

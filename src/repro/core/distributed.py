@@ -30,7 +30,6 @@ Two modes:
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -13,7 +13,8 @@ axis gives each device a contiguous slab of the corpus.
 
 from __future__ import annotations
 
-from typing import Dict, Sequence
+import functools
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,23 +28,50 @@ def stage_dims(sched: ProgressiveSchedule) -> tuple:
     return tuple(s.dim for s in sched.stages)
 
 
+@functools.partial(jax.jit, static_argnames=("dims",))
+def prefix_squared_norms(db: Array, dims: tuple) -> Array:
+    """(N, len(dims)) prefix squared norms of ``db`` rows at each dim.
+
+    One cumulative-sum pass gives every prefix norm at once:
+    ``cumsq[:, j] = sum_{i<=j} db[:, i]^2``; prefix norm at dim k =
+    ``cumsq[:, k-1]``.  Jitted and standalone so mutable-corpus callers
+    (`repro.engine`) can compute norms for *appended rows only* instead of
+    rebuilding the whole index.
+    """
+    n, _ = db.shape
+    dims = tuple(int(x) for x in dims)
+    if not dims:
+        return jnp.zeros((n, 0), jnp.float32)
+    cumsq = jnp.cumsum(db.astype(jnp.float32) ** 2, axis=1)
+    cols = jnp.asarray([k - 1 for k in dims], jnp.int32)
+    return cumsq[:, cols]
+
+
 def build_index(
     db: Array,
     dims: Sequence[int],
     *,
+    valid: Optional[Array] = None,
     dtype=jnp.float32,
 ) -> Dict[str, Array]:
     """Build a search index over ``db`` with prefix norms at each dim in ``dims``.
 
     Args:
-      db:   (N, D) document embeddings.
-      dims: dimensionalities whose prefix squared norms to precompute.  Must be
-            sorted ascending; each must be <= D.
+      db:    (N, D) document embeddings.
+      dims:  dimensionalities whose prefix squared norms to precompute.  Must
+             be sorted ascending; each must be <= D.
+      valid: optional (N,) bool row-validity mask (mutable corpora: False rows
+             are deleted / unpopulated).  Stored in the index for the caller;
+             the search functions take it explicitly — pass
+             ``index['valid']`` as the ``valid=`` kwarg of
+             ``truncated_search`` / ``progressive_search`` to make masked
+             rows unreturnable.  Defaults to all-valid.
 
     Returns:
       dict with keys:
         'db'        : (N, D) embeddings (cast to ``dtype``)
         'sq_prefix' : (N, len(dims)) prefix squared norms, float32
+        'valid'     : (N,) bool row-validity mask
         'dims'      : (len(dims),) int32 — static metadata, kept as an array so
                       the pytree stays jit-friendly.
     """
@@ -52,17 +80,23 @@ def build_index(
     dims = tuple(int(x) for x in dims)
     if list(dims) != sorted(dims):
         raise ValueError(f"dims must be ascending, got {dims}")
+    if dims and dims[0] < 1:
+        # dim 0 would gather cumsum column -1, silently wrapping to the
+        # full-D norm under jit — reject eagerly like the other bounds
+        raise ValueError(f"dims must be >= 1, got {dims}")
     if dims and dims[-1] > d:
         raise ValueError(f"max dim {dims[-1]} exceeds embedding dim {d}")
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    else:
+        valid = jnp.asarray(valid, bool)
+        if valid.shape != (n,):
+            raise ValueError(f"valid mask shape {valid.shape} != ({n},)")
 
-    # One cumulative-sum pass gives every prefix norm at once:
-    # cumsq[:, j] = sum_{i<=j} db[:, i]^2 ; prefix norm at dim k = cumsq[:, k-1].
-    cumsq = jnp.cumsum(db.astype(jnp.float32) ** 2, axis=1)
-    cols = jnp.asarray([k - 1 for k in dims], jnp.int32)
-    sq_prefix = cumsq[:, cols] if dims else jnp.zeros((n, 0), jnp.float32)
     return {
         "db": db,
-        "sq_prefix": sq_prefix,
+        "sq_prefix": prefix_squared_norms(db, dims),
+        "valid": valid,
         "dims": jnp.asarray(dims, jnp.int32),
     }
 

@@ -58,7 +58,6 @@ def build_ivf(
     cents = kmeans(db, n_lists, key=key, n_iter=n_iter)
     s = T.l2_scores(db.astype(jnp.float32), cents)
     assign = jnp.asarray(jnp.argmin(s, axis=1))
-    n = db.shape[0]
     # Host-side packing (build time, not query time).
     import numpy as np
     assign_np = np.asarray(assign)

@@ -62,6 +62,7 @@ def progressive_search(
     *,
     sq_prefix: Optional[Array] = None,
     index_dims: Optional[tuple] = None,
+    valid: Optional[Array] = None,
     block_n: int = 65536,
     metric: str = "l2",
 ) -> Tuple[Array, Array]:
@@ -74,6 +75,8 @@ def progressive_search(
       sq_prefix:  optional (N, len(index_dims)) prefix squared norms
                   (``index['sq_prefix']`` from `repro.core.index.build_index`).
       index_dims: static tuple of dims matching sq_prefix's columns.
+      valid:      optional (N,) bool row-validity mask (mutable-corpus
+                  serving: deleted / unpopulated rows are unreturnable).
       block_n:    document tile for the stage-0 full scan.
       metric:     'l2' or 'cosine'.
 
@@ -87,6 +90,7 @@ def progressive_search(
         q, db,
         dim=s0.dim, k=s0.k,
         db_sq_at_dim=_prefix_sq(index, index_dims, s0.dim),
+        valid=valid,
         block_n=block_n, metric=metric,
     )
     for stage in sched.stages[1:]:
@@ -94,6 +98,7 @@ def progressive_search(
             q, db, cand,
             dim=stage.dim, k=stage.k,
             db_sq_at_dim=_prefix_sq(index, index_dims, stage.dim),
+            valid=valid,
             metric=metric,
         )
     return scores, cand
@@ -110,6 +115,7 @@ def progressive_search_pooled(
     *,
     sq_prefix: Optional[Array] = None,
     index_dims: Optional[tuple] = None,
+    valid: Optional[Array] = None,
     block_n: int = 65536,
     metric: str = "l2",
 ) -> Tuple[Array, Array]:
@@ -133,6 +139,7 @@ def progressive_search_pooled(
         q, db,
         dim=s0.dim, k=s0.k,
         db_sq_at_dim=_prefix_sq(index, index_dims, s0.dim),
+        valid=valid,
         block_n=block_n, metric=metric,
     )
 
@@ -152,12 +159,14 @@ def progressive_search_pooled(
             q, db, pool_tbl,
             dim=stage.dim, k=stage.k,
             db_sq_at_dim=_prefix_sq(index, index_dims, stage.dim),
+            valid=valid,
             metric=metric,
         )
     if scores is None:  # degenerate single-stage schedule
         scores, cand = T.rescore_candidates(
             q, db, cand, dim=sched.d_max, k=sched.final_k,
             db_sq_at_dim=_prefix_sq(index, index_dims, sched.d_max),
+            valid=valid,
             metric=metric,
         )
     return scores, cand

@@ -15,7 +15,7 @@ structure the Pallas kernel (`repro.kernels.distance_topk`) implements on-chip.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +71,7 @@ def truncated_search(
     dim: int,
     k: int = 1,
     db_sq_at_dim: Optional[Array] = None,
+    valid: Optional[Array] = None,
     block_n: int = 65536,
     metric: str = "l2",
 ) -> Tuple[Array, Array]:
@@ -87,6 +88,10 @@ def truncated_search(
       k:            neighbours to return (static).
       db_sq_at_dim: optional (N,) precomputed prefix squared norms at ``dim``
                     (ignored for cosine).
+      valid:        optional (N,) bool mask; rows where it is False (deleted
+                    or not-yet-populated buffer slots) are scored +inf and can
+                    never be returned.  When every scored row is invalid the
+                    corresponding index slots are -1.
       block_n:      document tile size (static).
       metric:       'l2' or 'cosine'.
 
@@ -111,16 +116,30 @@ def truncated_search(
                 db_sq_at_dim, (0, pad), constant_values=jnp.inf
             )
 
+    if valid is not None:
+        # Additive mask: +inf pushes invalid rows past every real candidate,
+        # and past the -1-index sentinels already in the top-k carry (ties at
+        # +inf break toward the carry's earlier columns), so a fully-invalid
+        # scan yields index -1, never a deleted row.
+        bias = jnp.where(valid, 0.0, jnp.inf).astype(jnp.float32)
+        if pad:
+            bias = jnp.pad(bias, (0, pad), constant_values=jnp.inf)
+        bias_blocks = bias.reshape(n_blocks, block_n)
+    else:
+        bias_blocks = None
+
     score_fn = _METRICS[metric]
 
     def scan_block(carry, blk):
         best_s, best_i = carry
-        db_blk, sq_blk, base = blk
+        db_blk, sq_blk, base, bias_blk = blk
         s = score_fn(qd, db_blk, sq_blk)  # (Q, block_n)
         if metric == "cosine" and pad:
             # padded rows have zero norm -> score 0; push them to +inf
-            valid = (base + jnp.arange(block_n)) < n
-            s = jnp.where(valid[None, :], s, jnp.inf)
+            in_range = (base + jnp.arange(block_n)) < n
+            s = jnp.where(in_range[None, :], s, jnp.inf)
+        if bias_blk is not None:
+            s = s + bias_blk[None, :]
         idx = base + jnp.arange(block_n, dtype=jnp.int32)[None, :]
         cat_s = jnp.concatenate([best_s, s], axis=1)
         cat_i = jnp.concatenate([best_i, jnp.broadcast_to(idx, s.shape)], axis=1)
@@ -148,7 +167,7 @@ def truncated_search(
         jnp.full((q.shape[0], k), -1, jnp.int32),
     )
     (best_s, best_i), _ = jax.lax.scan(
-        scan_block, init, (db_blocks, sq_blocks, bases)
+        scan_block, init, (db_blocks, sq_blocks, bases, bias_blocks)
     )
     return best_s, best_i
 
@@ -161,6 +180,7 @@ def rescore_candidates(
     dim: int,
     k: int,
     db_sq_at_dim: Optional[Array] = None,
+    valid: Optional[Array] = None,
     metric: str = "l2",
 ) -> Tuple[Array, Array]:
     """Exact k-NN of each query against *its own* candidate rows at ``dim`` dims.
@@ -175,6 +195,8 @@ def rescore_candidates(
             padded entries are scored +inf).
       dim:  scoring dimensionality (static).
       k:    candidates kept (static, k <= C).
+      valid: optional (N,) bool mask; candidates pointing at invalid rows are
+             scored +inf (guards against rows deleted between stages).
 
     Returns:
       (scores, indices): ((Q, k) float32, (Q, k) int32 — *global* db indices).
@@ -195,6 +217,13 @@ def rescore_candidates(
         qn = jnp.maximum(jnp.linalg.norm(qd, axis=-1, keepdims=True), 1e-12)
         gn = jnp.maximum(jnp.linalg.norm(gathered, axis=-1), 1e-12)
         s = -(ip / (qn * gn))
-    s = jnp.where(cand >= 0, s, jnp.inf)
+    keep = cand >= 0
+    if valid is not None:
+        keep = keep & valid[safe]
+    s = jnp.where(keep, s, jnp.inf)
     top_s, pos = jax.lax.top_k(-s, k)
-    return -top_s, jnp.take_along_axis(cand, pos, axis=1)
+    idx = jnp.take_along_axis(cand, pos, axis=1)
+    # Slots that only ever saw invalid candidates surface as -1, not as a
+    # stale (possibly deleted) row id.
+    idx = jnp.where(jnp.isfinite(-top_s) | (idx < 0), idx, -1)
+    return -top_s, idx

@@ -13,7 +13,7 @@ enough structure that a model's loss demonstrably decreases:
 
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

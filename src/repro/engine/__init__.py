@@ -1,0 +1,25 @@
+"""Retrieval serving engine: request queueing, shape-bucketed batching, and a
+mutable (add/delete) corpus on top of progressive search.
+
+Public API:
+  RetrievalEngine                — submit/poll/step serving loop + batch search
+  RetrievalResult, RequestStats  — per-request outputs and timing breakdown
+  EngineStats                    — aggregate counters / latency percentiles
+  DocStore                       — capacity-doubling device buffers + validity
+  BucketPolicy                   — static batch-size ladder
+"""
+
+from repro.engine.batching import BucketPolicy, PendingRequest, RequestQueue, pad_batch
+from repro.engine.engine import (
+    EngineStats,
+    RequestStats,
+    RetrievalEngine,
+    RetrievalResult,
+)
+from repro.engine.store import DocStore
+
+__all__ = [
+    "BucketPolicy", "PendingRequest", "RequestQueue", "pad_batch",
+    "DocStore", "EngineStats", "RequestStats", "RetrievalEngine",
+    "RetrievalResult",
+]

@@ -1,0 +1,110 @@
+"""Request coalescing for the retrieval engine: FIFO queue + static buckets.
+
+Serving traffic arrives as single queries at arbitrary times, but XLA wants a
+small, fixed set of batch shapes — every distinct (batch, corpus-capacity)
+pair is a separate compilation.  A ``BucketPolicy`` quantizes batch sizes to a
+static ladder (powers of two by default): the engine drains its queue in
+chunks, pads each chunk up to the nearest bucket, and therefore compiles each
+bucket exactly once per corpus capacity.  Padding rows are zero queries whose
+results are discarded — progressive search is per-query, so they cannot
+perturb real requests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Static batch-size ladder for shape-bucketed dispatch.
+
+    Attributes:
+      sizes: ascending, unique, positive batch sizes.  A pending chunk of
+             ``n`` requests is padded to the smallest bucket >= n; chunks
+             larger than the top bucket are split.
+    """
+
+    sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+
+    def __post_init__(self):
+        if not self.sizes:
+            raise ValueError("BucketPolicy needs at least one bucket size")
+        if any(s <= 0 for s in self.sizes):
+            raise ValueError(f"bucket sizes must be positive, got {self.sizes}")
+        if list(self.sizes) != sorted(set(self.sizes)):
+            raise ValueError(
+                f"bucket sizes must be ascending and unique, got {self.sizes}"
+            )
+
+    @property
+    def max_size(self) -> int:
+        return self.sizes[-1]
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n (top bucket for oversized n; caller splits)."""
+        if n <= 0:
+            raise ValueError(f"need a positive batch, got {n}")
+        for s in self.sizes:
+            if s >= n:
+                return s
+        return self.max_size
+
+    def plan(self, n: int) -> List[int]:
+        """Bucket sequence covering ``n`` requests.
+
+        Full top-size batches first (best MXU utilization), then one padded
+        bucket for the remainder — at most ``max_size - 1`` padded slots total.
+        """
+        if n <= 0:
+            return []
+        out = [self.max_size] * (n // self.max_size)
+        rem = n % self.max_size
+        if rem:
+            out.append(self.bucket_for(rem))
+        return out
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """A submitted query waiting for dispatch."""
+
+    request_id: int
+    query: np.ndarray           # (D,) float32
+    t_submit: float             # perf_counter seconds
+
+
+class RequestQueue:
+    """FIFO of pending requests (arrival order == dispatch order)."""
+
+    def __init__(self) -> None:
+        self._q: Deque[PendingRequest] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, req: PendingRequest) -> None:
+        self._q.append(req)
+
+    def pop_chunk(self, max_n: int) -> List[PendingRequest]:
+        """Pop up to ``max_n`` requests in arrival order."""
+        out = []
+        while self._q and len(out) < max_n:
+            out.append(self._q.popleft())
+        return out
+
+
+def pad_batch(queries: np.ndarray, bucket: int) -> np.ndarray:
+    """Zero-pad a (B, D) query batch up to (bucket, D)."""
+    b, d = queries.shape
+    if b > bucket:
+        raise ValueError(f"batch {b} exceeds bucket {bucket}")
+    if b == bucket:
+        return queries
+    out = np.zeros((bucket, d), queries.dtype)
+    out[:b] = queries
+    return out

@@ -1,0 +1,378 @@
+"""RetrievalEngine: queued, shape-bucketed progressive search over a mutable
+corpus.
+
+The serving decomposition (standard for RAG retrieval backends — see the
+surveys in PAPERS.md):
+
+    submit() ──> RequestQueue ──> step(): pop chunk, pad to bucket,
+                                          progressive_search over DocStore
+                                          ──> per-request results + stats
+
+* **Shape bucketing** — every dispatch shape is (bucket, capacity) for a
+  bucket from a static ladder, so XLA compiles each bucket exactly once per
+  corpus capacity; compile events are counted separately in the stats so
+  latency percentiles aren't polluted by tracing time.
+* **Mutable corpus** — ``add_docs`` / ``delete_docs`` mutate the DocStore's
+  capacity-doubling buffers; the validity mask rides through every search
+  stage, so a deleted doc can never be returned, even by an in-flight
+  candidate list.
+* **Observability** — per-request latency (queue + compute split), per-batch
+  padding waste, and a stage-by-stage timing profile
+  (``profile_stages``) for roofline work.
+
+The engine is synchronous and single-host by design: ``step()`` is the unit a
+driver loop (or an async wrapper thread) calls; `repro.launch.serve` shows the
+intended replay loop, and `benchmarks/engine_throughput.py` measures it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ProgressiveSchedule,
+    make_schedule,
+    progressive_search,
+    rescore_candidates,
+    stage_dims,
+    truncated_search,
+)
+from repro.engine.batching import BucketPolicy, PendingRequest, RequestQueue, pad_batch
+from repro.engine.store import DocStore
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Timing breakdown of one completed request."""
+
+    latency_ms: float          # submit -> result ready
+    queue_ms: float            # submit -> batch dispatch
+    compute_ms: float          # batch dispatch -> device done (shared by batch)
+    bucket: int                # static batch size the request rode in
+    batch_fill: int            # real requests in that batch (<= bucket)
+    compiled: bool             # this dispatch triggered an XLA compile
+
+
+@dataclasses.dataclass
+class RetrievalResult:
+    """Top-k neighbours for one request (k == engine.out_k)."""
+
+    request_id: int
+    scores: np.ndarray         # (out_k,) ascending; +inf marks empty slots
+    doc_ids: np.ndarray        # (out_k,) int32; -1 marks empty slots
+    stats: RequestStats
+
+
+class EngineStats:
+    """Aggregated engine counters + latency distributions.
+
+    Distributions are kept in bounded ring buffers (``window`` most recent
+    samples) so a long-lived serving loop doesn't grow memory per request;
+    counters are lifetime totals.
+    """
+
+    def __init__(self, window: int = 16384) -> None:
+        self.n_submitted = 0
+        self.n_completed = 0
+        self.n_batches = 0
+        self.n_compiles = 0
+        self.n_padded_slots = 0
+        self.n_docs_added = 0
+        self.n_docs_deleted = 0
+        self.latency_ms: Deque[float] = deque(maxlen=window)
+        self.queue_ms: Deque[float] = deque(maxlen=window)
+        self.compute_ms: Deque[float] = deque(maxlen=window)
+        self.bucket_counts: Dict[int, int] = {}
+
+    def record_batch(self, bucket: int, fill: int, compute_ms: float,
+                     compiled: bool) -> None:
+        self.n_batches += 1
+        self.n_padded_slots += bucket - fill
+        self.n_compiles += int(compiled)
+        if not compiled:
+            self.compute_ms.append(compute_ms)
+        self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
+
+    def record_request(self, st: RequestStats) -> None:
+        self.n_completed += 1
+        if st.compiled:
+            # compile-inflated latencies would skew steady-state p50/p95;
+            # compile events are tracked separately via n_compiles
+            return
+        self.latency_ms.append(st.latency_ms)
+        self.queue_ms.append(st.queue_ms)
+
+    @staticmethod
+    def _pct(xs, p: float) -> float:
+        return float(np.percentile(list(xs), p)) if xs else float("nan")
+
+    def summary(self) -> Dict:
+        return {
+            "n_submitted": self.n_submitted,
+            "n_completed": self.n_completed,
+            "n_batches": self.n_batches,
+            "n_compiles": self.n_compiles,
+            "n_padded_slots": self.n_padded_slots,
+            "n_docs_added": self.n_docs_added,
+            "n_docs_deleted": self.n_docs_deleted,
+            "latency_ms_p50": self._pct(self.latency_ms, 50),
+            "latency_ms_p95": self._pct(self.latency_ms, 95),
+            "queue_ms_p50": self._pct(self.queue_ms, 50),
+            "compute_ms_p50": self._pct(self.compute_ms, 50),
+            "bucket_counts": dict(sorted(self.bucket_counts.items())),
+        }
+
+
+class RetrievalEngine:
+    """Progressive-search serving engine over a mutable document corpus."""
+
+    def __init__(
+        self,
+        d_emb: int,
+        *,
+        schedule: Optional[ProgressiveSchedule] = None,
+        d_start: int = 32,
+        k0: int = 32,
+        final_k: int = 1,
+        buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+        capacity: int = 1024,
+        metric: str = "l2",
+        block_n: int = 65536,
+        max_unpolled: int = 65536,
+        dtype=jnp.float32,
+    ):
+        self.sched = schedule or make_schedule(
+            min(d_start, d_emb), d_emb, k0, final_k=final_k
+        )
+        if self.sched.d_max > d_emb:
+            raise ValueError(
+                f"schedule d_max={self.sched.d_max} exceeds d_emb={d_emb}"
+            )
+        self.dims = stage_dims(self.sched)
+        # actual result width: progressive_search returns stages[-1].k
+        # columns (a single-stage schedule keeps k0); slice to final_k so the
+        # engine's documented contract holds for every schedule shape
+        self.out_k = min(self.sched.final_k, self.sched.stages[-1].k)
+        self.metric = metric
+        self.block_n = int(block_n)
+        self.store = DocStore(d_emb, self.dims, capacity=capacity, dtype=dtype)
+        self.policy = BucketPolicy(tuple(int(b) for b in buckets))
+        self.stats = EngineStats()
+        self._queue = RequestQueue()
+        # Completed-but-unpolled results are evicted oldest-first (dicts are
+        # insertion-ordered) past max_unpolled, so clients that die between
+        # submit() and poll() can't leak memory in a long-lived serving loop
+        # (poll() then returns None, same as an unknown request id).
+        self._results: Dict[int, RetrievalResult] = {}
+        self._max_unpolled = int(max_unpolled)
+        self._next_rid = 0
+        self._seen_shapes: set = set()
+
+    # -- corpus mutation -----------------------------------------------------
+    def add_docs(self, vectors) -> np.ndarray:
+        """Append document embeddings; returns their stable doc ids."""
+        ids = self.store.add(vectors)
+        self.stats.n_docs_added += len(ids)
+        return ids
+
+    def delete_docs(self, ids) -> int:
+        """Tombstone docs by id; they become unreturnable immediately."""
+        n = self.store.delete(ids)
+        self.stats.n_docs_deleted += n
+        return n
+
+    @property
+    def n_docs(self) -> int:
+        return self.store.n_active
+
+    # -- request path --------------------------------------------------------
+    def submit(self, query) -> int:
+        """Enqueue one query vector ((D,) or (1, D)); returns a request id
+        for ``poll``."""
+        q = np.asarray(query, np.float32)
+        if q.ndim == 2 and q.shape[0] == 1:
+            q = q[0]
+        if q.ndim != 1 or q.shape[0] != self.store.d_emb:
+            raise ValueError(
+                f"expected one (D={self.store.d_emb},) query vector, got "
+                f"shape {q.shape}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.push(PendingRequest(rid, q, time.perf_counter()))
+        self.stats.n_submitted += 1
+        return rid
+
+    def poll(self, request_id: int) -> Optional[RetrievalResult]:
+        """Pop the result for ``request_id`` if its batch has run."""
+        return self._results.pop(request_id, None)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue)
+
+    def step(self) -> int:
+        """Dispatch one bucket-shaped batch from the queue head.
+
+        Returns the number of requests completed (0 if the queue is empty).
+        """
+        n = len(self._queue)
+        if n == 0:
+            return 0
+        bucket = self.policy.bucket_for(min(n, self.policy.max_size))
+        reqs = self._queue.pop_chunk(min(n, bucket))
+        t_dispatch = time.perf_counter()
+        qb = pad_batch(np.stack([r.query for r in reqs]), bucket)
+        scores, ids, compiled = self._dispatch(qb)
+        t_done = time.perf_counter()
+        compute_ms = (t_done - t_dispatch) * 1e3
+        self.stats.record_batch(bucket, len(reqs), compute_ms, compiled)
+        for j, r in enumerate(reqs):
+            st = RequestStats(
+                latency_ms=(t_done - r.t_submit) * 1e3,
+                queue_ms=(t_dispatch - r.t_submit) * 1e3,
+                compute_ms=compute_ms,
+                bucket=bucket,
+                batch_fill=len(reqs),
+                compiled=compiled,
+            )
+            self._results[r.request_id] = RetrievalResult(
+                r.request_id, scores[j], ids[j], st
+            )
+            self.stats.record_request(st)
+        while len(self._results) > self._max_unpolled:
+            self._results.pop(next(iter(self._results)))
+        return len(reqs)
+
+    def run_until_idle(self) -> int:
+        """Drain the whole queue; returns total requests completed."""
+        done = 0
+        while len(self._queue):
+            done += self.step()
+        return done
+
+    def warmup(self) -> None:
+        """Compile every bucket shape at the current corpus capacity.
+
+        Call after (re)building the corpus and before measuring latency:
+        compile events are excluded from the stats percentiles, and warming
+        here keeps steady-state dispatches compile-free.  Idempotent; cheap
+        when shapes are already cached.
+        """
+        probe = np.zeros((1, self.store.d_emb), np.float32)
+        for b in self.policy.sizes:
+            self._dispatch(np.repeat(probe, b, axis=0))
+
+    # -- synchronous batch API (pipeline / benchmarks) ------------------------
+    def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
+        """Bucketed search for a (B, D) query batch, bypassing the queue.
+
+        Results are identical to calling ``progressive_search`` directly on
+        the live corpus (padding queries are per-query-independent and
+        sliced off).
+        """
+        q = np.asarray(queries, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.shape[1] != self.store.d_emb:
+            raise ValueError(
+                f"query dim {q.shape[1]} != corpus dim {self.store.d_emb}"
+            )
+        if q.shape[0] == 0:
+            k = self.out_k
+            return (np.zeros((0, k), np.float32), np.zeros((0, k), np.int32))
+        out_s, out_i = [], []
+        off = 0
+        for bucket in self.policy.plan(q.shape[0]):
+            take = min(bucket, q.shape[0] - off)
+            s, i, _ = self._dispatch(pad_batch(q[off:off + take], bucket))
+            out_s.append(s[:take])
+            out_i.append(i[:take])
+            off += take
+        return np.concatenate(out_s), np.concatenate(out_i)
+
+    def _dispatch(self, q_pad: np.ndarray):
+        store = self.store
+        shape_key = (q_pad.shape[0], store.capacity)
+        compiled = shape_key not in self._seen_shapes
+        self._seen_shapes.add(shape_key)
+        s, i = progressive_search(
+            jnp.asarray(q_pad), store.db, self.sched,
+            sq_prefix=store.sq_prefix,
+            index_dims=self.dims,
+            valid=store.valid,
+            block_n=min(self.block_n, store.capacity),
+            metric=self.metric,
+        )
+        jax.block_until_ready((s, i))
+        # scores ascend, so the leading out_k columns are the top results
+        # (only a single-stage schedule is actually wider than out_k)
+        return (np.asarray(s[:, :self.out_k]),
+                np.asarray(i[:, :self.out_k]), compiled)
+
+    # -- observability --------------------------------------------------------
+    def profile_stages(self, queries, *, runs: int = 3) -> List[Dict]:
+        """Per-stage wall time for a representative batch (post-warmup).
+
+        Runs the schedule stage by stage (stage-0 full scan, then each
+        rescore) so the cost split across dims is visible — the fused
+        ``progressive_search`` program hides it.
+        """
+        q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+        store = self.store
+        block_n = min(self.block_n, store.capacity)
+        dims_t = self.dims
+        out = []
+        cand = None
+        for si, stage in enumerate(self.sched.stages):
+            col = dims_t.index(stage.dim)
+
+            if si == 0:
+                def fn(c=None, _s=stage):
+                    return truncated_search(
+                        q, store.db, dim=_s.dim, k=_s.k,
+                        db_sq_at_dim=store.sq_prefix[:, col],
+                        valid=store.valid, block_n=block_n,
+                        metric=self.metric,
+                    )
+            else:
+                def fn(c=cand, _s=stage):
+                    return rescore_candidates(
+                        q, store.db, c, dim=_s.dim, k=_s.k,
+                        db_sq_at_dim=store.sq_prefix[:, col],
+                        valid=store.valid, metric=self.metric,
+                    )
+            res = fn()
+            jax.block_until_ready(res)          # warmup/compile
+            ts = []
+            for _ in range(runs):
+                t0 = time.perf_counter()
+                res = fn()
+                jax.block_until_ready(res)
+                ts.append(time.perf_counter() - t0)
+            cand = res[1]
+            out.append({
+                "stage": si,
+                "dim": stage.dim,
+                "k": stage.k,
+                "pool": stage.pool,
+                "ms": float(np.median(ts) * 1e3),
+            })
+        return out
+
+    def describe(self) -> str:
+        return (
+            f"RetrievalEngine(docs={self.store.n_active}/"
+            f"cap={self.store.capacity}, buckets={self.policy.sizes}, "
+            f"metric={self.metric}, sched: {self.sched.describe()})"
+        )

@@ -1,0 +1,138 @@
+"""Mutable corpus storage: capacity-doubling device buffers + validity mask.
+
+The search path wants static shapes, but a serving corpus is mutable.  The
+classic resolution (dynamic arrays, amortized O(1) append) carries over to
+device memory: the store holds a (capacity, D) embedding buffer, the matching
+(capacity, n_dims) prefix-norm table, and a (capacity,) bool validity mask.
+Appends write into the tail with ``dynamic_update_slice``; when full, capacity
+doubles (one recompile of the search program per doubling — O(log N) distinct
+shapes over the corpus lifetime).  Deletes just clear the validity bit: the
+mask is threaded through stage-0 scoring and candidate rescoring
+(`repro.core.truncated`), so a dead row is unreturnable the moment the bit
+flips, with no compaction pause.
+
+Doc ids are append-only row positions (never reused), so ids held by callers
+— e.g. the RAG pipeline's doc-token table — stay stable across mutations.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import prefix_squared_norms
+
+Array = jax.Array
+
+
+class DocStore:
+    """Append-only document store with tombstone deletes."""
+
+    def __init__(
+        self,
+        d_emb: int,
+        dims: Sequence[int],
+        *,
+        capacity: int = 1024,
+        dtype=jnp.float32,
+    ):
+        if d_emb < 1:
+            raise ValueError(f"d_emb must be >= 1, got {d_emb}")
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.d_emb = int(d_emb)
+        self.dims: Tuple[int, ...] = tuple(int(x) for x in dims)
+        # prefix_squared_norms is jitted: an out-of-range dim would CLAMP its
+        # column gather (wrong norms, no error), so validate eagerly here.
+        if list(self.dims) != sorted(set(self.dims)):
+            raise ValueError(f"dims must be ascending/unique, got {self.dims}")
+        if self.dims and (self.dims[0] < 1 or self.dims[-1] > self.d_emb):
+            raise ValueError(
+                f"dims must lie in [1, {self.d_emb}], got {self.dims}"
+            )
+        self.capacity = int(capacity)
+        self._db = jnp.zeros((self.capacity, self.d_emb), dtype)
+        self._sq = jnp.zeros((self.capacity, len(self.dims)), jnp.float32)
+        self._valid = jnp.zeros((self.capacity,), bool)
+        self.size = 0          # high-water mark; ids are 0..size-1 forever
+        self.n_active = 0      # rows with the validity bit set
+        self.n_grows = 0
+        self.generation = 0    # bumped on every mutation
+
+    # -- views the search path consumes ------------------------------------
+    @property
+    def db(self) -> Array:
+        return self._db
+
+    @property
+    def sq_prefix(self) -> Array:
+        return self._sq
+
+    @property
+    def valid(self) -> Array:
+        return self._valid
+
+    def __len__(self) -> int:
+        return self.n_active
+
+    # -- mutation -----------------------------------------------------------
+    def _grow_to(self, new_capacity: int) -> None:
+        extra = new_capacity - self.capacity
+        self._db = jnp.pad(self._db, ((0, extra), (0, 0)))
+        self._sq = jnp.pad(self._sq, ((0, extra), (0, 0)))
+        self._valid = jnp.pad(self._valid, (0, extra))
+        self.capacity = new_capacity
+        self.n_grows += 1
+
+    def add(self, vectors) -> np.ndarray:
+        """Append rows; returns their (stable) int64 doc ids."""
+        vectors = jnp.asarray(vectors, self._db.dtype)
+        if vectors.ndim == 1:
+            vectors = vectors[None, :]
+        b, d = vectors.shape
+        if d != self.d_emb:
+            raise ValueError(f"got dim {d}, store holds dim {self.d_emb}")
+        new_cap = self.capacity
+        while self.size + b > new_cap:
+            new_cap *= 2
+        if new_cap != self.capacity:
+            self._grow_to(new_cap)
+
+        start = self.size
+        self._db = jax.lax.dynamic_update_slice(self._db, vectors, (start, 0))
+        self._sq = jax.lax.dynamic_update_slice(
+            self._sq, prefix_squared_norms(vectors, self.dims), (start, 0)
+        )
+        self._valid = jax.lax.dynamic_update_slice(
+            self._valid, jnp.ones((b,), bool), (start,)
+        )
+        self.size += b
+        self.n_active += b
+        self.generation += 1
+        return np.arange(start, start + b, dtype=np.int64)
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by id; returns how many were live before the call."""
+        ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
+        if ids.size == 0:
+            return 0
+        if ids.min() < 0 or ids.max() >= self.size:
+            raise IndexError(
+                f"doc ids must be in [0, {self.size}), got "
+                f"[{ids.min()}, {ids.max()}]"
+            )
+        dev_ids = jnp.asarray(ids)
+        n_live = int(self._valid[dev_ids].sum())
+        self._valid = self._valid.at[dev_ids].set(False)
+        self.n_active -= n_live
+        self.generation += 1
+        return n_live
+
+    def is_live(self, doc_id: int) -> bool:
+        if not 0 <= doc_id < self.size:
+            return False
+        return bool(self._valid[doc_id])

@@ -1,0 +1,16 @@
+"""Pallas-TPU API compatibility: jax >= 0.5 renamed ``TPUMemorySpace`` ->
+``MemorySpace`` and ``TPUCompilerParams`` -> ``CompilerParams``.
+
+Kernels import the names from here so the same code runs on the new API and
+on jax 0.4.x (where the enum members are callable the same way:
+``MemorySpace.VMEM(shape, dtype)`` builds a scratch MemoryRef).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["MemorySpace", "CompilerParams"]

@@ -39,7 +39,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams, MemorySpace
 
 Array = jax.Array
 
@@ -190,10 +190,10 @@ def l2_topk(
             jax.ShapeDtypeStruct((q.shape[0], k), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((block_q, k), jnp.float32),
-            pltpu.MemorySpace.VMEM((block_q, k), jnp.int32),
+            MemorySpace.VMEM((block_q, k), jnp.float32),
+            MemorySpace.VMEM((block_q, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

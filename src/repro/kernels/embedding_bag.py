@@ -22,12 +22,13 @@ fields padded to L — the standard TPU-friendly recsys batch layout).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import MemorySpace
 
 Array = jax.Array
 
@@ -109,10 +110,10 @@ def embedding_bag(
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(bp // block_b,),
-            in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+            in_specs=[pl.BlockSpec(memory_space=MemorySpace.ANY)],
             out_specs=pl.BlockSpec((block_b, d), lambda g, idx: (g, 0)),
             scratch_shapes=[
-                pltpu.MemorySpace.VMEM((2, d), jnp.float32),
+                MemorySpace.VMEM((2, d), jnp.float32),
                 pltpu.SemaphoreType.DMA((2,)),
             ],
         ),

@@ -13,7 +13,6 @@ not interpret-mode scaffolding.
 
 from __future__ import annotations
 
-import functools
 import os
 from typing import Optional, Tuple
 

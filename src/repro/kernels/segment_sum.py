@@ -25,12 +25,13 @@ unsorted inputs and builds indptr; `ref.segment_sum_ref` is the oracle.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import MemorySpace
 
 Array = jax.Array
 
@@ -128,13 +129,13 @@ def sorted_segment_sum(
             num_scalar_prefetch=1,
             grid=(num_segments // block_n,),
             in_specs=[
-                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
+                pl.BlockSpec(memory_space=MemorySpace.ANY),
             ],
             out_specs=pl.BlockSpec((block_n, d), lambda g, ip: (g, 0)),
             scratch_shapes=[
-                pltpu.MemorySpace.VMEM((2, edge_chunk, d), data.dtype),
-                pltpu.MemorySpace.VMEM((2, edge_chunk, 1), jnp.int32),
+                MemorySpace.VMEM((2, edge_chunk, d), data.dtype),
+                MemorySpace.VMEM((2, edge_chunk, 1), jnp.int32),
                 pltpu.SemaphoreType.DMA((2, 2)),
             ],
         ),

@@ -30,8 +30,6 @@ small for a single layer), so every FLOP is visible to cost analysis.
 """
 
 import argparse
-import dataclasses
-import functools
 import json
 import subprocess
 import sys
@@ -50,6 +48,8 @@ def _measure(fn, args, in_shardings, mesh) -> dict:
     with mesh:
         compiled = jax.jit(fn, in_shardings=in_shardings).lower(*args).compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):   # jax 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     coll, counts = parse_collective_bytes(compiled.as_text())
     # Memory traffic bounds:
     #  * boundary = arguments + outputs of the (per-layer) program — the
@@ -104,8 +104,7 @@ def _lm_layer_groups(cfg):
 
 def exact_lm_costs(arch: str, shape_name: str) -> dict:
     from repro.configs import get_arch
-    from repro.launch.inputs import (_LM_RULES_BY_KIND, _cache_logical_by_ndim,
-                                     lm_rules_for)
+    from repro.launch.inputs import _LM_RULES_BY_KIND, lm_rules_for
     from repro.launch.mesh import make_production_mesh
     from repro.models import lm as LM
     from repro.models.lm import _block, _layer_init, _layer_logical
@@ -169,7 +168,7 @@ def exact_lm_costs(arch: str, shape_name: str) -> dict:
             x_shard = ctx.sharding(("batch", None, "embed_act"), x.shape)
             if cfg.mla is not None:
                 from repro.layers import mla as M
-                from repro.layers.common import rmsnorm, ffn_apply
+                from repro.layers.common import rmsnorm
                 from repro.models.lm import _decode_block_tail
                 m = cfg.mla
                 ckv = SDS((b, shape.seq_len, m.kv_lora_rank), cdt)

@@ -29,7 +29,6 @@ import re
 import subprocess
 import sys
 import time
-import traceback
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12      # bf16
@@ -136,6 +135,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
                 mem_d[attr] = int(v)
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):   # jax 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm_bytes = float(cost.get("bytes accessed", 0.0))
 
@@ -202,7 +203,7 @@ def main():
                     json.dump(err, f, indent=2)
                 print(f"[dryrun]   FAILED (see {path})")
             else:
-                print(f"[dryrun]   ok")
+                print("[dryrun]   ok")
         print(f"[dryrun] sweep done, {failures} failures")
         sys.exit(1 if failures else 0)
 

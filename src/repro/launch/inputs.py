@@ -21,14 +21,12 @@ import dataclasses
 import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import family_of, get_arch
 from repro.configs.base import ShapeSpec
-from repro.core.distributed import build_sharded_search
 from repro.core.schedule import make_schedule
 from repro.models import egnn as EG
 from repro.models import lm as LM
@@ -36,7 +34,7 @@ from repro.models import recsys as RS
 from repro.models.graph import Graph
 from repro.optim import adamw_init
 from repro.optim.adamw import opt_state_logical
-from repro.sharding.specs import ShardingCtx, make_ctx
+from repro.sharding.specs import make_ctx
 from repro.train.loop import make_train_step
 
 SDS = jax.ShapeDtypeStruct

@@ -13,8 +13,7 @@ stacked-layer scan serves both layer kinds.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,7 @@ normalized top-k gates (DeepSeek-V2 / Qwen3 convention).
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ every aggregation; equivariance holds per masked subgraph.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ cache memory drops ~(period-1)/period vs naive full-length caches.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

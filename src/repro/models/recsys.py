@@ -16,7 +16,7 @@ embeddings instead of text-embedding vectors.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import RecsysConfig
 from repro.core.progressive import progressive_search
 from repro.core.schedule import ProgressiveSchedule, make_schedule
-from repro.layers.common import dense_init, dtype_of, mlp_apply, mlp_init, mlp_specs
+from repro.layers.common import dense_init, dtype_of, mlp_apply, mlp_init
 from repro.sharding.specs import NULL_CTX, ShardingCtx
 
 Array = jax.Array

@@ -15,8 +15,7 @@ Distributed-optimization hooks:
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,6 @@ accuracy-vs-dim profile matches gte-Qwen2-7B-instruct's Table II shape.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import numpy as np
 

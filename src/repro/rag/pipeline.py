@@ -1,20 +1,22 @@
 """End-to-end RAG serving pipeline (paper Fig. 1/2 realized as a service).
 
-    query tokens ──embed──> query vector ──progressive search──> top-k docs
+    query tokens ──embed──> query vector ──RetrievalEngine──> top-k docs
          └───────────────────────── prompt assembly ──> LM decode ──> answer
 
 The embedder is pluggable: production uses a trained encoder; the examples
 use either the LM's own token embeddings (mean-pooled) or a hash projection
 — the retrieval machinery is agnostic, it only sees vectors.
 
-Batched requests: every stage is vmapped/batched; the pipeline jits one
-program per (batch, prompt-length) bucket, the standard serving practice.
+Retrieval runs through `repro.engine.RetrievalEngine`: requests are coalesced
+into shape-bucketed batches (each bucket jits exactly once per corpus
+capacity), and the corpus is mutable — ``add_docs`` / ``delete_docs`` keep
+the doc-token table and the engine's embedding buffers in sync, with deleted
+docs unreturnable from the moment of deletion.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -22,13 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LMConfig
-from repro.core import (
-    ProgressiveSchedule,
-    build_index,
-    make_schedule,
-    progressive_search,
-    stage_dims,
-)
+from repro.core import ProgressiveSchedule, make_schedule
+from repro.engine import RetrievalEngine
 from repro.models import lm as LM
 
 Array = jax.Array
@@ -51,7 +48,7 @@ def mean_pool_embedder(params, cfg: LMConfig) -> Callable[[Array], Array]:
 
 
 class RAGPipeline:
-    """Retrieval-augmented generation over a document corpus."""
+    """Retrieval-augmented generation over a mutable document corpus."""
 
     def __init__(
         self,
@@ -64,34 +61,119 @@ class RAGPipeline:
         embedder: Optional[Callable] = None,
         d_start: int = 32,
         k0: int = 32,
+        buckets: Optional[Sequence[int]] = None,
+        engine: Optional[RetrievalEngine] = None,
     ):
         self.lm_params = lm_params
         self.cfg = lm_cfg
-        self.db = jnp.asarray(doc_embeddings, jnp.float32)
-        self.doc_tokens = jnp.asarray(doc_tokens, jnp.int32)
-        d_emb = self.db.shape[1]
+        # Host-side token table with capacity doubling, mirroring DocStore's
+        # growth so streaming add_docs stays amortized O(1) per append
+        # (a jnp.concatenate per add would copy the whole table every call).
+        self._tokens = np.asarray(doc_tokens, np.int32)
+        self._n_tokens = self._tokens.shape[0]
+        db = jnp.asarray(doc_embeddings, jnp.float32)
+        d_emb = db.shape[1]
         self.sched = schedule or make_schedule(min(d_start, d_emb), d_emb, k0)
-        self.index = build_index(self.db, stage_dims(self.sched))
+        if engine is not None:
+            if engine.store.size != 0:
+                # doc ids double as doc_tokens row numbers; a pre-populated
+                # engine would offset every id and silently fetch wrong text
+                raise ValueError(
+                    f"caller-supplied engine must be empty, holds "
+                    f"{engine.store.size} docs"
+                )
+            if engine.store.d_emb != d_emb:
+                raise ValueError(
+                    f"engine dim {engine.store.d_emb} != embedding dim {d_emb}"
+                )
+            # the engine's own schedule/buckets are what retrieve() runs —
+            # reject conflicting explicit args rather than silently ignoring
+            if schedule is not None and schedule != engine.sched:
+                raise ValueError(
+                    "explicit schedule conflicts with supplied engine's "
+                    "schedule; pass one or the other"
+                )
+            if buckets is not None and tuple(buckets) != engine.policy.sizes:
+                raise ValueError(
+                    f"explicit buckets {tuple(buckets)} conflict with "
+                    f"supplied engine's {engine.policy.sizes}"
+                )
+            self.sched = engine.sched
+            self.engine = engine
+        else:
+            self.engine = RetrievalEngine(
+                d_emb, schedule=self.sched,
+                capacity=max(1, db.shape[0]),
+                buckets=buckets if buckets is not None
+                else (1, 2, 4, 8, 16, 32),
+            )
+        self.engine.add_docs(db)
         self.embed = embedder or mean_pool_embedder(lm_params, lm_cfg)
 
-    def retrieve(self, query_tokens: Array) -> Tuple[Array, Array]:
+    # -- corpus mutation ------------------------------------------------------
+    @property
+    def doc_tokens(self) -> np.ndarray:
+        """(N, doc_len) int32 token rows, aligned with engine doc ids."""
+        return self._tokens[:self._n_tokens]
+
+    def add_docs(self, doc_embeddings: Array, doc_tokens: Array) -> np.ndarray:
+        """Append docs (embeddings + token text); returns their stable ids."""
+        embs = jnp.asarray(doc_embeddings, jnp.float32)
+        tokens = np.asarray(doc_tokens, np.int32)
+        # Validate before mutating the engine: a partial append would leave
+        # searchable ids with no (or the wrong) token text behind them.
+        if tokens.shape[0] != embs.shape[0]:
+            raise ValueError(
+                f"{embs.shape[0]} embeddings but {tokens.shape[0]} token rows"
+            )
+        if tokens.shape[1] != self._tokens.shape[1]:
+            raise ValueError(
+                f"doc_tokens width {tokens.shape[1]} != corpus width "
+                f"{self._tokens.shape[1]}"
+            )
+        ids = self.engine.add_docs(embs)
+        need = self._n_tokens + tokens.shape[0]
+        if need > self._tokens.shape[0]:
+            new_cap = max(2 * self._tokens.shape[0], need)
+            grown = np.zeros((new_cap, self._tokens.shape[1]), np.int32)
+            grown[:self._n_tokens] = self._tokens[:self._n_tokens]
+            self._tokens = grown
+        self._tokens[self._n_tokens:need] = tokens
+        self._n_tokens = need
+        return ids
+
+    def delete_docs(self, ids) -> int:
+        """Remove docs from retrieval (token rows stay; ids are stable)."""
+        return self.engine.delete_docs(ids)
+
+    # -- serving --------------------------------------------------------------
+    def retrieve(self, query_tokens: Array) -> Tuple[np.ndarray, np.ndarray]:
         """(B, S) query tokens -> ((B, k) scores, (B, k) doc indices)."""
         q = self.embed(query_tokens)
-        return progressive_search(
-            q, self.db, self.sched,
-            sq_prefix=self.index["sq_prefix"],
-            index_dims=stage_dims(self.sched),
-        )
+        return self.engine.search(q)
 
-    def assemble_prompts(self, query_tokens: Array, doc_idx: Array) -> Array:
-        """Prepend the top-1 retrieved document to each query."""
-        docs = self.doc_tokens[doc_idx[:, 0]]            # (B, doc_len)
-        return jnp.concatenate([docs, query_tokens], axis=1)
+    def assemble_prompts(self, query_tokens: Array, doc_idx) -> Array:
+        """Prepend the top-1 retrieved document to each query.
 
-    def serve(self, query_tokens: Array, *, max_new_tokens: int = 8) -> Dict:
-        """Full pipeline for a batch of requests; greedy decode."""
-        scores, idx = self.retrieve(query_tokens)
-        prompts = self.assemble_prompts(query_tokens, idx)
+        A -1 index (nothing retrievable, e.g. fully-deleted corpus) prepends
+        padding tokens instead of any document's text — deleted docs must not
+        leak into prompts through the sentinel.
+        """
+        top1 = np.asarray(doc_idx)[:, 0]
+        doc_len = self._tokens.shape[1]
+        if self._n_tokens == 0:
+            # zero-doc corpus: every index is the -1 sentinel; all padding
+            docs = np.zeros((top1.shape[0], doc_len), np.int32)
+        else:
+            docs = self.doc_tokens[np.maximum(top1, 0)]    # (B, doc_len)
+            docs = np.where((top1 >= 0)[:, None], docs, 0)
+        return jnp.concatenate(
+            [jnp.asarray(docs), jnp.asarray(query_tokens)], axis=1)
+
+    def generate(self, query_tokens: Array, doc_idx,
+                 *, max_new_tokens: int = 8) -> Array:
+        """Greedy-decode answers given already-retrieved doc indices."""
+        prompts = self.assemble_prompts(query_tokens, doc_idx)
         b, s = prompts.shape
         total = s + max_new_tokens
 
@@ -105,8 +187,14 @@ class RAGPipeline:
                 self.lm_params, cache, toks, s + i, self.cfg)
             toks = jnp.argmax(logits, axis=-1)[:, None]
             out.append(toks)
+        return jnp.concatenate(out, axis=1)
+
+    def serve(self, query_tokens: Array, *, max_new_tokens: int = 8) -> Dict:
+        """Full pipeline for a batch of requests; greedy decode."""
+        scores, idx = self.retrieve(query_tokens)
         return {
             "retrieved": idx,
             "retrieval_scores": scores,
-            "generated": jnp.concatenate(out, axis=1),
+            "generated": self.generate(
+                query_tokens, idx, max_new_tokens=max_new_tokens),
         }

@@ -32,7 +32,6 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Array = jax.Array

@@ -19,7 +19,6 @@ before the data-parallel reduction.
 from __future__ import annotations
 
 import collections
-import signal
 import threading
 import time
 from typing import Any, Callable, Dict, Iterator, Optional

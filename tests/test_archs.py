@@ -140,7 +140,6 @@ def test_all_archs_resolvable():
 
 def test_param_counts_match_published_scale():
     """Full configs land in the published parameter range."""
-    import repro.configs as C
     expect = {
         "starcoder2-3b": (2.5e9, 4e9),
         "gemma3-4b": (3e9, 5.5e9),

@@ -2,15 +2,24 @@
 invariants from the paper's §V analysis, PCA, IVF."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import (
-    build_index, fit_pca, fit_pca_power, ivf_progressive_search, ivf_search,
-    build_ivf, make_schedule, pca_transform, progressive_search,
-    progressive_search_pooled, rescore_candidates, stage_dims, top1_accuracy,
-    truncated_search, recall_at_k,
+    build_index,
+    fit_pca,
+    fit_pca_power,
+    ivf_progressive_search,
+    ivf_search,
+    build_ivf,
+    make_schedule,
+    pca_transform,
+    progressive_search,
+    progressive_search_pooled,
+    rescore_candidates,
+    stage_dims,
+    top1_accuracy,
+    truncated_search,
 )
 
 

@@ -9,7 +9,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -37,8 +36,8 @@ def test_sharded_search_matches_single_device():
         q = db[gt] + 0.05 * rng.normal(size=(Q, D)).astype(np.float32)
         sched = make_schedule(16, 128, 16)
         idx = build_index(db, stage_dims(sched))
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ('data',))
         sg, cg = sharded_progressive_search(
             mesh, jnp.asarray(q), jnp.asarray(db), sched,
             sq_prefix=idx['sq_prefix'], index_dims=stage_dims(sched),
@@ -76,8 +75,8 @@ def test_staged_search_matches_regular():
         gt = rng.choice(N, Q, replace=False)
         q = db[gt] + 0.2 * scales * rng.normal(size=(Q, D)).astype(np.float32)
         sched = make_schedule(32, 128, 32)
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ('data',))
         db0 = jnp.asarray(db[:, :32], jnp.bfloat16)
         sqp = jnp.sum(jnp.asarray(db[:, :32])**2, axis=1, keepdims=True)
         fn = build_sharded_search_staged(mesh, sched, N)
@@ -104,8 +103,8 @@ def test_moe_ep_matches_single_device():
         p = moe_init(key, 64, cfg, 'swiglu', jnp.float32)
         x = jax.random.normal(key, (4, 16, 64))
         y_ref, _ = moe_apply(p, x, cfg, 'swiglu')
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ('data', 'model'))
         ctx = make_ctx(mesh)
         with mesh:
             y_ep, _ = jax.jit(
@@ -133,8 +132,8 @@ def test_lm_train_step_lowers_on_2d_mesh():
         from repro.optim.adamw import opt_state_logical
 
         cfg = get_arch('mistral-nemo-12b').SMOKE_CONFIG
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4, 2), ('data', 'model'))
         ctx = make_ctx(mesh)
         params = jax.eval_shape(lambda: LM.init_lm(jax.random.PRNGKey(0), cfg))
         opt = jax.eval_shape(lambda: adamw_init(params))
@@ -157,6 +156,9 @@ def test_lm_train_step_lowers_on_2d_mesh():
         has_collective = any(op in txt for op in
                              ('all-reduce', 'all-gather', 'reduce-scatter'))
         assert has_collective, 'expected collectives in SPMD module'
-        print('OK compiled; flops=', compiled.cost_analysis()['flops'])
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):   # jax 0.4.x returns [dict]
+            ca = ca[0]
+        print('OK compiled; flops=', ca['flops'])
     """)
     assert "OK compiled" in out

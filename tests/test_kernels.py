@@ -2,7 +2,6 @@
 in interpret mode (CPU container; same kernel code targets TPU)."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -42,6 +41,29 @@ class TestDistanceTopK:
         tol = 1e-4 if dtype == np.float32 else 5e-2
         np.testing.assert_allclose(np.asarray(s), np.asarray(rs),
                                    rtol=tol, atol=tol)
+
+    def test_merge_select_equals_sort(self):
+        """The two in-kernel merge strategies are the same math; they must
+        agree exactly — including tie-breaking (duplicated db rows give exact
+        score ties) and on a db size that is not a multiple of block_n."""
+        d, k = 16, 6
+        base = RNG.normal(size=(40, d)).astype(np.float32)
+        db = np.concatenate([base, base[:13]])   # 53 rows: dup-row ties +
+        q = RNG.normal(size=(9, d)).astype(np.float32)  # pads both axes
+        s_sort, i_sort = l2_topk(jnp.asarray(q), jnp.asarray(db), k=k,
+                                 block_q=8, block_n=16, merge="sort",
+                                 interpret=True)
+        s_sel, i_sel = l2_topk(jnp.asarray(q), jnp.asarray(db), k=k,
+                               block_q=8, block_n=16, merge="select",
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(s_sort), np.asarray(s_sel),
+                                   rtol=0, atol=0)
+        # both strategies break ties toward the lower db index
+        np.testing.assert_array_equal(np.asarray(i_sort), np.asarray(i_sel))
+        # and match the reference oracle
+        rs, _ = ref.l2_topk_ref(jnp.asarray(q), jnp.asarray(db), k)
+        np.testing.assert_allclose(np.asarray(s_sort), np.asarray(rs),
+                                   rtol=1e-4, atol=1e-4)
 
     def test_precomputed_norms(self):
         q = jnp.asarray(RNG.normal(size=(8, 16)), jnp.float32)

@@ -5,10 +5,9 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_arch
-from repro.configs.base import LMConfig, MLAConfig, MoEConfig
+from repro.configs.base import MoEConfig
 from repro.models import lm as LM
 from repro.models import egnn as EG
 from repro.models.graph import random_graph

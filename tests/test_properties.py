@@ -1,14 +1,19 @@
 """Property-based (hypothesis) tests on system invariants."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
 from repro.core import (
-    build_index, make_schedule, progressive_search, stage_dims,
-    truncated_search, rescore_candidates,
+    make_schedule,
+    progressive_search,
+    truncated_search,
+    rescore_candidates,
 )
 from repro.kernels import ref as kref
 from repro.layers.common import softmax_xent
@@ -56,7 +61,6 @@ def test_progressive_candidates_subset_of_db(seed, d_start, mult, k0):
     assert ((c >= 0) & (c < n)).all()
     # final score equals true distance-ranked score of that candidate
     s = np.asarray(s)
-    d2 = ((q[:, None] - db[c[:, 0]][:, None]) ** 2).sum(-1)[:, 0]
     sq = (db[c[:, 0]] ** 2).sum(-1)
     ip = np.einsum("qd,qd->q", q, db[c[:, 0]])
     np.testing.assert_allclose(s[:, 0], sq - 2 * ip, rtol=2e-3, atol=2e-3)

@@ -1,6 +1,9 @@
 """Schedule construction invariants (paper §III.D parameterization)."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import make_schedule, validate_schedule

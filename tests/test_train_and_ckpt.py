@@ -1,7 +1,6 @@
 """Training loop, optimizer, and checkpointing behaviour."""
 
 import os
-import tempfile
 
 import numpy as np
 import jax
