@@ -1,0 +1,168 @@
+"""Index-backend comparison: QPS / latency / recall per backend and corpus size.
+
+For each corpus size, replays a single-query request stream through
+``RetrievalEngine`` once per backend (``flat`` / ``ivf`` / ``quantized``)
+and reports build time, steady-state QPS, p50/p95 request latency, and
+recall@k against exact full-dimensional search.  The corpus is the
+*clustered* synthetic workload (`repro.rag.make_clustered_corpus`) — the
+topical structure real document embeddings carry and the prior an IVF
+coarse quantizer exploits; `benchmarks/engine_throughput.py` covers the
+unclustered truncation-profile corpus.
+
+Writes ``results/BENCH_backends.json`` for CI/regression tracking.
+
+    PYTHONPATH=src python -m benchmarks.backend_comparison [--smoke]
+    PYTHONPATH=src python -m benchmarks.backend_comparison \
+        --sizes 8192,65536 --dim 256 --requests 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+BACKEND_OPTS = {
+    "flat": None,
+    "ivf": None,        # backend defaults: n_lists ~ N/64, n_probe=12, bf=2.0
+    "quantized": None,
+}
+
+
+def run_backend(corpus, backend, *, d_start, k0, k, buckets, exact_ids,
+                backend_opts=None):
+    import jax.numpy as jnp
+
+    from repro.core import overlap_at_k, recall_at_k
+    from repro.engine import RetrievalEngine
+
+    n_docs = corpus.db.shape[0]
+    eng = RetrievalEngine(
+        corpus.db.shape[1], d_start=d_start, k0=k0, final_k=k,
+        buckets=buckets, capacity=n_docs, backend=backend,
+        backend_opts=backend_opts,
+        # the replay drains the whole stream before polling: no result may
+        # be evicted, however large --requests is
+        max_unpolled=max(65536, len(corpus.queries)),
+    )
+    eng.add_docs(corpus.db)
+    t0 = time.perf_counter()
+    eng.maybe_rebuild(force=True)         # isolate the index build cost
+    build_s = time.perf_counter() - t0
+    eng.warmup()
+
+    t0 = time.perf_counter()
+    rids = [eng.submit(q) for q in corpus.queries]
+    eng.run_until_idle()
+    wall = time.perf_counter() - t0
+    results = [eng.poll(r) for r in rids]
+    ids = np.stack([r.doc_ids for r in results])
+
+    s = eng.stats.summary()
+    state = eng.index_state
+    return {
+        "backend": backend,
+        "docs": n_docs,
+        "build_s": build_s,
+        "qps": len(rids) / wall,
+        "latency_ms_p50": s["latency_ms_p50"],
+        "latency_ms_p95": s["latency_ms_p95"],
+        "recall_at_k_vs_exact": float(
+            overlap_at_k(jnp.asarray(ids), jnp.asarray(exact_ids), k)),
+        "recall_at_k_gt": float(
+            recall_at_k(jnp.asarray(ids),
+                        jnp.asarray(corpus.ground_truth), k)),
+        "state_shape_key": list(map(str, state.shape_key)) if state else None,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", type=str, default="8192,24576,65536",
+                    help="comma-separated corpus sizes")
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--d-start", type=int, default=64)
+    ap.add_argument("--k0", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--buckets", type=str, default="32")
+    ap.add_argument("--backends", type=str, default="flat,ivf,quantized")
+    ap.add_argument("--out", type=str, default=None,
+                    help="output JSON (default results/BENCH_backends.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast run for CI (overrides sizes)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.sizes, args.dim, args.requests = "512,1024", 64, 48
+        args.d_start, args.k0, args.k = 8, 32, 5
+
+    from repro.core import truncated_search
+    from repro.rag import make_clustered_corpus
+    import jax.numpy as jnp
+
+    sizes = [int(x) for x in args.sizes.split(",")]
+    buckets = tuple(int(x) for x in args.buckets.split(","))
+    backends = args.backends.split(",")
+
+    print(f"# backend_comparison dim={args.dim} requests={args.requests} "
+          f"k={args.k} smoke={args.smoke}")
+    print("docs,backend,build_s,qps,p50_ms,p95_ms,recall@k_vs_exact")
+    records = []
+    for n_docs in sizes:
+        corpus = make_clustered_corpus(
+            n_docs=n_docs, dim=args.dim, n_queries=args.requests,
+            seed=args.seed)
+        _, exact_ids = truncated_search(
+            jnp.asarray(corpus.queries), jnp.asarray(corpus.db),
+            dim=args.dim, k=args.k, block_n=min(n_docs, 65536))
+        exact_ids = np.asarray(exact_ids)
+        for backend in backends:
+            rec = run_backend(
+                corpus, backend, d_start=args.d_start, k0=args.k0, k=args.k,
+                buckets=buckets, exact_ids=exact_ids,
+                backend_opts=BACKEND_OPTS.get(backend),
+            )
+            records.append(rec)
+            print(f"{n_docs},{backend},{rec['build_s']:.2f},"
+                  f"{rec['qps']:.1f},{rec['latency_ms_p50']:.2f},"
+                  f"{rec['latency_ms_p95']:.2f},"
+                  f"{rec['recall_at_k_vs_exact']:.3f}")
+
+    # acceptance summary: ivf vs flat at the largest corpus size
+    largest = sizes[-1]
+    by = {r["backend"]: r for r in records if r["docs"] == largest}
+    if "ivf" in by and "flat" in by:
+        speedup = by["ivf"]["qps"] / max(by["flat"]["qps"], 1e-9)
+        print(f"# ivf vs flat @ {largest} docs: {speedup:.2f}x QPS, "
+              f"ivf recall@{args.k}={by['ivf']['recall_at_k_vs_exact']:.3f}")
+
+    out_path = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "results", "BENCH_backends.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    payload = {
+        "benchmark": "backend_comparison",
+        "dim": args.dim,
+        "requests": args.requests,
+        "k": args.k,
+        "d_start": args.d_start,
+        "k0": args.k0,
+        "sizes": sizes,
+        "smoke": args.smoke,
+        "records": records,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.normpath(out_path)}")
+
+
+if __name__ == "__main__":
+    main()

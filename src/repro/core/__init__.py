@@ -27,15 +27,27 @@ from repro.core.index import (
 )
 from repro.core.truncated import (
     cosine_scores,
+    inject_candidates,
     l2_scores,
     rescore_candidates,
     truncated_search,
 )
-from repro.core.progressive import progressive_search, progressive_search_pooled
+from repro.core.progressive import (
+    progressive_search,
+    progressive_search_pooled,
+    rescore_ladder,
+)
 from repro.core.distributed import sharded_progressive_search
 from repro.core.pca import (PCAState, fit_pca, fit_pca_power, fit_rotation,
                             pca_transform, rotate)
-from repro.core.ivf import build_ivf, ivf_progressive_search, ivf_search, kmeans
+from repro.core.ivf import (
+    balanced_assign,
+    build_ivf,
+    ivf_progressive_search,
+    ivf_progressive_search_sched,
+    ivf_search,
+    kmeans,
+)
 from repro.core.metrics import overlap_at_k, recall_at_k, top1_accuracy
 
 __all__ = [
@@ -43,10 +55,12 @@ __all__ = [
     "build_index", "index_for_schedule", "prefix_norm_column",
     "prefix_squared_norms", "stage_dims",
     "l2_scores", "cosine_scores", "truncated_search", "rescore_candidates",
+    "inject_candidates", "rescore_ladder",
     "progressive_search", "progressive_search_pooled",
     "sharded_progressive_search",
     "PCAState", "fit_pca", "fit_pca_power", "fit_rotation", "rotate",
     "pca_transform",
-    "build_ivf", "ivf_search", "ivf_progressive_search", "kmeans",
+    "balanced_assign", "build_ivf", "ivf_search", "ivf_progressive_search",
+    "ivf_progressive_search_sched", "kmeans",
     "top1_accuracy", "recall_at_k", "overlap_at_k",
 ]

@@ -15,14 +15,78 @@ below — which is the paper's "future work: integration with ANN" realized.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import truncated as T
+from repro.core.schedule import ProgressiveSchedule
 
 Array = jax.Array
+
+
+def balanced_assign(
+    choices: np.ndarray,
+    confidence_order: np.ndarray,
+    n_lists: int,
+    cap: int,
+) -> np.ndarray:
+    """Capacity-bounded list assignment (host-side, build time).
+
+    Plain nearest-centroid assignment over real corpora is heavily skewed
+    (k-means cells routinely reach 5-10x the mean occupancy), and the IVF
+    member table is dense: its width is the *longest* list, so every query
+    pays the skew in padded candidate slots.  Bounding every list at ``cap``
+    members keeps the table width — and therefore per-query scan cost —
+    near the mean instead of the max.
+
+    Rows are admitted to their most-preferred list with free capacity,
+    confident rows first (a row whose nearest centroid is far away loses
+    little by being displaced to its 2nd/3rd choice; a row close to its
+    centroid should stay).  Rows exhausting all ``m`` choices spill into
+    whatever lists still have spare capacity, lowest-indexed first (rare
+    under a sane cap; every list stays bounded at ``cap`` regardless).
+
+    Args:
+      choices:          (N, m) int centroid preference order per row.
+      confidence_order: (N,) row indices, most-confident first.
+      n_lists:          number of lists.
+      cap:              max members per list; needs n_lists * cap >= N.
+
+    Returns:
+      (N,) int32 list assignment.
+    """
+    n, m = choices.shape
+    if n_lists * cap < n:
+        raise ValueError(f"cap {cap} x {n_lists} lists cannot hold {n} rows")
+    assign = np.full(n, -1, np.int32)
+    counts = np.zeros(n_lists, np.int64)
+    rank = np.empty(n, np.int64)
+    rank[confidence_order] = np.arange(n)
+    remaining = confidence_order.copy()
+    for j in range(m):
+        if remaining.size == 0:
+            break
+        pref = choices[remaining, j]
+        # stable-sort by list, keeping confidence order within each list,
+        # then admit each list's first (cap - occupancy) rows
+        by_list = np.argsort(pref, kind="stable")
+        pref_sorted = pref[by_list]
+        group_start = np.searchsorted(pref_sorted, pref_sorted)
+        pos_in_group = np.arange(remaining.size) - group_start
+        admit = pos_in_group < (cap - counts[pref_sorted])
+        rows = remaining[by_list[admit]]
+        assign[rows] = pref_sorted[admit]
+        np.add.at(counts, pref_sorted[admit], 1)
+        remaining = remaining[by_list[~admit]]
+        remaining = remaining[np.argsort(rank[remaining])]  # restore order
+    if remaining.size:
+        free = np.repeat(np.arange(n_lists), cap - counts)
+        assign[remaining] = free[: remaining.size].astype(np.int32)
+    return assign
 
 
 @functools.partial(jax.jit, static_argnames=("n_lists", "n_iter"))
@@ -75,12 +139,15 @@ def build_ivf(
 
 @functools.partial(jax.jit, static_argnames=("n_probe", "k", "dim"))
 def ivf_search(
-    q: Array, db: Array, ivf: Dict[str, Array], *, n_probe: int, k: int, dim: int | None = None
+    q: Array, db: Array, ivf: Dict[str, Array], *, n_probe: int, k: int,
+    dim: int | None = None, valid: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """IVF-Flat search: probe ``n_probe`` nearest lists, exact-scan their members.
 
     Args:
-      q:   (Q, D) queries.  dim: optional truncation for probing+scan.
+      q:     (Q, D) queries.  dim: optional truncation for probing+scan.
+      valid: optional (N,) bool row mask (mutable corpora): candidates whose
+             bit is clear are scored +inf and can never be returned.
     Returns:
       ((Q, k) scores, (Q, k) int32 indices).
     """
@@ -91,7 +158,7 @@ def ivf_search(
     _, probe = jax.lax.top_k(-cs, n_probe)           # (Q, n_probe)
     members = ivf["lists"][probe]                    # (Q, n_probe, max_len)
     cand = members.reshape(q.shape[0], -1)           # (Q, n_probe*max_len)
-    return T.rescore_candidates(qd, db[:, :d], cand, dim=d, k=k)
+    return T.rescore_candidates(qd, db[:, :d], cand, dim=d, k=k, valid=valid)
 
 
 @functools.partial(jax.jit, static_argnames=("n_probe", "k", "d_probe", "d_final"))
@@ -104,11 +171,70 @@ def ivf_progressive_search(
     k: int,
     d_probe: int,
     d_final: int,
+    valid: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """IVF probing at truncated dims + exact rescore at full dims.
 
     Realizes the paper's future-work suggestion: ANN candidate generation
     composed with progressive dimensional refinement.
     """
-    _, cand = ivf_search(q, db, ivf, n_probe=n_probe, k=max(k * 8, k), dim=d_probe)
-    return T.rescore_candidates(q, db, cand, dim=d_final, k=k)
+    _, cand = ivf_search(q, db, ivf, n_probe=n_probe, k=max(k * 8, k),
+                         dim=d_probe, valid=valid)
+    return T.rescore_candidates(q, db, cand, dim=d_final, k=k, valid=valid)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sched", "n_probe", "index_dims", "metric")
+)
+def ivf_progressive_search_sched(
+    q: Array,
+    db: Array,
+    centroids: Array,
+    lists: Array,
+    sched: ProgressiveSchedule,
+    *,
+    n_probe: int,
+    valid: Optional[Array] = None,
+    sq_prefix: Optional[Array] = None,
+    index_dims: Optional[tuple] = None,
+    extra_cand: Optional[Array] = None,
+    metric: str = "l2",
+) -> Tuple[Array, Array]:
+    """Full progressive schedule with IVF probing replacing the stage-0 scan.
+
+    Probing runs at the centroids' own dimensionality (the space they were
+    clustered in — build/search consistency keeps an exact-match query
+    probing the cell its document was assigned to); probed members — plus
+    optional ``extra_cand`` rows, e.g. the engine's un-indexed tail window —
+    are rescored through the schedule's stages at full precision, exactly
+    like the flat path after stage 0.
+
+    Args:
+      centroids:  (n_lists, d_probe) coarse quantizer; d_probe <= q dim.
+      lists:      (n_lists, max_len) int32 member table, -1 padded.
+      extra_cand: optional (E,) int32 ids injected into every query's
+                  candidate list (-1 padded); must be disjoint from list
+                  members so the final top-k carries no duplicate ids.
+      valid:      optional (N,) bool row mask threaded through every stage.
+    """
+    from repro.core.progressive import rescore_ladder
+
+    s0 = sched.stages[0]
+    score_fn = T._METRICS[metric]
+
+    d_probe = centroids.shape[1]
+    cs = score_fn(q[:, :d_probe], centroids)          # (Q, n_lists)
+    _, probe = jax.lax.top_k(-cs, min(n_probe, centroids.shape[0]))
+    cand = lists[probe].reshape(q.shape[0], -1)       # (Q, n_probe*max_len)
+    cand = T.inject_candidates(cand, extra_cand)
+    if cand.shape[1] < s0.k:
+        # top_k needs k <= C; -1 columns score +inf and change nothing
+        cand = jnp.pad(cand, ((0, 0), (0, s0.k - cand.shape[1])),
+                       constant_values=-1)
+    # the probed members replace the stage-0 full scan; every schedule
+    # stage (stage 0 included) is now a rescore over them
+    return rescore_ladder(
+        q, db, cand, sched.stages,
+        sq_prefix=sq_prefix, index_dims=index_dims,
+        valid=valid, metric=metric,
+    )

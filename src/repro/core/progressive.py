@@ -51,6 +51,37 @@ def _prefix_sq(index: Optional[Dict[str, Array]], dims: Optional[tuple], dim: in
     return index["sq_prefix"][:, dims.index(int(dim))]
 
 
+def rescore_ladder(
+    q: Array,
+    db: Array,
+    cand: Array,
+    stages,
+    *,
+    sq_prefix: Optional[Array] = None,
+    index_dims: Optional[tuple] = None,
+    valid: Optional[Array] = None,
+    metric: str = "l2",
+    scores: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Chain ``rescore_candidates`` over ``stages`` — the refinement ladder
+    every search path shares once it has a candidate table (flat after its
+    stage-0 scan, IVF after probing, quantized after the int8 scan).
+
+    ``scores`` is returned unchanged when ``stages`` is empty (degenerate
+    single-stage schedules).
+    """
+    index = {"sq_prefix": sq_prefix} if sq_prefix is not None else None
+    for stage in stages:
+        scores, cand = T.rescore_candidates(
+            q, db, cand,
+            dim=stage.dim, k=stage.k,
+            db_sq_at_dim=_prefix_sq(index, index_dims, stage.dim),
+            valid=valid,
+            metric=metric,
+        )
+    return scores, cand
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("sched", "index_dims", "block_n", "metric"),
@@ -93,15 +124,11 @@ def progressive_search(
         valid=valid,
         block_n=block_n, metric=metric,
     )
-    for stage in sched.stages[1:]:
-        scores, cand = T.rescore_candidates(
-            q, db, cand,
-            dim=stage.dim, k=stage.k,
-            db_sq_at_dim=_prefix_sq(index, index_dims, stage.dim),
-            valid=valid,
-            metric=metric,
-        )
-    return scores, cand
+    return rescore_ladder(
+        q, db, cand, sched.stages[1:],
+        sq_prefix=sq_prefix, index_dims=index_dims,
+        valid=valid, metric=metric, scores=scores,
+    )
 
 
 @functools.partial(

@@ -21,7 +21,7 @@ it absorbs truncation noise.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,21 +32,29 @@ from repro.core.schedule import ProgressiveSchedule
 Array = jax.Array
 
 
-def quantize_per_dim(x: Array) -> Tuple[Array, Array]:
+def quantize_per_dim(x: Array, valid: Optional[Array] = None) -> Tuple[Array, Array]:
     """Symmetric per-dimension int8 quantization.
 
-    Returns (q (N, D) int8, scale (D,) f32) with x ≈ q * scale.
+    Returns (q (N, D) int8, scale (D,) f32) with x ≈ q * scale.  When a
+    ``valid`` row mask is given, the scale is fit on live rows only (dead /
+    unpopulated buffer slots would otherwise drag the grid toward zero), but
+    codes are still emitted for every row.
     """
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=0)
+    ax = jnp.abs(x.astype(jnp.float32))
+    if valid is not None:
+        ax = jnp.where(valid[:, None], ax, 0.0)
+    amax = jnp.max(ax, axis=0)
     scale = jnp.maximum(amax, 1e-12) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
-def build_quantized_index(db: Array, sched: ProgressiveSchedule) -> Dict[str, Array]:
+def build_quantized_index(
+    db: Array, sched: ProgressiveSchedule, *, valid: Optional[Array] = None
+) -> Dict[str, Array]:
     """Stage-0 int8 block + full-precision corpus + stage-0 squared norms."""
     ds = sched.stages[0].dim
-    q0, scale0 = quantize_per_dim(db[:, :ds])
+    q0, scale0 = quantize_per_dim(db[:, :ds], valid)
     deq_sq = jnp.sum((q0.astype(jnp.float32) * scale0) ** 2, axis=1)
     return {
         "db": db,
@@ -82,17 +90,53 @@ def _scaled_space_scores(q: Array, idx: Dict[str, Array]) -> Array:
 def quantized_progressive_search(
     q: Array, idx: Dict[str, Array], sched: ProgressiveSchedule,
     *, metric: str = "l2",
+    db: Optional[Array] = None,
+    valid: Optional[Array] = None,
+    row_limit: Optional[Array] = None,
+    extra_cand: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """Progressive search with an int8 stage-0 block.
 
     Stage 0 ranks with quantized scores; every later stage rescores the
     survivors at full precision, so the final results carry exact distances.
+
+    Mutable-corpus extensions (all optional, used by the engine's
+    ``QuantizedProgressiveBackend``):
+
+      db:         rescore buffer when the index's ``db`` snapshot is stale
+                  (rows < the snapshot length are append-only identical, so
+                  the stage-0 codes stay exact for the rows they cover).
+      valid:      (N,) bool row mask over ``db``; invalid rows are scored
+                  +inf at stage 0 and at every rescore.
+      row_limit:  scalar — rows >= it are excluded from stage-0 ranking
+                  (their codes predate them); pair with ``extra_cand`` to
+                  keep them reachable.
+      extra_cand: (E,) int32 ids injected after stage 0 (-1 padded), rescored
+                  at full precision; must be disjoint from stage-0 rows.
     """
+    from repro.core.progressive import rescore_ladder
+
     s0 = sched.stages[0]
+    rescore_db = idx["db"] if db is None else db
     scores = _scaled_space_scores(q, idx)
-    neg, cand = jax.lax.top_k(-scores, s0.k)
-    scores, cand = -neg, cand.astype(jnp.int32)
-    for stage in sched.stages[1:]:
-        scores, cand = T.rescore_candidates(
-            q, idx["db"], cand, dim=stage.dim, k=stage.k, metric=metric)
-    return scores, cand
+    n0 = scores.shape[1]
+    keep = jnp.ones((n0,), bool)
+    if valid is not None:
+        keep = keep & valid[:n0]
+    if row_limit is not None:
+        keep = keep & (jnp.arange(n0) < row_limit)
+    scores = jnp.where(keep[None, :], scores, jnp.inf)
+    neg, cand = jax.lax.top_k(-scores, min(s0.k, n0))
+    # fully-masked slots must surface the -1 sentinel, not row 0
+    cand = jnp.where(jnp.isfinite(-neg), cand.astype(jnp.int32), -1)
+    scores = -neg
+    cand = T.inject_candidates(cand, extra_cand)
+    rest = sched.stages[1:]
+    if not rest and (extra_cand is not None or valid is not None):
+        # single-stage schedule: still need one exact pass so injected /
+        # masked candidates carry full-precision scores and ranking
+        rest = (s0,)
+    return rescore_ladder(
+        q, rescore_db, cand, rest,
+        valid=valid, metric=metric, scores=scores,
+    )

@@ -172,6 +172,22 @@ def truncated_search(
     return best_s, best_i
 
 
+def inject_candidates(cand: Array, extra: Optional[Array]) -> Array:
+    """Append a shared (E,) id window to every query's candidate table.
+
+    ``extra`` is -1-padded (scored +inf by ``rescore_candidates``) and must
+    be disjoint from ``cand``'s ids so the final top-k carries no
+    duplicates; used for the engine's un-indexed tail rows.
+    """
+    if extra is None:
+        return cand
+    return jnp.concatenate(
+        [cand,
+         jnp.broadcast_to(extra[None, :], (cand.shape[0], extra.shape[0]))],
+        axis=1,
+    )
+
+
 def rescore_candidates(
     q: Array,
     db: Array,

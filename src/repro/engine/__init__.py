@@ -1,12 +1,17 @@
 """Retrieval serving engine: request queueing, shape-bucketed batching, and a
-mutable (add/delete) corpus on top of progressive search.
+mutable (add/delete) corpus on top of pluggable index backends.
 
 Public API:
   RetrievalEngine                — submit/poll/step serving loop + batch search
+                                   (``backend='flat'|'ivf'|'quantized'``,
+                                   rebuild/compaction lifecycle)
   RetrievalResult, RequestStats  — per-request outputs and timing breakdown
   EngineStats                    — aggregate counters / latency percentiles
   DocStore                       — capacity-doubling device buffers + validity
+                                   mask + tombstone compaction
   BucketPolicy                   — static batch-size ladder
+
+The backend protocol and implementations live in `repro.index_backends`.
 """
 
 from repro.engine.batching import BucketPolicy, PendingRequest, RequestQueue, pad_batch
@@ -17,9 +22,10 @@ from repro.engine.engine import (
     RetrievalResult,
 )
 from repro.engine.store import DocStore
+from repro.index_backends import StoreStats
 
 __all__ = [
     "BucketPolicy", "PendingRequest", "RequestQueue", "pad_batch",
     "DocStore", "EngineStats", "RequestStats", "RetrievalEngine",
-    "RetrievalResult",
+    "RetrievalResult", "StoreStats",
 ]

@@ -16,21 +16,32 @@ surveys in PAPERS.md):
   capacity-doubling buffers; the validity mask rides through every search
   stage, so a deleted doc can never be returned, even by an in-flight
   candidate list.
+* **Pluggable index backends** — the search structure is an
+  `repro.index_backends.IndexBackend` (``backend=`` config: ``'flat'``,
+  ``'ivf'``, ``'quantized'``).  Backends declare staleness from the store's
+  mutation counters; the engine rebuilds at a safe point between batches
+  (synchronously, or on a background thread with ``rebuild_mode=
+  'background'``) and atomically swaps the index state.  A rebuild doubles
+  as tombstone compaction: past ``compact_dead_frac`` dead rows the store's
+  buffers are rebuilt without tombstones (live doc ids are REMAPPED —
+  ``on_remap`` callbacks let id-holding callers follow).
 * **Observability** — per-request latency (queue + compute split), per-batch
-  padding waste, and a stage-by-stage timing profile
-  (``profile_stages``) for roofline work.
+  padding waste, rebuild/compaction counts, and a stage-by-stage timing
+  profile (``profile_stages``) for roofline work.
 
 The engine is synchronous and single-host by design: ``step()`` is the unit a
 driver loop (or an async wrapper thread) calls; `repro.launch.serve` shows the
-intended replay loop, and `benchmarks/engine_throughput.py` measures it.
+intended replay loop, and `benchmarks/engine_throughput.py` /
+`benchmarks/backend_comparison.py` measure it.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,13 +51,13 @@ import jax.numpy as jnp
 from repro.core import (
     ProgressiveSchedule,
     make_schedule,
-    progressive_search,
     rescore_candidates,
     stage_dims,
     truncated_search,
 )
 from repro.engine.batching import BucketPolicy, PendingRequest, RequestQueue, pad_batch
 from repro.engine.store import DocStore
+from repro.index_backends import IndexBackend, IndexState, make_backend
 
 Array = jax.Array
 
@@ -89,6 +100,8 @@ class EngineStats:
         self.n_padded_slots = 0
         self.n_docs_added = 0
         self.n_docs_deleted = 0
+        self.n_rebuilds = 0
+        self.n_compactions = 0
         self.latency_ms: Deque[float] = deque(maxlen=window)
         self.queue_ms: Deque[float] = deque(maxlen=window)
         self.compute_ms: Deque[float] = deque(maxlen=window)
@@ -125,12 +138,62 @@ class EngineStats:
             "n_padded_slots": self.n_padded_slots,
             "n_docs_added": self.n_docs_added,
             "n_docs_deleted": self.n_docs_deleted,
+            "n_rebuilds": self.n_rebuilds,
+            "n_compactions": self.n_compactions,
             "latency_ms_p50": self._pct(self.latency_ms, 50),
             "latency_ms_p95": self._pct(self.latency_ms, 95),
             "queue_ms_p50": self._pct(self.queue_ms, 50),
             "compute_ms_p50": self._pct(self.compute_ms, 50),
             "bucket_counts": dict(sorted(self.bucket_counts.items())),
         }
+
+
+class _BackgroundBuild:
+    """One-slot background index build: launch, poll, adopt.
+
+    jax arrays are immutable, so a build thread works on a consistent
+    snapshot of the store's buffers while the main thread keeps serving
+    (and even mutating the corpus — rows appended mid-build land above the
+    snapshot's ``built_size`` and ride the new state's tail window; deletes
+    are caught by the live validity mask at search time).
+    """
+
+    def __init__(self) -> None:
+        self._thread: Optional[threading.Thread] = None
+        self._out: Optional[IndexState] = None
+        self._err: Optional[BaseException] = None
+
+    @property
+    def idle(self) -> bool:
+        return self._thread is None
+
+    @property
+    def ready(self) -> bool:
+        return self._thread is not None and not self._thread.is_alive()
+
+    def launch(self, fn: Callable[[], IndexState]) -> None:
+        assert self._thread is None, "build already in flight"
+        self._out, self._err = None, None
+
+        def run():
+            try:
+                self._out = fn()
+            except BaseException as e:            # surfaced on take()
+                self._err = e
+
+        self._thread = threading.Thread(
+            target=run, name="index-rebuild", daemon=True)
+        self._thread.start()
+
+    def take(self) -> Optional[IndexState]:
+        """Join the finished thread and return its state (or re-raise)."""
+        self._thread.join()
+        self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+        out, self._out = self._out, None
+        return out
 
 
 class RetrievalEngine:
@@ -149,8 +212,28 @@ class RetrievalEngine:
         metric: str = "l2",
         block_n: int = 65536,
         max_unpolled: int = 65536,
+        backend="flat",
+        backend_opts: Optional[Dict] = None,
+        rebuild_mode: str = "sync",
+        compact_dead_frac: Optional[float] = 0.3,
         dtype=jnp.float32,
     ):
+        """See the module docstring; backend-subsystem knobs:
+
+        Args:
+          backend:       index-backend name (``'flat'``/``'ivf'``/
+                         ``'quantized'``) or a constructed ``IndexBackend``.
+          backend_opts:  kwargs for the named backend (e.g. ``n_lists``,
+                         ``n_probe``, ``rebuild_frac`` for ``'ivf'``).
+          rebuild_mode:  ``'sync'`` — rebuild inline at a safe point between
+                         batches; ``'background'`` — build on a thread and
+                         swap when done (compaction still pauses);
+                         ``'off'`` — only correctness-mandated rebuilds.
+          compact_dead_frac: tombstone fraction that triggers buffer
+                         compaction during a rebuild (None disables).
+                         Compaction REMAPS live doc ids; register an
+                         ``on_remap`` callback to follow.
+        """
         self.sched = schedule or make_schedule(
             min(d_start, d_emb), d_emb, k0, final_k=final_k
         )
@@ -178,6 +261,23 @@ class RetrievalEngine:
         self._next_rid = 0
         self._seen_shapes: set = set()
 
+        if rebuild_mode not in ("sync", "background", "off"):
+            raise ValueError(
+                f"rebuild_mode must be sync|background|off, got {rebuild_mode!r}"
+            )
+        self.backend: IndexBackend = make_backend(
+            backend, sched=self.sched, metric=metric, block_n=self.block_n,
+            **(backend_opts or {}),
+        )
+        self.rebuild_mode = rebuild_mode
+        self.compact_dead_frac = compact_dead_frac
+        self.on_remap: List[Callable[[np.ndarray], None]] = []
+        self._index_state: Optional[IndexState] = None
+        self._bg = _BackgroundBuild()
+        # states built from pre-compaction buffers hold remapped-away ids;
+        # any state older than this store generation must never be adopted
+        self._min_state_generation = 0
+
     # -- corpus mutation -----------------------------------------------------
     def add_docs(self, vectors) -> np.ndarray:
         """Append document embeddings; returns their stable doc ids."""
@@ -194,6 +294,111 @@ class RetrievalEngine:
     @property
     def n_docs(self) -> int:
         return self.store.n_active
+
+    # -- index lifecycle -----------------------------------------------------
+    def _build_state(self) -> IndexState:
+        store = self.store
+        return self.backend.build(
+            store.db, store.valid, sq_prefix=store.sq_prefix,
+            stats=store.stats(),
+        )
+
+    def _ensure_index(self) -> IndexState:
+        if self._index_state is None:
+            self._index_state = self._build_state()
+            self.stats.n_rebuilds += 1
+        return self._index_state
+
+    def _compact(self) -> None:
+        """Compact the store and remap every id the engine still holds."""
+        id_map = self.store.compact()
+        self.stats.n_compactions += 1
+        self._min_state_generation = self.store.generation
+        for res in self._results.values():       # unpolled results follow
+            old = res.doc_ids
+            res.doc_ids = np.where(
+                old >= 0, id_map[np.maximum(old, 0)], -1
+            ).astype(old.dtype)
+        for cb in self.on_remap:
+            cb(id_map)
+
+    def maybe_rebuild(self, *, force: bool = False) -> bool:
+        """Rebuild/compact at a safe point if the index state warrants it.
+
+        Called automatically before every dispatch (``step`` / ``search`` /
+        ``warmup``); callable directly to force a rebuild.  Returns True if
+        a new state was adopted (or a background build launched).
+        """
+        # adopt a finished background build first — cheap, and it may
+        # satisfy the staleness check below
+        adopted = False
+        if self._bg.ready:
+            new = self._bg.take()
+            # never adopt a state older than what is already serving: a
+            # must/forced sync rebuild may have landed while the thread ran
+            # (and compaction bumps the floor: pre-compaction ids are dead)
+            if (new is not None
+                    and new.generation >= self._min_state_generation
+                    and (self._index_state is None
+                         or new.generation > self._index_state.generation)):
+                self._index_state = new
+                self.stats.n_rebuilds += 1
+                adopted = True
+
+        st = self.store.stats()
+        state = self._index_state
+        must = state is not None and self.backend.must_rebuild(state, st)
+        stale = (state is None or must
+                 or self.backend.needs_rebuild(state, st))
+        wants_compact = (
+            self.compact_dead_frac is not None
+            and st.n_dead > 0
+            and st.dead_frac >= self.compact_dead_frac
+        )
+        if self.rebuild_mode == "off" and not (must or state is None or force):
+            return adopted
+        if not (force or stale or wants_compact):
+            return adopted
+
+        if wants_compact:
+            # compaction invalidates every id a pre-compaction state holds:
+            # it must pair with an immediate synchronous rebuild.  The
+            # rebuild lives in a finally so a raising on_remap callback
+            # cannot leave the old state serving remapped buffers (it would
+            # silently return wrong documents); the callback's exception
+            # still propagates to the caller afterwards.
+            self._index_state = None
+            try:
+                self._compact()
+            finally:
+                self._index_state = self._build_state()
+                self.stats.n_rebuilds += 1
+            return True
+        if state is None:
+            self._ensure_index()                  # first build is sync
+            return True
+        if self.rebuild_mode == "background" and not must and not force:
+            if self._bg.idle:
+                # snapshot on THIS thread so (buffers, stats) are a
+                # consistent pair even if the corpus mutates mid-build
+                store = self.store
+                db, valid = store.db, store.valid
+                sq, snap = store.sq_prefix, store.stats()
+                self._bg.launch(
+                    lambda: self.backend.build(
+                        db, valid, sq_prefix=sq, stats=snap)
+                )
+                return True
+            return adopted                        # build already in flight
+        # sync (or correctness-mandated while a background build lags)
+        self._index_state = self._build_state()
+        self.stats.n_rebuilds += 1
+        return True
+
+    @property
+    def index_state(self) -> Optional[IndexState]:
+        """The live index state (None until the first build)."""
+        return self._index_state
 
     # -- request path --------------------------------------------------------
     def submit(self, query) -> int:
@@ -229,6 +434,7 @@ class RetrievalEngine:
         n = len(self._queue)
         if n == 0:
             return 0
+        self.maybe_rebuild()                      # safe point between batches
         bucket = self.policy.bucket_for(min(n, self.policy.max_size))
         reqs = self._queue.pop_chunk(min(n, bucket))
         t_dispatch = time.perf_counter()
@@ -269,6 +475,7 @@ class RetrievalEngine:
         here keeps steady-state dispatches compile-free.  Idempotent; cheap
         when shapes are already cached.
         """
+        self.maybe_rebuild()
         probe = np.zeros((1, self.store.d_emb), np.float32)
         for b in self.policy.sizes:
             self._dispatch(np.repeat(probe, b, axis=0))
@@ -277,9 +484,11 @@ class RetrievalEngine:
     def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
         """Bucketed search for a (B, D) query batch, bypassing the queue.
 
-        Results are identical to calling ``progressive_search`` directly on
-        the live corpus (padding queries are per-query-independent and
-        sliced off).
+        With the default ``flat`` backend, results are identical to calling
+        ``progressive_search`` directly on the live corpus (padding queries
+        are per-query-independent and sliced off); the ``ivf`` and
+        ``quantized`` backends return their approximate results, exactly as
+        the queued request path would.
         """
         q = np.asarray(queries, np.float32)
         if q.ndim == 1:
@@ -291,34 +500,42 @@ class RetrievalEngine:
         if q.shape[0] == 0:
             k = self.out_k
             return (np.zeros((0, k), np.float32), np.zeros((0, k), np.int32))
-        out_s, out_i = [], []
+        self.maybe_rebuild()                      # safe point: whole batch
+        # Overlap: issue every chunk's dispatch before syncing any of them —
+        # XLA executes them back-to-back while the host keeps padding and
+        # enqueueing (only step() needs a per-batch sync, for timing).
+        pend = []
         off = 0
         for bucket in self.policy.plan(q.shape[0]):
             take = min(bucket, q.shape[0] - off)
-            s, i, _ = self._dispatch(pad_batch(q[off:off + take], bucket))
-            out_s.append(s[:take])
-            out_i.append(i[:take])
+            s, i, _ = self._dispatch_async(pad_batch(q[off:off + take], bucket))
+            pend.append((s, i, take))
             off += take
+        jax.block_until_ready([p[0] for p in pend])
+        out_s = [np.asarray(s)[:take] for s, _, take in pend]
+        out_i = [np.asarray(i)[:take] for _, i, take in pend]
         return np.concatenate(out_s), np.concatenate(out_i)
 
-    def _dispatch(self, q_pad: np.ndarray):
+    def _dispatch_async(self, q_pad: np.ndarray):
+        """Hand one padded bucket to the backend; returns device arrays
+        without forcing a sync (the caller decides when to block)."""
         store = self.store
-        shape_key = (q_pad.shape[0], store.capacity)
+        state = self._ensure_index()
+        shape_key = (q_pad.shape[0], store.capacity, state.shape_key)
         compiled = shape_key not in self._seen_shapes
         self._seen_shapes.add(shape_key)
-        s, i = progressive_search(
-            jnp.asarray(q_pad), store.db, self.sched,
+        s, i = self.backend.search(
+            jnp.asarray(q_pad), state, store.db, store.valid,
             sq_prefix=store.sq_prefix,
-            index_dims=self.dims,
-            valid=store.valid,
-            block_n=min(self.block_n, store.capacity),
-            metric=self.metric,
+            n_total=store.size,
+            k=self.out_k,
         )
+        return s, i, compiled
+
+    def _dispatch(self, q_pad: np.ndarray):
+        s, i, compiled = self._dispatch_async(q_pad)
         jax.block_until_ready((s, i))
-        # scores ascend, so the leading out_k columns are the top results
-        # (only a single-stage schedule is actually wider than out_k)
-        return (np.asarray(s[:, :self.out_k]),
-                np.asarray(i[:, :self.out_k]), compiled)
+        return np.asarray(s), np.asarray(i), compiled
 
     # -- observability --------------------------------------------------------
     def profile_stages(self, queries, *, runs: int = 3) -> List[Dict]:
@@ -326,7 +543,10 @@ class RetrievalEngine:
 
         Runs the schedule stage by stage (stage-0 full scan, then each
         rescore) so the cost split across dims is visible — the fused
-        ``progressive_search`` program hides it.
+        ``progressive_search`` program hides it.  Always profiles the flat
+        schedule path regardless of the configured backend: it answers
+        "where does the schedule spend", not "what does this backend cost"
+        (the backend split lives in ``benchmarks/backend_comparison.py``).
         """
         q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
         store = self.store
@@ -374,5 +594,6 @@ class RetrievalEngine:
         return (
             f"RetrievalEngine(docs={self.store.n_active}/"
             f"cap={self.store.capacity}, buckets={self.policy.sizes}, "
-            f"metric={self.metric}, sched: {self.sched.describe()})"
+            f"metric={self.metric}, backend={self.backend.describe()}, "
+            f"rebuild={self.rebuild_mode}, sched: {self.sched.describe()})"
         )

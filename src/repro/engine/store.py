@@ -13,6 +13,10 @@ flips, with no compaction pause.
 
 Doc ids are append-only row positions (never reused), so ids held by callers
 — e.g. the RAG pipeline's doc-token table — stay stable across mutations.
+The one exception is ``compact()``: when the dead fraction is high the engine
+rebuilds the buffers without tombstoned rows, which *remaps* every live id
+(the returned old->new map lets callers follow; the engine fires its
+``on_remap`` callbacks with it).
 """
 
 from __future__ import annotations
@@ -25,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.index import prefix_squared_norms
+from repro.index_backends.base import StoreStats
 
 Array = jax.Array
 
@@ -58,10 +63,13 @@ class DocStore:
         self._db = jnp.zeros((self.capacity, self.d_emb), dtype)
         self._sq = jnp.zeros((self.capacity, len(self.dims)), jnp.float32)
         self._valid = jnp.zeros((self.capacity,), bool)
-        self.size = 0          # high-water mark; ids are 0..size-1 forever
+        self.size = 0          # high-water mark; ids are 0..size-1
         self.n_active = 0      # rows with the validity bit set
         self.n_grows = 0
+        self.n_compactions = 0
         self.generation = 0    # bumped on every mutation
+        self.total_added = 0   # lifetime appends (monotonic across compaction)
+        self.total_deleted = 0  # lifetime tombstones (monotonic)
 
     # -- views the search path consumes ------------------------------------
     @property
@@ -78,6 +86,17 @@ class DocStore:
 
     def __len__(self) -> int:
         return self.n_active
+
+    def stats(self) -> StoreStats:
+        """Mutation-counter snapshot (feeds backend ``needs_rebuild``)."""
+        return StoreStats(
+            size=self.size,
+            n_active=self.n_active,
+            capacity=self.capacity,
+            generation=self.generation,
+            total_added=self.total_added,
+            total_deleted=self.total_deleted,
+        )
 
     # -- mutation -----------------------------------------------------------
     def _grow_to(self, new_capacity: int) -> None:
@@ -112,6 +131,7 @@ class DocStore:
         )
         self.size += b
         self.n_active += b
+        self.total_added += b
         self.generation += 1
         return np.arange(start, start + b, dtype=np.int64)
 
@@ -129,8 +149,44 @@ class DocStore:
         n_live = int(self._valid[dev_ids].sum())
         self._valid = self._valid.at[dev_ids].set(False)
         self.n_active -= n_live
+        self.total_deleted += n_live
         self.generation += 1
         return n_live
+
+    def compact(self) -> np.ndarray:
+        """Rebuild the buffers without tombstoned rows; REMAPS live doc ids.
+
+        Live rows slide down to the front (order preserved), the buffers
+        shrink to the smallest power-of-two capacity that holds them, and
+        every previously-issued doc id becomes invalid.  Returns the
+        (old_size,) int64 old->new id map, -1 for dead rows — callers that
+        hold ids (the engine's unpolled results, the RAG pipeline's
+        doc-token table) must apply it.
+
+        Index-backend states built before a compaction reference old ids;
+        the engine rebuilds immediately after compacting, never serving a
+        pre-compaction state against post-compaction buffers.
+        """
+        valid_np = np.asarray(self._valid[: self.size])
+        live = np.nonzero(valid_np)[0]
+        n_live = int(live.size)
+        id_map = np.full((self.size,), -1, np.int64)
+        id_map[live] = np.arange(n_live)
+
+        new_cap = 1
+        while new_cap < max(n_live, 1):
+            new_cap *= 2
+        gather = jnp.asarray(live, jnp.int32)
+        pad = new_cap - n_live
+        self._db = jnp.pad(self._db[gather], ((0, pad), (0, 0)))
+        self._sq = jnp.pad(self._sq[gather], ((0, pad), (0, 0)))
+        self._valid = jnp.pad(jnp.ones((n_live,), bool), (0, pad))
+        self.capacity = new_cap
+        self.size = n_live
+        self.n_active = n_live
+        self.n_compactions += 1
+        self.generation += 1
+        return id_map
 
     def is_live(self, doc_id: int) -> bool:
         if not 0 <= doc_id < self.size:

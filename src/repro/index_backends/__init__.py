@@ -1,0 +1,40 @@
+"""Pluggable index backends for the retrieval engine.
+
+The engine delegates its search structure to an ``IndexBackend``:
+
+  flat       — stage-0 full scan at truncated dims (the paper's algorithm;
+               exact baseline; builds are free, never stale)
+  ivf        — k-means coarse quantizer (clustered and probed at
+               ``probe_dim``, the schedule's max dim by default — probing
+               is a tiny matmul); only probed lists' members are scored
+               (sub-linear stage 0, rebuilt on churn)
+  quantized  — int8 stage-0 block scan (4x less HBM traffic), exact
+               full-precision rescore
+
+All three share the progressive rescore ladder after candidate generation,
+honor the store's validity mask (deleted rows are unreturnable), and keep
+rows appended after a build reachable via tail injection until the engine
+rebuilds.  See ``base.IndexBackend`` for the protocol and
+``RetrievalEngine(backend=...)`` for the serving integration.
+"""
+
+from repro.index_backends.base import (
+    ChurnRebuildBackend,
+    IndexBackend,
+    IndexState,
+    StoreStats,
+    backend_names,
+    make_backend,
+    register_backend,
+    tail_ids,
+)
+from repro.index_backends.flat import FlatProgressiveBackend
+from repro.index_backends.ivf import IVFProgressiveBackend
+from repro.index_backends.quantized import QuantizedProgressiveBackend
+
+__all__ = [
+    "ChurnRebuildBackend", "IndexBackend", "IndexState", "StoreStats",
+    "backend_names", "make_backend", "register_backend", "tail_ids",
+    "FlatProgressiveBackend", "IVFProgressiveBackend",
+    "QuantizedProgressiveBackend",
+]

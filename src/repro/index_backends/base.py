@@ -1,0 +1,294 @@
+"""The index-backend protocol: pluggable search structures behind the engine.
+
+The paper's progressive search needs only a flat buffer, but its stated
+future work — ANN integration — and the repo's north star (corpus scale)
+need *index structures* with build state: IVF centroids, int8 code blocks,
+and whatever comes next.  This module defines the contract between
+`repro.engine.RetrievalEngine` and such structures so new backends slot in
+without forking the engine:
+
+  * ``build(db, valid, sq_prefix=..., stats=...) -> IndexState`` — construct
+    index state from a snapshot of the store's buffers.  Called at a safe
+    point between batches (or on a background thread); must not mutate the
+    store.
+  * ``search(q, state, db, valid, ...) -> (scores, ids)`` — answer a padded
+    query batch against the *live* buffers using the (possibly stale) state.
+    Correctness contract: a row whose validity bit is clear is never
+    returned, and a live row is always reachable — even when it was appended
+    after ``state`` was built (see the tail-injection note below).
+  * ``needs_rebuild(state, stats) -> bool`` — staleness policy: the engine
+    rebuilds when this fires.  ``must_rebuild`` is the hard variant the
+    engine honors even with rebuilds disabled, for backends whose
+    correctness (not just quality) degrades past a staleness bound.
+
+**Tail injection.**  Rows appended after a build are not in the index
+(IVF lists / int8 codes don't cover them).  Backends keep a static-size
+*tail window* (``tail_cap``, sized from the rebuild threshold at build
+time): the ids ``[built_size, store.size)`` are injected into every query's
+candidate list ahead of the progressive rescore, so un-indexed rows are
+scored exactly and stay retrievable between rebuilds.  When the tail
+outgrows its window, ``must_rebuild`` fires and the engine rebuilds before
+the next dispatch — the window can never be silently exceeded.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core.index import stage_dims
+from repro.core.schedule import ProgressiveSchedule
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreStats:
+    """Snapshot of a DocStore's mutation counters (feeds ``needs_rebuild``)."""
+
+    size: int            # high-water mark: rows ever appended (pre-compaction)
+    n_active: int        # rows with the validity bit set
+    capacity: int        # allocated buffer rows
+    generation: int      # bumped on every mutation
+    total_added: int     # lifetime rows appended
+    total_deleted: int   # lifetime rows tombstoned
+
+    @property
+    def n_dead(self) -> int:
+        return self.size - self.n_active
+
+    @property
+    def dead_frac(self) -> float:
+        return self.n_dead / self.size if self.size else 0.0
+
+
+@dataclasses.dataclass
+class IndexState:
+    """Opaque (to the engine) build artifact + the snapshot it was built at.
+
+    ``shape_key`` participates in the engine's compile tracking: any change
+    that alters the traced program's shapes (list-table width, tail window)
+    must change it, so recompiles are attributed correctly.
+    """
+
+    kind: str
+    generation: int         # store generation at build time
+    built_size: int         # rows [0, built_size) are covered by the index
+    built_active: int       # live rows at build time
+    built_added: int        # store.total_added at build time
+    built_deleted: int      # store.total_deleted at build time
+    shape_key: Tuple = ()
+    data: Dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_stats(
+        cls,
+        kind: str,
+        stats: "StoreStats",
+        *,
+        shape_key: Tuple = (),
+        data: Optional[Dict] = None,
+    ) -> "IndexState":
+        """Snapshot the stats fields every backend must record identically —
+        the churn accounting in ``ChurnRebuildBackend`` depends on them."""
+        return cls(
+            kind=kind,
+            generation=stats.generation,
+            built_size=stats.size,
+            built_active=stats.n_active,
+            built_added=stats.total_added,
+            built_deleted=stats.total_deleted,
+            shape_key=shape_key,
+            data=data if data is not None else {},
+        )
+
+
+def tail_ids(state: IndexState, n_total: int, tail_cap: int) -> np.ndarray:
+    """Static-shape (tail_cap,) int32 id window over un-indexed appended rows.
+
+    Ids ``[built_size, n_total)`` padded with -1 (the candidate sentinel
+    ``rescore_candidates`` already scores +inf).  Host-side on purpose: the
+    *content* changes per dispatch but the shape never does, so no retrace.
+    """
+    out = np.full((tail_cap,), -1, np.int32)
+    n_tail = min(max(n_total - state.built_size, 0), tail_cap)
+    if n_tail:
+        out[:n_tail] = np.arange(
+            state.built_size, state.built_size + n_tail, dtype=np.int32
+        )
+    return out
+
+
+class IndexBackend(abc.ABC):
+    """Search structure behind the retrieval engine.
+
+    Subclasses are constructed with the engine's static search config
+    (schedule / stage dims / metric / scan block) plus backend-specific
+    options, and are stateless across builds: all per-corpus state lives in
+    the ``IndexState`` they return, which the engine owns and swaps
+    atomically.
+    """
+
+    name: str = "?"
+
+    def __init__(
+        self,
+        sched: ProgressiveSchedule,
+        *,
+        metric: str = "l2",
+        block_n: int = 65536,
+    ):
+        self.sched = sched
+        self.dims = stage_dims(sched)
+        self.metric = metric
+        self.block_n = int(block_n)
+
+    # -- protocol ----------------------------------------------------------
+    @abc.abstractmethod
+    def build(
+        self,
+        db: Array,
+        valid: Array,
+        *,
+        sq_prefix: Optional[Array] = None,
+        stats: StoreStats,
+    ) -> IndexState:
+        """Build index state from a buffer snapshot.  Must not mutate it."""
+
+    @abc.abstractmethod
+    def search(
+        self,
+        q: Array,
+        state: IndexState,
+        db: Array,
+        valid: Array,
+        *,
+        sq_prefix: Optional[Array] = None,
+        n_total: int,
+        k: int,
+    ) -> Tuple[Array, Array]:
+        """((Q, k) scores, (Q, k) int32 ids) over the live buffers.
+
+        ``n_total`` is the store's current high-water row count (`store.size`
+        — a host int, so tail windows never force a retrace).  May return
+        device arrays; the engine syncs.
+        """
+
+    def needs_rebuild(self, state: IndexState, stats: StoreStats) -> bool:
+        """Soft staleness: rebuild improves quality/cost but isn't required."""
+        return False
+
+    def must_rebuild(self, state: IndexState, stats: StoreStats) -> bool:
+        """Hard staleness: searching ``state`` would be incorrect."""
+        return False
+
+    def describe(self) -> str:
+        return f"{type(self).__name__}(metric={self.metric})"
+
+
+class ChurnRebuildBackend(IndexBackend):
+    """Shared staleness policy for backends with real build artifacts.
+
+    Soft: rebuild once churn (adds + deletes since build) crosses
+    ``rebuild_frac`` of the built corpus.  Hard: rebuild when appended rows
+    outgrow the tail window (``state.data['tail_cap']``), since rows past
+    it would be unreachable.  Subclasses size their window with
+    ``_tail_cap`` at build time and store it in the state.
+    """
+
+    def __init__(
+        self,
+        sched: ProgressiveSchedule,
+        *,
+        metric: str = "l2",
+        block_n: int = 65536,
+        rebuild_frac: float = 0.25,
+        min_rebuild_rows: int = 64,
+        tail_window: int = 512,
+    ):
+        super().__init__(sched, metric=metric, block_n=block_n)
+        self.rebuild_frac = float(rebuild_frac)
+        self.min_rebuild_rows = int(min_rebuild_rows)
+        self.tail_window = int(tail_window)
+
+    def _churn_since_build(self, state: IndexState, stats: StoreStats) -> int:
+        return (stats.total_added - state.built_added) + (
+            stats.total_deleted - state.built_deleted
+        )
+
+    def _tail_cap(self, n_active: int) -> int:
+        # 2x the soft-staleness budget, clamped to an absolute window: every
+        # query rescores the whole window (even empty slots cost a gather),
+        # so it must NOT scale with the corpus.  needs_rebuild fires at half
+        # the window, so the soft trigger always precedes the hard bound —
+        # a background build has the other half of the window to land.
+        soft = max(self.min_rebuild_rows, int(self.rebuild_frac * n_active))
+        cap = max(self.min_rebuild_rows, min(2 * soft, self.tail_window))
+        # round to a power of two: the window is part of the traced shape,
+        # and a stable shape across rebuilds is what keeps state swaps
+        # compile-free
+        return 1 << (cap - 1).bit_length()
+
+    def needs_rebuild(self, state: IndexState, stats: StoreStats) -> bool:
+        if self.must_rebuild(state, stats):
+            return True
+        # appends approaching the hard tail bound: start rebuilding now
+        # (in background mode this is what keeps the sync path off the
+        # serving thread — the hard bound only fires if the build lags)
+        if stats.size - state.built_size >= state.data["tail_cap"] // 2:
+            return True
+        threshold = max(
+            self.min_rebuild_rows,
+            self.rebuild_frac * max(state.built_active, 1),
+        )
+        return self._churn_since_build(state, stats) >= threshold
+
+    def must_rebuild(self, state: IndexState, stats: StoreStats) -> bool:
+        # correctness bound: appended rows beyond the tail window would be
+        # unreachable until the next build
+        return stats.size - state.built_size > state.data["tail_cap"]
+
+
+# -- registry ---------------------------------------------------------------
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_backend(cls: type) -> type:
+    """Class decorator: expose a backend under its ``name``."""
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def backend_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_backend(
+    spec,
+    *,
+    sched: ProgressiveSchedule,
+    metric: str = "l2",
+    block_n: int = 65536,
+    **opts,
+) -> "IndexBackend":
+    """Resolve a backend from a name (``'flat'``/``'ivf'``/``'quantized'``)
+    or pass an already-constructed instance through."""
+    if isinstance(spec, IndexBackend):
+        if opts:
+            raise ValueError(
+                f"backend_opts {sorted(opts)} conflict with an "
+                f"already-constructed backend instance"
+            )
+        return spec
+    try:
+        cls = _REGISTRY[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown index backend {spec!r}; available: {backend_names()}"
+        ) from None
+    return cls(sched, metric=metric, block_n=block_n, **opts)

@@ -1,0 +1,246 @@
+"""IVF-progressive backend: k-means coarse quantizer in front of the schedule.
+
+Stage 0 stops scanning the whole buffer: queries probe the ``n_probe``
+nearest centroids and only the probed lists' members are scored, then the
+normal progressive rescore ladder runs on the survivors.  Two build-time
+decisions drive the cost/recall profile:
+
+* **Probe space** (``probe_dim``) — centroids are clustered, assigned, and
+  probed in the *same* truncated space, so a query equal to a document
+  ranks that document's cell exactly where the assignment did.  Probing is
+  an (n_lists, d) matmul — tiny next to the member scan — so a wider probe
+  space buys better cell ranking nearly for free.
+* **Balanced assignment** (``balance_factor``) — the member table is dense
+  (its width is the longest list), so unbounded nearest-centroid
+  assignment makes every query pay the occupancy *skew* in padded
+  candidate slots.  Lists are capacity-bounded at ``balance_factor`` times
+  the mean occupancy (see `repro.core.ivf.balanced_assign`), trading a
+  little displacement for a table width near the mean.
+
+Staleness: appended rows ride the tail window (see ``base.tail_ids``) until
+churn crosses ``rebuild_frac`` of the built corpus, at which point the
+engine re-clusters; deletes only degrade list occupancy (the validity mask
+keeps them unreturnable) and count toward the same churn budget.  A rebuild
+drops tombstoned rows from the lists entirely — the index side of
+compaction.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import progressive_search
+from repro.core.ivf import balanced_assign, ivf_progressive_search_sched, kmeans
+from repro.core import truncated as T
+from repro.index_backends.base import (
+    ChurnRebuildBackend,
+    IndexState,
+    StoreStats,
+    register_backend,
+    tail_ids,
+)
+
+Array = jax.Array
+
+
+@register_backend
+class IVFProgressiveBackend(ChurnRebuildBackend):
+    """Coarse-quantized candidate generation + progressive rescore."""
+
+    name = "ivf"
+
+    def __init__(
+        self,
+        sched,
+        *,
+        metric: str = "l2",
+        block_n: int = 65536,
+        n_lists: Optional[int] = None,
+        n_probe: int = 12,
+        probe_dim: Optional[int] = None,
+        balance_factor: Optional[float] = 2.0,
+        assign_m: int = 8,
+        kmeans_iters: int = 10,
+        train_rows: int = 131072,
+        assign_block: int = 65536,
+        rebuild_frac: float = 0.25,
+        min_rebuild_rows: int = 64,
+        tail_window: int = 512,
+        min_index_rows: int = 64,
+        seed: int = 0,
+    ):
+        """Args beyond the shared engine config:
+
+        n_lists:        coarse-quantizer cells (None: ~n_live / 64, i.e. a
+                        mean occupancy of 64 rows — candidate width then
+                        stays roughly constant as the corpus grows — capped
+                        at 4096 so k-means' per-iteration (rows, n_lists)
+                        matrices stay bounded).
+        train_rows:     k-means trains on at most this many sampled live
+                        rows (the classic quantizer-training bound; the
+                        assignment still covers every row).
+        assign_block:   rows scored per tile when assigning — the
+                        (rows, n_lists) score matrix never materializes for
+                        the whole corpus at once.
+        n_probe:        cells scanned per query.
+        probe_dim:      clustering/probing dimensionality (None: the
+                        schedule's max dim — probing is cheap, so rank
+                        cells in the best space available).
+        balance_factor: per-list capacity as a multiple of mean occupancy
+                        (None: unbounded nearest-centroid assignment).
+        assign_m:       centroid choices per row for balanced assignment.
+        rebuild_frac / min_rebuild_rows / tail_window: see
+                        ``ChurnRebuildBackend``.
+        min_index_rows: below this live-row count, skip clustering and
+                        serve the flat path (state flag) — exact and
+                        cheaper than probing a near-empty table.
+        """
+        super().__init__(
+            sched, metric=metric, block_n=block_n,
+            rebuild_frac=rebuild_frac, min_rebuild_rows=min_rebuild_rows,
+            tail_window=tail_window,
+        )
+        self.n_lists = n_lists
+        self.n_probe = int(n_probe)
+        self.probe_dim = probe_dim
+        self.balance_factor = balance_factor
+        self.assign_m = int(assign_m)
+        self.kmeans_iters = int(kmeans_iters)
+        self.train_rows = int(train_rows)
+        self.assign_block = int(assign_block)
+        self.min_index_rows = int(min_index_rows)
+        self.seed = int(seed)
+
+    # -- build --------------------------------------------------------------
+    def build(
+        self,
+        db: Array,
+        valid: Array,
+        *,
+        sq_prefix: Optional[Array] = None,
+        stats: StoreStats,
+    ) -> IndexState:
+        live = np.nonzero(np.asarray(valid[: stats.size]))[0] if stats.size else (
+            np.zeros((0,), np.int64)
+        )
+        n_live = int(live.size)
+        if n_live < self.min_index_rows:
+            return IndexState.from_stats(
+                self.name, stats,
+                shape_key=(self.name, "flat-fallback"),
+                data={"flat": True, "tail_cap": self._tail_cap(n_live)},
+            )
+
+        # auto n_lists snaps DOWN to a power of two: small corpus churn then
+        # reproduces the same cell count (and thus the same traced shapes)
+        # across rebuilds, so a state swap doesn't recompile every bucket
+        auto = min(max(1, n_live // 64), 4096)
+        n_lists = self.n_lists or 1 << (auto.bit_length() - 1)
+        n_lists = min(n_lists, n_live)
+        d_probe = self.probe_dim or self.sched.d_max
+        db_live = db[jnp.asarray(live)][:, :d_probe].astype(jnp.float32)
+
+        # Train the quantizer on a bounded sample (assignment covers all
+        # rows below): k-means holds a (rows, n_lists) matrix per iteration.
+        rng = np.random.default_rng(self.seed)
+        if n_live > self.train_rows:
+            sample = np.sort(rng.choice(n_live, self.train_rows,
+                                        replace=False))
+            train = db_live[jnp.asarray(sample)]
+        else:
+            train = db_live
+        cents = kmeans(train, n_lists, n_iter=self.kmeans_iters,
+                       key=jax.random.PRNGKey(self.seed))
+
+        m = min(self.assign_m, n_lists)
+        # rank cells with the serving metric so assignment and probing
+        # agree on what "nearest cell" means; tile over rows so the
+        # (rows, n_lists) score matrix stays O(assign_block * n_lists)
+        score_fn = T._METRICS[self.metric]
+        neg_parts, choice_parts = [], []
+        for lo in range(0, n_live, self.assign_block):
+            blk = db_live[lo: lo + self.assign_block]
+            neg_b, choices_b = jax.lax.top_k(-score_fn(blk, cents), m)
+            # keep tiles on device: converting inside the loop would sync
+            # per tile and serialize dispatch against compute
+            neg_parts.append(neg_b[:, 0])
+            choice_parts.append(choices_b)
+        neg0, choices = jax.device_get(
+            (jnp.concatenate(neg_parts), jnp.concatenate(choice_parts)))
+        if self.balance_factor is None or n_lists == 1:
+            assign = choices[:, 0]
+        else:
+            cap = max(1, int(math.ceil(
+                self.balance_factor * n_live / n_lists)))
+            order = np.argsort(-neg0)               # confident rows first
+            assign = balanced_assign(choices, order, n_lists, cap)
+
+        # Host-side packing into a dense -1-padded table of *global* doc ids
+        # (one argsort, not a per-list scan — n_lists scales with n_live, so
+        # a scan per list would make the build quadratic).
+        order = np.argsort(assign, kind="stable")
+        counts = np.bincount(assign, minlength=n_lists)
+        # table width rounds UP to a power of two (same shape-stability
+        # story as n_lists; the padding rows are -1 and score +inf)
+        max_len = 1 << (max(int(counts.max()), 1) - 1).bit_length()
+        starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+        table = np.full((n_lists, max_len), -1, np.int32)
+        sorted_lists = assign[order]
+        table[sorted_lists, np.arange(n_live) - starts[sorted_lists]] = (
+            live[order])
+        tail_cap = self._tail_cap(n_live)
+        return IndexState.from_stats(
+            self.name, stats,
+            shape_key=(self.name, n_lists, max_len, tail_cap),
+            data={
+                "centroids": cents,                 # (n_lists, d_probe) f32
+                "lists": jnp.asarray(table),        # (n_lists, max_len) i32
+                "n_lists": n_lists,
+                "max_len": max_len,
+                "tail_cap": tail_cap,
+            },
+        )
+
+    # -- search -------------------------------------------------------------
+    def search(
+        self,
+        q: Array,
+        state: IndexState,
+        db: Array,
+        valid: Array,
+        *,
+        sq_prefix: Optional[Array] = None,
+        n_total: int,
+        k: int,
+    ) -> Tuple[Array, Array]:
+        if state.data.get("flat"):
+            scores, ids = progressive_search(
+                q, db, self.sched,
+                sq_prefix=sq_prefix, index_dims=self.dims,
+                valid=valid, block_n=min(self.block_n, db.shape[0]),
+                metric=self.metric,
+            )
+            return scores[:, :k], ids[:, :k]
+        tail = tail_ids(state, n_total, state.data["tail_cap"])
+        scores, ids = ivf_progressive_search_sched(
+            q, db, state.data["centroids"], state.data["lists"], self.sched,
+            n_probe=min(self.n_probe, state.data["n_lists"]),
+            valid=valid,
+            sq_prefix=sq_prefix, index_dims=self.dims,
+            extra_cand=jnp.asarray(tail),
+            metric=self.metric,
+        )
+        return scores[:, :k], ids[:, :k]
+
+    def describe(self) -> str:
+        return (
+            f"IVFProgressiveBackend(n_lists={self.n_lists or 'auto'}, "
+            f"n_probe={self.n_probe}, rebuild_frac={self.rebuild_frac}, "
+            f"metric={self.metric})"
+        )

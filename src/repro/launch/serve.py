@@ -33,6 +33,9 @@ def main():
                     help="LM decode batch (retrieval batches via --buckets)")
     ap.add_argument("--buckets", type=str, default="1,2,4,8,16,32",
                     help="comma-separated static retrieval batch sizes")
+    ap.add_argument("--backend", type=str, default="flat",
+                    choices=("flat", "ivf", "quantized"),
+                    help="index backend behind the retrieval engine")
     ap.add_argument("--new-tokens", type=int, default=8)
     args = ap.parse_args()
 
@@ -48,8 +51,9 @@ def main():
     db = embed(doc_tokens)
     buckets = tuple(int(x) for x in args.buckets.split(","))
     pipe = RAGPipeline(params, cfg, db, doc_tokens, d_start=16, k0=32,
-                       buckets=buckets)
+                       buckets=buckets, backend=args.backend)
     engine = pipe.engine
+    print(f"[engine]   {engine.describe()}")
 
     gt = rng.choice(args.docs, args.requests)
     queries = np.asarray(doc_tokens[gt])

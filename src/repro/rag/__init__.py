@@ -1,4 +1,5 @@
-from repro.rag.corpus import SyntheticCorpus, make_corpus
+from repro.rag.corpus import SyntheticCorpus, make_clustered_corpus, make_corpus
 from repro.rag.pipeline import RAGPipeline
 
-__all__ = ["SyntheticCorpus", "make_corpus", "RAGPipeline"]
+__all__ = ["SyntheticCorpus", "make_clustered_corpus", "make_corpus",
+           "RAGPipeline"]

@@ -62,6 +62,8 @@ class RAGPipeline:
         d_start: int = 32,
         k0: int = 32,
         buckets: Optional[Sequence[int]] = None,
+        backend: Optional[str] = None,
+        backend_opts: Optional[Dict] = None,
         engine: Optional[RetrievalEngine] = None,
     ):
         self.lm_params = lm_params
@@ -70,6 +72,9 @@ class RAGPipeline:
         # growth so streaming add_docs stays amortized O(1) per append
         # (a jnp.concatenate per add would copy the whole table every call).
         self._tokens = np.asarray(doc_tokens, np.int32)
+        # np.asarray may alias the caller's buffer (or a read-only device
+        # view); in-place writes wait until growth/compaction copies it
+        self._tokens_owned = False
         self._n_tokens = self._tokens.shape[0]
         db = jnp.asarray(doc_embeddings, jnp.float32)
         d_emb = db.shape[1]
@@ -98,6 +103,11 @@ class RAGPipeline:
                     f"explicit buckets {tuple(buckets)} conflict with "
                     f"supplied engine's {engine.policy.sizes}"
                 )
+            if backend is not None or backend_opts is not None:
+                raise ValueError(
+                    "explicit backend/backend_opts conflict with the "
+                    "supplied engine's backend; pass one or the other"
+                )
             self.sched = engine.sched
             self.engine = engine
         else:
@@ -106,7 +116,12 @@ class RAGPipeline:
                 capacity=max(1, db.shape[0]),
                 buckets=buckets if buckets is not None
                 else (1, 2, 4, 8, 16, 32),
+                backend=backend or "flat",
+                backend_opts=backend_opts,
             )
+        # Compaction remaps engine doc ids; follow with the token table so
+        # ids keep doubling as token-row numbers.
+        self.engine.on_remap.append(self._apply_remap)
         self.engine.add_docs(db)
         self.embed = embedder or mean_pool_embedder(lm_params, lm_cfg)
 
@@ -138,13 +153,45 @@ class RAGPipeline:
             grown = np.zeros((new_cap, self._tokens.shape[1]), np.int32)
             grown[:self._n_tokens] = self._tokens[:self._n_tokens]
             self._tokens = grown
+            self._tokens_owned = True
         self._tokens[self._n_tokens:need] = tokens
         self._n_tokens = need
         return ids
 
     def delete_docs(self, ids) -> int:
-        """Remove docs from retrieval (token rows stay; ids are stable)."""
+        """Remove docs from retrieval.
+
+        Token rows stay until the engine's next compaction, at which point
+        ids are remapped and this pipeline's table follows automatically.
+        """
         return self.engine.delete_docs(ids)
+
+    def _apply_remap(self, id_map: np.ndarray) -> None:
+        """Engine compaction callback: drop dead token rows, keep alignment.
+
+        ``id_map`` maps old engine row ids to new ones (-1 = tombstoned);
+        compaction preserves live-row order, so gathering the surviving
+        token rows in old-id order reproduces the new id order exactly.
+
+        The alignment check below fires when docs were added to the engine
+        behind the pipeline's back (``pipe.engine.add_docs(...)``); the
+        engine's compaction path is exception-safe — it finishes its own
+        rebuild before this error reaches the caller.
+        """
+        if id_map.shape[0] != self._n_tokens:
+            raise RuntimeError(
+                f"compaction remap covers {id_map.shape[0]} rows but the "
+                f"token table holds {self._n_tokens} — corpus out of sync"
+            )
+        live_old = np.nonzero(id_map >= 0)[0]
+        rows = self._tokens[live_old]            # fancy index: a copy
+        if not self._tokens_owned:
+            # still aliasing the constructor argument (caller-owned buffer,
+            # or a read-only device view): never write through it
+            self._tokens = self._tokens.copy()
+            self._tokens_owned = True
+        self._n_tokens = live_old.size
+        self._tokens[: self._n_tokens] = rows
 
     # -- serving --------------------------------------------------------------
     def retrieve(self, query_tokens: Array) -> Tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,422 @@
+"""Index-backend subsystem: protocol registry, recall vs the flat baseline,
+add/delete-then-rebuild correctness, tail injection, compaction remaps, and
+the background-build lifecycle."""
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import truncated_search, overlap_at_k
+from repro.core.ivf import balanced_assign
+from repro.engine import DocStore, RetrievalEngine
+from repro.index_backends import (
+    FlatProgressiveBackend,
+    IndexBackend,
+    StoreStats,
+    backend_names,
+    make_backend,
+)
+
+RNG = np.random.default_rng(11)
+D = 32
+BACKENDS = ("flat", "ivf", "quantized")
+
+
+def opts_for(backend, **extra):
+    base = {
+        "flat": {},
+        # small corpora: force real clustering instead of the flat fallback
+        "ivf": dict(n_lists=12, n_probe=6, min_index_rows=32,
+                    min_rebuild_rows=16),
+        "quantized": dict(min_rebuild_rows=16),
+    }[backend]
+    return {**base, **extra} or None
+
+
+def make_engine(backend, n_docs=200, seed=7, **kw):
+    opts = kw.pop("backend_opts", opts_for(backend))
+    kw.setdefault("d_start", 8)
+    kw.setdefault("k0", 16)
+    kw.setdefault("buckets", (4,))
+    kw.setdefault("capacity", 64)
+    kw.setdefault("block_n", 64)
+    eng = RetrievalEngine(D, backend=backend, backend_opts=opts, **kw)
+    db = np.random.default_rng(seed).normal(size=(n_docs, D)).astype(np.float32)
+    eng.add_docs(db)
+    return eng, db
+
+
+class TestRegistry:
+    def test_names(self):
+        assert set(BACKENDS) <= set(backend_names())
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError, match="unknown index backend"):
+            RetrievalEngine(D, backend="hnsw")
+
+    def test_instance_passthrough_and_opts_conflict(self):
+        from repro.core import make_schedule
+        sched = make_schedule(8, D, 16)
+        be = FlatProgressiveBackend(sched)
+        assert make_backend(be, sched=sched) is be
+        with pytest.raises(ValueError):
+            make_backend(be, sched=sched, n_probe=4)
+
+    def test_bad_rebuild_mode_rejected(self):
+        with pytest.raises(ValueError, match="rebuild_mode"):
+            RetrievalEngine(D, rebuild_mode="eager")
+
+    def test_quantized_rejects_cosine(self):
+        with pytest.raises(ValueError, match="l2"):
+            RetrievalEngine(D, backend="quantized", metric="cosine")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestBackendEngineSuite:
+    """Every backend must pass the same search/add/delete/rebuild contract."""
+
+    def test_exact_query_self_retrieval(self, backend):
+        eng, db = make_engine(backend)
+        _, idx = eng.search(db[:8])
+        np.testing.assert_array_equal(idx[:, 0], np.arange(8))
+
+    def test_deleted_doc_never_returned(self, backend):
+        eng, db = make_engine(backend)
+        _, before = eng.search(db[17:18])
+        assert before[0, 0] == 17
+        eng.delete_docs([17])
+        _, after = eng.search(db[17:18])
+        assert 17 not in after
+        rid = eng.submit(db[17])
+        eng.run_until_idle()
+        assert 17 not in eng.poll(rid).doc_ids
+
+    def test_added_doc_visible_without_rebuild(self, backend):
+        # tail injection: a doc appended after the index build must be
+        # retrievable before any rebuild happens
+        eng, db = make_engine(backend)
+        eng.search(db[:1])                      # force the initial build
+        n_rebuilds = eng.stats.n_rebuilds
+        new = RNG.normal(size=(1, D)).astype(np.float32) * 5.0
+        [nid] = eng.add_docs(new)
+        _, idx = eng.search(new)
+        assert idx[0, 0] == nid
+        assert eng.stats.n_rebuilds == n_rebuilds
+
+    def test_delete_survives_rebuild(self, backend):
+        eng, db = make_engine(backend)
+        eng.delete_docs([5])
+        _, idx = eng.search(db[5:6])
+        assert 5 not in idx
+        assert eng.maybe_rebuild(force=True)
+        _, idx = eng.search(db[5:6])
+        assert 5 not in idx
+        assert eng.index_state.built_active == len(db) - 1
+
+    def test_churn_triggers_natural_rebuild(self, backend):
+        eng, db = make_engine(backend)
+        eng.search(db[:1])
+        n_rebuilds = eng.stats.n_rebuilds
+        # exceed min_rebuild_rows (flat never rebuilds by design)
+        extra = RNG.normal(size=(80, D)).astype(np.float32)
+        ids = eng.add_docs(extra)
+        _, idx = eng.search(extra[:4])
+        np.testing.assert_array_equal(idx[:, 0], ids[:4])
+        if backend == "flat":
+            assert eng.stats.n_rebuilds == n_rebuilds
+        else:
+            assert eng.stats.n_rebuilds > n_rebuilds
+
+    def test_fully_deleted_corpus_returns_sentinel(self, backend):
+        eng, db = make_engine(backend, n_docs=40)
+        eng.delete_docs(np.arange(40))
+        scores, idx = eng.search(db[:2])
+        assert (idx == -1).all()
+        assert np.isinf(scores).all()
+
+    def test_tail_overflow_forces_rebuild_even_when_off(self, backend):
+        if backend == "flat":
+            pytest.skip("flat covers every row; no tail window")
+        opts = opts_for(backend, min_rebuild_rows=4, rebuild_frac=0.01)
+        eng, db = make_engine(backend, backend_opts=opts,
+                              rebuild_mode="off")
+        eng.search(db[:1])
+        n_rebuilds = eng.stats.n_rebuilds
+        extra = RNG.normal(size=(12, D)).astype(np.float32)  # > tail_cap=4
+        ids = eng.add_docs(extra)
+        _, idx = eng.search(extra)
+        np.testing.assert_array_equal(idx[:, 0], ids)
+        assert eng.stats.n_rebuilds > n_rebuilds
+
+
+@pytest.mark.parametrize("backend", ("ivf", "quantized"))
+class TestRecall:
+    def test_recall_vs_flat_on_clustered_corpus(self, backend):
+        from repro.rag import make_clustered_corpus
+        c = make_clustered_corpus(n_docs=1536, dim=64, n_queries=32,
+                                  n_clusters=24, seed=5)
+        _, exact = truncated_search(
+            jnp.asarray(c.queries), jnp.asarray(c.db), dim=64, k=10,
+            block_n=1536)
+
+        def run(be, opts):
+            eng = RetrievalEngine(
+                64, d_start=16, k0=64, final_k=10, buckets=(32,),
+                capacity=1536, block_n=1536, backend=be, backend_opts=opts)
+            eng.add_docs(c.db)
+            _, ids = eng.search(c.queries)
+            return float(overlap_at_k(jnp.asarray(ids), exact, 10))
+
+        flat = run("flat", None)
+        opts = (dict(n_lists=24, n_probe=8, min_index_rows=32)
+                if backend == "ivf" else None)
+        approx = run(backend, opts)
+        assert flat >= 0.9                       # schedule is wide enough
+        # approximate backends stay within 10 points of the exact baseline
+        assert approx >= flat - 0.10
+
+
+class TestCompaction:
+    def test_store_compact_unit(self):
+        dims = (8, 16, 32)
+        store = DocStore(D, dims, capacity=4)
+        rows = RNG.normal(size=(10, D)).astype(np.float32)
+        store.add(rows)
+        store.delete([0, 3, 4, 9])
+        id_map = store.compact()
+        assert store.size == store.n_active == 6
+        assert store.capacity == 8               # pow2 shrink from 16
+        assert store.n_compactions == 1
+        live_old = [1, 2, 5, 6, 7, 8]
+        np.testing.assert_array_equal(id_map[live_old], np.arange(6))
+        assert (id_map[[0, 3, 4, 9]] == -1).all()
+        np.testing.assert_allclose(
+            np.asarray(store.db[:6]), rows[live_old], rtol=1e-6)
+        # prefix norms must match a fresh build over the surviving rows
+        from repro.core import build_index
+        ref = build_index(jnp.asarray(rows[live_old]), dims)
+        np.testing.assert_allclose(
+            np.asarray(store.sq_prefix[:6]), np.asarray(ref["sq_prefix"]),
+            rtol=1e-5, atol=1e-5)
+        # lifetime counters keep their pre-compaction history
+        assert store.total_added == 10 and store.total_deleted == 4
+
+    def test_engine_compacts_and_remaps(self):
+        eng, db = make_engine("flat", n_docs=100, compact_dead_frac=0.4)
+        # an unpolled result that must be remapped across the compaction
+        rid = eng.submit(db[60])
+        eng.run_until_idle()
+        eng.delete_docs(np.arange(50))           # 50% dead
+        maps = []
+        eng.on_remap.append(maps.append)
+        _, idx = eng.search(db[60:61])
+        assert eng.stats.n_compactions == 1 and len(maps) == 1
+        assert eng.store.size == 50
+        assert idx[0, 0] == 10                   # doc 60 slid down by 50
+        res = eng.poll(rid)
+        assert res.doc_ids[0] == 10              # unpolled result followed
+
+    def test_no_compaction_below_threshold(self):
+        eng, db = make_engine("flat", n_docs=100, compact_dead_frac=0.4)
+        eng.delete_docs(np.arange(10))
+        eng.search(db[50:51])
+        assert eng.stats.n_compactions == 0
+
+    def test_compaction_survives_raising_remap_callback(self):
+        # a failing on_remap callback must not leave a pre-compaction index
+        # state serving remapped buffers (silently wrong documents): the
+        # engine rebuilds first, then the callback's error reaches the caller
+        eng, db = make_engine("ivf", n_docs=120, compact_dead_frac=0.3)
+        eng.search(db[:1])
+
+        def boom(id_map):
+            raise RuntimeError("callback failed")
+
+        eng.on_remap.append(boom)
+        eng.delete_docs(np.arange(0, 120, 2))
+        with pytest.raises(RuntimeError, match="callback failed"):
+            eng.search(db[1:2])
+        eng.on_remap.remove(boom)
+        assert eng.stats.n_compactions == 1
+        _, idx = eng.search(db[1:7:2])           # odd (surviving) docs
+        np.testing.assert_array_equal(idx[:, 0], [0, 1, 2])
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_post_compaction_search_correct(self, backend):
+        eng, db = make_engine(backend, n_docs=120, compact_dead_frac=0.3)
+        eng.search(db[:1])
+        eng.delete_docs(np.arange(0, 120, 2))    # half the corpus
+        _, idx = eng.search(db[1:7:2])           # odd (surviving) docs
+        assert eng.stats.n_compactions == 1
+        # old ids 1,3,5 -> compacted ids 0,1,2
+        np.testing.assert_array_equal(idx[:, 0], [0, 1, 2])
+
+    @staticmethod
+    def _make_pipe(doc_tokens):
+        import jax
+        from repro.configs.base import LMConfig
+        from repro.models import lm as LM
+        from repro.rag import RAGPipeline
+        from repro.rag.pipeline import mean_pool_embedder
+        cfg = LMConfig(name="t", n_layers=1, d_model=32, n_heads=2,
+                       n_kv_heads=2, d_head=16, d_ff=64, vocab=128,
+                       param_dtype="float32", compute_dtype="float32",
+                       remat=False)
+        params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+        db = mean_pool_embedder(params, cfg)(jnp.asarray(doc_tokens))
+        return RAGPipeline(params, cfg, db, doc_tokens, d_start=4, k0=4), db
+
+    def test_pipeline_tokens_follow_compaction(self):
+        toks = jnp.asarray(
+            np.random.default_rng(0).integers(1, 128, (12, 5)), jnp.int32)
+        pipe, _ = self._make_pipe(toks)
+        pipe.delete_docs(list(range(8)))         # > default compact frac
+        target = np.asarray(toks[10:11])
+        _, idx = pipe.retrieve(jnp.asarray(target))
+        assert pipe.engine.stats.n_compactions == 1
+        # retrieved id indexes the REMAPPED token table, same text comes back
+        np.testing.assert_array_equal(
+            pipe.doc_tokens[idx[0, 0]], target[0])
+
+    def test_compaction_never_writes_through_caller_tokens(self):
+        # the constructor aliases a writable caller array; the remap must
+        # copy-on-write instead of shuffling the caller's rows in place
+        toks = np.random.default_rng(0).integers(
+            1, 128, (12, 5)).astype(np.int32)
+        before = toks.copy()
+        pipe, _ = self._make_pipe(toks)
+        pipe.delete_docs(list(range(8)))
+        pipe.retrieve(jnp.asarray(toks[10:11]))
+        assert pipe.engine.stats.n_compactions == 1
+        np.testing.assert_array_equal(toks, before)
+
+    def test_pipeline_rejects_backend_conflicting_with_engine(self):
+        toks = jnp.asarray(
+            np.random.default_rng(0).integers(1, 128, (6, 5)), jnp.int32)
+        pipe, db = self._make_pipe(toks)
+        from repro.rag import RAGPipeline
+        eng = RetrievalEngine(db.shape[1], d_start=4, k0=4, capacity=8)
+        with pytest.raises(ValueError, match="backend"):
+            RAGPipeline(pipe.lm_params, pipe.cfg, db, toks, engine=eng,
+                        backend="ivf")
+
+
+class TestBackgroundRebuild:
+    def _wait_rebuild(self, eng, n_before, timeout=30.0):
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < timeout:
+            eng.maybe_rebuild()                  # adopt when ready
+            if eng.stats.n_rebuilds > n_before:
+                return True
+            time.sleep(0.02)
+        return False
+
+    def test_background_build_adopts_state(self):
+        # soft threshold <= rows added (16) <= tail window (32): the
+        # rebuild is wanted but not correctness-forced -> background path
+        opts = opts_for("ivf", min_rebuild_rows=8, rebuild_frac=0.05)
+        eng, db = make_engine("ivf", backend_opts=opts,
+                              rebuild_mode="background")
+        eng.search(db[:1])
+        n_before = eng.stats.n_rebuilds
+        built_size_before = eng.index_state.built_size
+        extra = RNG.normal(size=(16, D)).astype(np.float32)
+        ids = eng.add_docs(extra)
+        _, idx = eng.search(extra[:4])           # serves old state + tail
+        np.testing.assert_array_equal(idx[:, 0], ids[:4])
+        assert self._wait_rebuild(eng, n_before)
+        assert eng.index_state.built_size > built_size_before
+        _, idx = eng.search(extra[:4])           # new state agrees
+        np.testing.assert_array_equal(idx[:, 0], ids[:4])
+
+
+    def test_stale_background_build_never_reverts_newer_state(self):
+        opts = opts_for("ivf", min_rebuild_rows=8, rebuild_frac=0.05)
+        eng, db = make_engine("ivf", backend_opts=opts,
+                              rebuild_mode="background")
+        eng.search(db[:1])
+        eng.add_docs(RNG.normal(size=(16, D)).astype(np.float32))
+        eng.search(db[:1])                       # launches background build
+        ids = eng.add_docs(RNG.normal(size=(4, D)).astype(np.float32))
+        eng.maybe_rebuild(force=True)            # newer sync state lands
+        forced = eng.index_state
+        t0 = time.perf_counter()
+        while not eng._bg.idle and time.perf_counter() - t0 < 30:
+            eng.maybe_rebuild()                  # offers the stale build
+            time.sleep(0.02)
+        assert eng._bg.idle
+        # the finished background build predates the forced one: rejected
+        assert eng.index_state.generation >= forced.generation
+        assert eng.index_state.built_size >= forced.built_size
+        _, idx = eng.search(db[:2])              # still serving correctly
+        np.testing.assert_array_equal(idx[:, 0], [0, 1])
+        assert eng.store.is_live(int(ids[0]))
+
+
+class TestStaleness:
+    def test_needs_rebuild_thresholds(self):
+        from repro.core import make_schedule
+        sched = make_schedule(8, D, 16)
+        be = make_backend("ivf", sched=sched, n_lists=4,
+                          rebuild_frac=0.5, min_rebuild_rows=10,
+                          min_index_rows=4)
+        store = DocStore(D, (8, 16, 32), capacity=64)
+        store.add(RNG.normal(size=(40, D)).astype(np.float32))
+        state = be.build(store.db, store.valid, sq_prefix=store.sq_prefix,
+                         stats=store.stats())
+        assert not be.needs_rebuild(state, store.stats())
+        store.delete(np.arange(5))               # churn 5 < 20
+        assert not be.needs_rebuild(state, store.stats())
+        store.add(RNG.normal(size=(15, D)).astype(np.float32))
+        assert be.needs_rebuild(state, store.stats())  # churn 20 >= 20
+
+    def test_stats_properties(self):
+        st = StoreStats(size=10, n_active=6, capacity=16, generation=3,
+                        total_added=10, total_deleted=4)
+        assert st.n_dead == 4
+        assert st.dead_frac == pytest.approx(0.4)
+        assert StoreStats(0, 0, 1, 0, 0, 0).dead_frac == 0.0
+
+
+class TestBalancedAssign:
+    def test_respects_cap_and_preference(self):
+        choices = np.array([[0, 1], [0, 1], [0, 1], [1, 0]])
+        order = np.arange(4)
+        assign = balanced_assign(choices, order, n_lists=2, cap=2)
+        counts = np.bincount(assign, minlength=2)
+        assert (counts <= 2).all() and counts.sum() == 4
+        # first two (most confident) rows keep their first choice
+        assert assign[0] == 0 and assign[1] == 0
+        assert assign[3] == 1                    # its own first choice
+
+    def test_overflow_rows_spill_to_free_lists(self):
+        choices = np.zeros((6, 1), np.int64)     # everyone wants list 0
+        assign = balanced_assign(choices, np.arange(6), n_lists=3, cap=2)
+        assert (np.bincount(assign, minlength=3) == 2).all()
+
+    def test_impossible_cap_raises(self):
+        with pytest.raises(ValueError):
+            balanced_assign(np.zeros((5, 1), np.int64), np.arange(5),
+                            n_lists=2, cap=2)
+
+
+class TestProtocolSubclass:
+    def test_custom_backend_pluggable(self):
+        # the protocol is the extension point: a trivial user backend that
+        # delegates to flat must slot into the engine unchanged
+        from repro.core import make_schedule
+
+        class EchoBackend(FlatProgressiveBackend):
+            name = "echo-test"
+
+        sched = make_schedule(8, D, 16)
+        eng = RetrievalEngine(D, d_start=8, k0=16, capacity=32,
+                              buckets=(2,), block_n=32,
+                              backend=EchoBackend(sched))
+        db = RNG.normal(size=(20, D)).astype(np.float32)
+        eng.add_docs(db)
+        _, idx = eng.search(db[:2])
+        np.testing.assert_array_equal(idx[:, 0], [0, 1])
+        assert isinstance(eng.backend, IndexBackend)
