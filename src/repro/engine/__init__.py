@@ -1,20 +1,43 @@
-"""Retrieval serving engine: request queueing, shape-bucketed batching, and a
-mutable (add/delete) corpus on top of pluggable index backends.
+"""Retrieval serving engine: request queueing, shape-bucketed batching, an
+async deadline-batching driver, and a mutable (add/delete) corpus on top of
+pluggable index backends.
 
 Public API:
   RetrievalEngine                — submit/poll/step serving loop + batch search
                                    (``backend='flat'|'ivf'|'quantized'``,
-                                   rebuild/compaction lifecycle)
+                                   rebuild/compaction lifecycle); thread-safe
+                                   behind ``engine.lock``
+  EngineDriver                   — background thread owning batch formation:
+                                   deadline-based flushes, futures,
+                                   backpressure, drain/abort shutdown
+  RetrievalFuture                — write-once result handle from ``submit``
+  DriverStopped, DriverQueueFull — driver client-facing exceptions
   RetrievalResult, RequestStats  — per-request outputs and timing breakdown
-  EngineStats                    — aggregate counters / latency percentiles
+  EngineStats, DriverStats       — aggregate counters / latency percentiles
   DocStore                       — capacity-doubling device buffers + validity
                                    mask + tombstone compaction
   BucketPolicy                   — static batch-size ladder
+  DeadlineBatcher, BatchDecision — pure deadline-flush policy (fake-clock
+                                   testable) the driver thread consults
 
 The backend protocol and implementations live in `repro.index_backends`.
 """
 
-from repro.engine.batching import BucketPolicy, PendingRequest, RequestQueue, pad_batch
+from repro.engine.batching import (
+    BatchDecision,
+    BucketPolicy,
+    DeadlineBatcher,
+    PendingRequest,
+    RequestQueue,
+    pad_batch,
+)
+from repro.engine.driver import (
+    DriverQueueFull,
+    DriverStats,
+    DriverStopped,
+    EngineDriver,
+    RetrievalFuture,
+)
 from repro.engine.engine import (
     EngineStats,
     RequestStats,
@@ -25,7 +48,10 @@ from repro.engine.store import DocStore
 from repro.index_backends import StoreStats
 
 __all__ = [
-    "BucketPolicy", "PendingRequest", "RequestQueue", "pad_batch",
+    "BatchDecision", "BucketPolicy", "DeadlineBatcher", "PendingRequest",
+    "RequestQueue", "pad_batch",
+    "DriverQueueFull", "DriverStats", "DriverStopped", "EngineDriver",
+    "RetrievalFuture",
     "DocStore", "EngineStats", "RequestStats", "RetrievalEngine",
     "RetrievalResult", "StoreStats",
 ]

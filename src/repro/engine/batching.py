@@ -8,6 +8,14 @@ chunks, pads each chunk up to the nearest bucket, and therefore compiles each
 bucket exactly once per corpus capacity.  Padding rows are zero queries whose
 results are discarded — progressive search is per-query, so they cannot
 perturb real requests.
+
+``DeadlineBatcher`` is the *when* to the BucketPolicy's *what shape*: the
+latency/throughput knob for the async driver (`repro.engine.driver`).  A
+request waits at most ``max_wait_s`` for companions before its partial batch
+is flushed, and a full top bucket flushes immediately.  It is a pure decision
+function over (queue depth, oldest arrival, now) — no clock of its own, no
+thread state — so the deadline policy is unit-testable with a fake clock
+while the driver thread feeds it real time.
 """
 
 from __future__ import annotations
@@ -67,6 +75,56 @@ class BucketPolicy:
         if rem:
             out.append(self.bucket_for(rem))
         return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchDecision:
+    """What the driver loop should do right now.
+
+    ``action`` is one of:
+      * ``'flush'`` — dispatch ``n`` requests from the queue head (``reason``
+        says why: ``'full'`` bucket or ``'deadline'`` expiry).
+      * ``'wait'``  — nothing is due; sleep at most ``wait_s`` (an earlier
+        arrival can only shorten the deadline, so waking on new submissions
+        and re-deciding is always safe).
+      * ``'idle'``  — queue is empty; block until something arrives.
+    """
+
+    action: str
+    n: int = 0
+    wait_s: float = 0.0
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineBatcher:
+    """Deadline-based flush policy over a ``BucketPolicy`` ladder.
+
+    A partial batch is held back for up to ``max_wait_s`` after its *oldest*
+    request arrived (more companions => bigger bucket => better device
+    utilization); a full top-size bucket flushes immediately (waiting longer
+    cannot improve its shape).  ``max_wait_s=0`` degenerates to
+    flush-on-arrival: minimum latency, singleton batches under light load.
+    """
+
+    policy: BucketPolicy
+    max_wait_s: float = 0.002
+
+    def __post_init__(self):
+        if self.max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {self.max_wait_s}")
+
+    def decide(self, n_pending: int, oldest_arrival: float,
+               now: float) -> BatchDecision:
+        """Pure policy step: all time flows in through the arguments."""
+        if n_pending <= 0:
+            return BatchDecision("idle")
+        if n_pending >= self.policy.max_size:
+            return BatchDecision("flush", n=self.policy.max_size, reason="full")
+        deadline = oldest_arrival + self.max_wait_s
+        if now >= deadline:
+            return BatchDecision("flush", n=n_pending, reason="deadline")
+        return BatchDecision("wait", wait_s=deadline - now)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,372 @@
+"""Async serving driver: a background thread owning batch formation/dispatch.
+
+``RetrievalEngine`` is deliberately caller-paced — ``step()`` runs one batch
+when somebody calls it.  That shape is right for benchmarks and tests, but a
+serving system has many client threads and nobody whose job is to call
+``step()``.  The driver closes the loop:
+
+    client threads ──submit()/retrieve()──> bounded pending deque
+        ──driver thread── DeadlineBatcher.decide() ──flush──>
+            engine.execute_batch() under engine.lock ──> RetrievalFuture
+
+* **Deadline-based batching** — the latency/throughput knob.  A request
+  waits at most ``max_wait_ms`` (measured from the *oldest* request in the
+  partial batch) before flushing; a full top-size bucket flushes
+  immediately.  ``max_wait_ms=0`` minimizes latency (singleton batches under
+  light load); larger values trade p50 latency for bigger buckets and higher
+  device throughput.  The policy itself is ``repro.engine.batching.
+  DeadlineBatcher`` — pure and fake-clock-testable; this thread just feeds
+  it real time.
+* **Thread-safe submission** — ``submit()`` may be called from any thread
+  and returns a ``RetrievalFuture``; ``retrieve()`` is the blocking
+  convenience wrapper.  **Backpressure**: the pending queue is bounded
+  (``max_queue``); ``submit`` blocks until space frees (or raises
+  ``DriverQueueFull`` past ``timeout``), so an overloaded engine pushes back
+  on producers instead of buffering unboundedly.
+* **Lifecycle** — ``start()`` spawns the thread; ``stop(drain=True)``
+  serves every accepted request before exiting, ``stop(drain=False)``
+  cancels pending requests (their futures raise ``DriverStopped``).  The
+  context-manager form drains on clean exit and aborts if the body raised.
+* **Exception propagation** — a dispatch error fails that batch's futures
+  (clients see the exception from ``result()``) and the driver keeps
+  serving; an unexpected driver-loop error is recorded, fails everything
+  pending, and re-raises from the next ``submit``/``stop``.
+* **Safe-point composition** — every dispatch runs through
+  ``engine.execute_batch``, whose pre-dispatch ``maybe_rebuild()`` adopts
+  finished background index builds and runs compaction *between* driver
+  iterations (PR 2's safe-point contract), never mid-batch.  Corpus
+  mutations from client threads serialize against dispatches on
+  ``engine.lock``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.engine.batching import DeadlineBatcher, PendingRequest
+from repro.engine.engine import RetrievalEngine, RetrievalResult
+
+
+class DriverStopped(RuntimeError):
+    """The driver is stopping/stopped/dead — the request was not served."""
+
+
+class DriverQueueFull(TimeoutError):
+    """``submit`` timed out waiting for space in the bounded pending queue."""
+
+
+class RetrievalFuture:
+    """Write-once result slot for one submitted request.
+
+    ``result(timeout)`` blocks until the driver resolves the future — with a
+    ``RetrievalResult``, the dispatch exception, or ``DriverStopped`` on
+    abort — and raises ``TimeoutError`` if nothing lands in time.
+    """
+
+    __slots__ = ("_event", "_result", "_error")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._result: Optional[RetrievalResult] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> RetrievalResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"no retrieval result within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        """The error the future resolved with (None on success)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"no retrieval result within {timeout}s")
+        return self._error
+
+    def _finish(self, result: Optional[RetrievalResult] = None,
+                error: Optional[BaseException] = None) -> None:
+        self._result, self._error = result, error
+        self._event.set()
+
+
+@dataclasses.dataclass
+class DriverStats:
+    """Driver-side counters (the engine keeps the latency distributions)."""
+
+    n_submitted: int = 0
+    n_completed: int = 0
+    n_cancelled: int = 0
+    n_batch_errors: int = 0
+    n_flush_full: int = 0       # batches flushed because the bucket filled
+    n_flush_deadline: int = 0   # batches flushed by max_wait_ms expiry
+    n_flush_drain: int = 0      # batches flushed during stop(drain=True)
+    queue_peak: int = 0         # high-water pending-queue depth
+
+    def summary(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Pending:
+    query: np.ndarray           # validated (D,) float32
+    future: RetrievalFuture
+    t_submit: float             # perf_counter seconds (engine latency stats)
+    t_arrival: float            # driver-clock seconds (deadline policy)
+
+
+_NEW, _RUNNING, _STOPPING, _STOPPED = "new", "running", "stopping", "stopped"
+
+
+class EngineDriver:
+    """Background batching loop over a ``RetrievalEngine``.
+
+    Args:
+      engine:       the engine to drive (its ``policy`` supplies the bucket
+                    ladder; its ``lock`` serializes dispatches against
+                    client-side corpus mutations).
+      max_wait_ms:  deadline a partial batch waits for companions before
+                    flushing (0 = flush on arrival).
+      max_queue:    pending-queue bound; ``submit`` blocks past it.
+      clock:        time source for the *deadline policy only* (injectable
+                    for tests); engine latency stats always use
+                    ``time.perf_counter``.
+    """
+
+    def __init__(
+        self,
+        engine: RetrievalEngine,
+        *,
+        max_wait_ms: float = 2.0,
+        max_queue: int = 1024,
+        clock: Callable[[], float] = time.perf_counter,
+        name: str = "engine-driver",
+    ):
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.engine = engine
+        self.batcher = DeadlineBatcher(engine.policy, float(max_wait_ms) / 1e3)
+        self.stats = DriverStats()
+        self._clock = clock
+        self._max_queue = int(max_queue)
+        self._name = name
+        self._pending: Deque[_Pending] = deque()
+        self._cv = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        self._state = _NEW
+        self._drain = True
+        self._fatal: Optional[BaseException] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "EngineDriver":
+        """Spawn the batching thread; returns self for chaining."""
+        with self._cv:
+            if self._state != _NEW:
+                raise RuntimeError(f"driver already {self._state}")
+            self._state = _RUNNING
+            self._thread = threading.Thread(
+                target=self._run, name=self._name, daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True,
+             timeout: Optional[float] = None) -> None:
+        """Shut the driver down.
+
+        ``drain=True`` serves every accepted request first; ``drain=False``
+        cancels pending requests (their futures raise ``DriverStopped``).
+        Idempotent.  Re-raises a fatal driver-loop error, and raises
+        ``TimeoutError`` if the thread doesn't exit within ``timeout``.
+        """
+        with self._cv:
+            if self._state == _STOPPED:
+                if self._fatal is not None:
+                    raise self._fatal
+                return
+            if self._state == _NEW:
+                # never started: resolve the backlog inline on this thread
+                self._state = _STOPPING
+                if drain:
+                    while self._pending:
+                        self._dispatch(self._take_locked(
+                            self.engine.policy.max_size), "drain")
+                self._finish_locked()
+                return
+            if self._state == _RUNNING:
+                self._state = _STOPPING
+                self._drain = drain
+                self._cv.notify_all()
+            # already _STOPPING: a concurrent stop() owns the drain policy —
+            # overriding it here could cancel requests that call promised to
+            # serve; just wait for the thread alongside it
+        assert self._thread is not None
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(f"driver thread did not stop within {timeout}s")
+        if self._fatal is not None:
+            raise self._fatal
+
+    def __enter__(self) -> "EngineDriver":
+        with self._cv:
+            not_started = self._state == _NEW
+        if not_started:
+            self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        # clean exit drains; an exception in the body aborts (the caller is
+        # unwinding — don't block on a backlog it no longer wants)
+        self.stop(drain=exc_type is None)
+        return False
+
+    @property
+    def running(self) -> bool:
+        with self._cv:
+            return self._state == _RUNNING
+
+    @property
+    def n_pending(self) -> int:
+        with self._cv:
+            return len(self._pending)
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, query, *,
+               timeout: Optional[float] = None) -> RetrievalFuture:
+        """Enqueue one query from any thread; returns a ``RetrievalFuture``.
+
+        Blocks while the pending queue is full (backpressure); raises
+        ``DriverQueueFull`` if no slot frees within ``timeout`` and
+        ``DriverStopped`` once the driver is shutting down.  Accepted before
+        ``start()`` too — requests just wait for the thread (or an inline
+        ``stop(drain=True)``).
+        """
+        q = self.engine.check_query(query)
+        fut = RetrievalFuture()
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._cv:
+            while True:
+                if self._fatal is not None:
+                    raise DriverStopped(
+                        "driver thread died") from self._fatal
+                if self._state in (_STOPPING, _STOPPED):
+                    raise DriverStopped("driver is not accepting requests")
+                if len(self._pending) < self._max_queue:
+                    break
+                if deadline is None:
+                    self._cv.wait()
+                else:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        raise DriverQueueFull(
+                            f"pending queue held {self._max_queue} requests "
+                            f"for {timeout}s")
+                    self._cv.wait(remaining)
+            self._pending.append(
+                _Pending(q, fut, time.perf_counter(), self._clock()))
+            self.stats.n_submitted += 1
+            if len(self._pending) > self.stats.queue_peak:
+                self.stats.queue_peak = len(self._pending)
+            self._cv.notify_all()
+        return fut
+
+    def retrieve(self, query, *,
+                 timeout: Optional[float] = None) -> RetrievalResult:
+        """Blocking submit-and-wait; ``timeout`` bounds the whole round trip."""
+        t0 = time.perf_counter()
+        fut = self.submit(query, timeout=timeout)
+        remaining = (None if timeout is None
+                     else max(0.0, timeout - (time.perf_counter() - t0)))
+        return fut.result(remaining)
+
+    # -- batching loop -------------------------------------------------------
+    def _take_locked(self, n: int) -> List[_Pending]:
+        return [self._pending.popleft()
+                for _ in range(min(n, len(self._pending)))]
+
+    def _finish_locked(self) -> None:
+        """Cancel whatever is left and mark the driver stopped."""
+        for p in self._pending:
+            p.future._finish(error=DriverStopped(
+                "driver stopped before this request was dispatched"))
+            self.stats.n_cancelled += 1
+        self._pending.clear()
+        self._state = _STOPPED
+        self._cv.notify_all()
+
+    def _dispatch(self, chunk: List[_Pending], reason: str) -> None:
+        """Run one flushed chunk through the engine and resolve its futures."""
+        if not chunk:
+            return
+        if reason == "full":
+            self.stats.n_flush_full += 1
+        elif reason == "deadline":
+            self.stats.n_flush_deadline += 1
+        else:
+            self.stats.n_flush_drain += 1
+        reqs = [PendingRequest(-1, p.query, p.t_submit) for p in chunk]
+        try:
+            results = self.engine.execute_batch(reqs)
+        except Exception as e:
+            # fail this batch's clients, keep serving the next one
+            self.stats.n_batch_errors += 1
+            for p in chunk:
+                p.future._finish(error=e)
+            return
+        for p, res in zip(chunk, results):
+            p.future._finish(result=res)
+        self.stats.n_completed += len(chunk)
+
+    def _run(self) -> None:
+        try:
+            while True:
+                chunk: Optional[List[_Pending]] = None
+                reason = ""
+                with self._cv:
+                    while chunk is None:
+                        if self._state == _STOPPING:
+                            if not self._drain or not self._pending:
+                                self._finish_locked()
+                                return
+                            chunk = self._take_locked(
+                                self.engine.policy.max_size)
+                            reason = "drain"
+                            break
+                        d = self.batcher.decide(
+                            len(self._pending),
+                            self._pending[0].t_arrival
+                            if self._pending else 0.0,
+                            self._clock(),
+                        )
+                        if d.action == "flush":
+                            chunk, reason = self._take_locked(d.n), d.reason
+                        elif d.action == "wait":
+                            self._cv.wait(d.wait_s)
+                        else:                     # idle: block for arrivals
+                            self._cv.wait()
+                    self._cv.notify_all()         # queue space freed
+                # dispatch outside the cv so producers keep submitting while
+                # the device computes (engine.lock still serializes engine
+                # access)
+                self._dispatch(chunk, reason)
+        except BaseException as e:                # pragma: no cover
+            with self._cv:
+                self._fatal = e
+                self._finish_locked()
+
+    def describe(self) -> str:
+        return (
+            f"EngineDriver(max_wait_ms={self.batcher.max_wait_s * 1e3:g}, "
+            f"max_queue={self._max_queue}, state={self._state}, "
+            f"engine={self.engine.describe()})"
+        )

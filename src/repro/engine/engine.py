@@ -30,8 +30,14 @@ surveys in PAPERS.md):
   profile (``profile_stages``) for roofline work.
 
 The engine is synchronous and single-host by design: ``step()`` is the unit a
-driver loop (or an async wrapper thread) calls; `repro.launch.serve` shows the
-intended replay loop, and `benchmarks/engine_throughput.py` /
+driver loop calls, and ``execute_batch()`` is the direct entry point the
+async driver (`repro.engine.driver.EngineDriver`) uses for pre-formed
+batches.  Every public mutating/serving method is guarded by ``engine.lock``
+(a reentrant lock), so client threads may race ``add_docs`` / ``delete_docs``
+/ ``submit`` / ``poll`` against the driver thread's dispatches — the lock is
+coarse on purpose: one device, one in-flight batch, and stats counters that
+must reconcile exactly under concurrency.  `repro.launch.serve` shows the
+intended serving loop, and `benchmarks/engine_throughput.py` /
 `benchmarks/backend_comparison.py` measure it.
 """
 
@@ -82,6 +88,12 @@ class RetrievalResult:
     scores: np.ndarray         # (out_k,) ascending; +inf marks empty slots
     doc_ids: np.ndarray        # (out_k,) int32; -1 marks empty slots
     stats: RequestStats
+    # DocStore.generation at dispatch.  A compaction bumps the generation
+    # and remaps doc ids: a client that holds ids across corpus mutations
+    # (concurrent serving) can compare this to the live store generation
+    # under ``engine.lock`` to detect that its ids predate a remap it missed
+    # (results still parked in ``poll`` are remapped by the engine itself).
+    store_generation: int = -1
 
 
 class EngineStats:
@@ -251,6 +263,11 @@ class RetrievalEngine:
         self.store = DocStore(d_emb, self.dims, capacity=capacity, dtype=dtype)
         self.policy = BucketPolicy(tuple(int(b) for b in buckets))
         self.stats = EngineStats()
+        # Guards every store/queue/stats mutation and every dispatch: client
+        # threads and the async driver thread share the engine through it.
+        # Reentrant because step() -> maybe_rebuild() nests, and so callers
+        # can compose multi-step critical sections (see EngineDriver).
+        self.lock = threading.RLock()
         self._queue = RequestQueue()
         # Completed-but-unpolled results are evicted oldest-first (dicts are
         # insertion-ordered) past max_unpolled, so clients that die between
@@ -281,19 +298,22 @@ class RetrievalEngine:
     # -- corpus mutation -----------------------------------------------------
     def add_docs(self, vectors) -> np.ndarray:
         """Append document embeddings; returns their stable doc ids."""
-        ids = self.store.add(vectors)
-        self.stats.n_docs_added += len(ids)
-        return ids
+        with self.lock:
+            ids = self.store.add(vectors)
+            self.stats.n_docs_added += len(ids)
+            return ids
 
     def delete_docs(self, ids) -> int:
         """Tombstone docs by id; they become unreturnable immediately."""
-        n = self.store.delete(ids)
-        self.stats.n_docs_deleted += n
-        return n
+        with self.lock:
+            n = self.store.delete(ids)
+            self.stats.n_docs_deleted += n
+            return n
 
     @property
     def n_docs(self) -> int:
-        return self.store.n_active
+        with self.lock:
+            return self.store.n_active
 
     # -- index lifecycle -----------------------------------------------------
     def _build_state(self) -> IndexState:
@@ -325,10 +345,17 @@ class RetrievalEngine:
     def maybe_rebuild(self, *, force: bool = False) -> bool:
         """Rebuild/compact at a safe point if the index state warrants it.
 
-        Called automatically before every dispatch (``step`` / ``search`` /
-        ``warmup``); callable directly to force a rebuild.  Returns True if
-        a new state was adopted (or a background build launched).
+        Called automatically before every dispatch (``step`` /
+        ``execute_batch`` / ``search`` / ``warmup``) — under the async driver
+        this is what makes rebuild adoption and compaction land *between*
+        driver iterations, never mid-batch.  Callable directly to force a
+        rebuild.  Returns True if a new state was adopted (or a background
+        build launched).
         """
+        with self.lock:
+            return self._maybe_rebuild_locked(force=force)
+
+    def _maybe_rebuild_locked(self, *, force: bool = False) -> bool:
         # adopt a finished background build first — cheap, and it may
         # satisfy the staleness check below
         adopted = False
@@ -401,9 +428,8 @@ class RetrievalEngine:
         return self._index_state
 
     # -- request path --------------------------------------------------------
-    def submit(self, query) -> int:
-        """Enqueue one query vector ((D,) or (1, D)); returns a request id
-        for ``poll``."""
+    def check_query(self, query) -> np.ndarray:
+        """Validate/normalize one query to a (D,) float32 vector (no lock)."""
         q = np.asarray(query, np.float32)
         if q.ndim == 2 and q.shape[0] == 1:
             q = q[0]
@@ -412,37 +438,42 @@ class RetrievalEngine:
                 f"expected one (D={self.store.d_emb},) query vector, got "
                 f"shape {q.shape}"
             )
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.push(PendingRequest(rid, q, time.perf_counter()))
-        self.stats.n_submitted += 1
-        return rid
+        return q
+
+    def submit(self, query) -> int:
+        """Enqueue one query vector ((D,) or (1, D)); returns a request id
+        for ``poll``.  (The async driver does not pass through here — it
+        forms its own batches and enters via ``execute_batch``, stamping
+        each request's client-side submit time itself.)"""
+        q = self.check_query(query)
+        with self.lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._queue.push(PendingRequest(rid, q, time.perf_counter()))
+            self.stats.n_submitted += 1
+            return rid
 
     def poll(self, request_id: int) -> Optional[RetrievalResult]:
         """Pop the result for ``request_id`` if its batch has run."""
-        return self._results.pop(request_id, None)
+        with self.lock:
+            return self._results.pop(request_id, None)
 
     @property
     def n_pending(self) -> int:
-        return len(self._queue)
+        with self.lock:
+            return len(self._queue)
 
-    def step(self) -> int:
-        """Dispatch one bucket-shaped batch from the queue head.
-
-        Returns the number of requests completed (0 if the queue is empty).
-        """
-        n = len(self._queue)
-        if n == 0:
-            return 0
-        self.maybe_rebuild()                      # safe point between batches
-        bucket = self.policy.bucket_for(min(n, self.policy.max_size))
-        reqs = self._queue.pop_chunk(min(n, bucket))
+    def _execute(self, reqs: List[PendingRequest]) -> List[RetrievalResult]:
+        """Run one bucket-shaped batch (caller holds ``self.lock``)."""
+        self._maybe_rebuild_locked()              # safe point between batches
+        bucket = self.policy.bucket_for(len(reqs))
         t_dispatch = time.perf_counter()
         qb = pad_batch(np.stack([r.query for r in reqs]), bucket)
         scores, ids, compiled = self._dispatch(qb)
         t_done = time.perf_counter()
         compute_ms = (t_done - t_dispatch) * 1e3
         self.stats.record_batch(bucket, len(reqs), compute_ms, compiled)
+        out = []
         for j, r in enumerate(reqs):
             st = RequestStats(
                 latency_ms=(t_done - r.t_submit) * 1e3,
@@ -452,18 +483,61 @@ class RetrievalEngine:
                 batch_fill=len(reqs),
                 compiled=compiled,
             )
-            self._results[r.request_id] = RetrievalResult(
-                r.request_id, scores[j], ids[j], st
-            )
+            out.append(RetrievalResult(
+                r.request_id, scores[j], ids[j], st,
+                store_generation=self.store.generation,
+            ))
             self.stats.record_request(st)
-        while len(self._results) > self._max_unpolled:
-            self._results.pop(next(iter(self._results)))
-        return len(reqs)
+        return out
+
+    def step(self) -> int:
+        """Dispatch one bucket-shaped batch from the queue head.
+
+        Returns the number of requests completed (0 if the queue is empty).
+        """
+        with self.lock:
+            n = len(self._queue)
+            if n == 0:
+                return 0
+            bucket = self.policy.bucket_for(min(n, self.policy.max_size))
+            reqs = self._queue.pop_chunk(min(n, bucket))
+            for res in self._execute(reqs):
+                self._results[res.request_id] = res
+            while len(self._results) > self._max_unpolled:
+                self._results.pop(next(iter(self._results)))
+            return len(reqs)
+
+    def execute_batch(
+        self, reqs: Sequence[PendingRequest]
+    ) -> List[RetrievalResult]:
+        """Dispatch pre-formed requests immediately, bypassing the queue.
+
+        The async driver's entry point: its requests already waited out the
+        deadline policy in the driver's own queue, so they dispatch now
+        (split along the bucket ladder when the chunk exceeds the top
+        bucket).  Results return in request order and are never parked in
+        the ``poll`` map — the driver resolves its futures directly, so the
+        ``max_unpolled`` eviction can't drop them.  Requests with a negative
+        ``request_id`` are assigned the next engine id.
+        """
+        out: List[RetrievalResult] = []
+        with self.lock:
+            for r in reqs:
+                if r.request_id < 0:
+                    r.request_id = self._next_rid
+                    self._next_rid += 1
+            self.stats.n_submitted += len(reqs)
+            off = 0
+            while off < len(reqs):
+                chunk = list(reqs[off:off + self.policy.max_size])
+                off += len(chunk)
+                out.extend(self._execute(chunk))
+        return out
 
     def run_until_idle(self) -> int:
         """Drain the whole queue; returns total requests completed."""
         done = 0
-        while len(self._queue):
+        while self.n_pending:
             done += self.step()
         return done
 
@@ -475,10 +549,11 @@ class RetrievalEngine:
         here keeps steady-state dispatches compile-free.  Idempotent; cheap
         when shapes are already cached.
         """
-        self.maybe_rebuild()
-        probe = np.zeros((1, self.store.d_emb), np.float32)
-        for b in self.policy.sizes:
-            self._dispatch(np.repeat(probe, b, axis=0))
+        with self.lock:
+            self._maybe_rebuild_locked()
+            probe = np.zeros((1, self.store.d_emb), np.float32)
+            for b in self.policy.sizes:
+                self._dispatch(np.repeat(probe, b, axis=0))
 
     # -- synchronous batch API (pipeline / benchmarks) ------------------------
     def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
@@ -500,18 +575,21 @@ class RetrievalEngine:
         if q.shape[0] == 0:
             k = self.out_k
             return (np.zeros((0, k), np.float32), np.zeros((0, k), np.int32))
-        self.maybe_rebuild()                      # safe point: whole batch
-        # Overlap: issue every chunk's dispatch before syncing any of them —
-        # XLA executes them back-to-back while the host keeps padding and
-        # enqueueing (only step() needs a per-batch sync, for timing).
-        pend = []
-        off = 0
-        for bucket in self.policy.plan(q.shape[0]):
-            take = min(bucket, q.shape[0] - off)
-            s, i, _ = self._dispatch_async(pad_batch(q[off:off + take], bucket))
-            pend.append((s, i, take))
-            off += take
-        jax.block_until_ready([p[0] for p in pend])
+        with self.lock:
+            self._maybe_rebuild_locked()          # safe point: whole batch
+            # Overlap: issue every chunk's dispatch before syncing any of
+            # them — XLA executes them back-to-back while the host keeps
+            # padding and enqueueing (only step() needs a per-batch sync,
+            # for timing).
+            pend = []
+            off = 0
+            for bucket in self.policy.plan(q.shape[0]):
+                take = min(bucket, q.shape[0] - off)
+                s, i, _ = self._dispatch_async(
+                    pad_batch(q[off:off + take], bucket))
+                pend.append((s, i, take))
+                off += take
+            jax.block_until_ready([p[0] for p in pend])
         out_s = [np.asarray(s)[:take] for s, _, take in pend]
         out_i = [np.asarray(i)[:take] for _, i, take in pend]
         return np.concatenate(out_s), np.concatenate(out_i)

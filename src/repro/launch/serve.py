@@ -1,17 +1,23 @@
-"""Serving launcher: RAG pipeline over a synthetic corpus, replaying
-individual requests through the retrieval engine's queue.
+"""Serving launcher: RAG pipeline over a synthetic corpus, driven by the
+async engine driver under multi-threaded client traffic.
 
-Requests are submitted one at a time (as serving traffic arrives); the
-engine coalesces them into shape-bucketed batches, so the launcher reports
-both the retrieval engine's per-request latency percentiles (queue + compute
-split, compile events excluded by warmup) and end-to-end decode latency.
+``--clients N`` spawns N open-loop client threads that submit single
+requests through the driver (optionally rate-paced with ``--qps``); the
+driver's background thread coalesces them into shape-bucketed batches with a
+deadline flush (``--max-wait-ms`` is the latency/throughput knob: 0 flushes
+on arrival, larger values hold partial batches back for companions).  The
+launcher reports retrieval QPS, the engine's per-request latency percentiles
+(queue + compute split, compile events excluded by warmup), the driver's
+flush-reason counters, and end-to-end decode latency.
 
-    PYTHONPATH=src python -m repro.launch.serve --requests 64 --batch 8
+    PYTHONPATH=src python -m repro.launch.serve --requests 64 --batch 8 \
+        --clients 8 --max-wait-ms 2
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -25,6 +31,52 @@ from repro.rag import RAGPipeline
 from repro.rag.pipeline import mean_pool_embedder
 
 
+def run_clients(driver, qvecs, n_clients: int, qps: float,
+                timeout: float = 120.0):
+    """Submit every query from ``n_clients`` open-loop threads.
+
+    Each thread owns a shard of the request stream and submits without
+    waiting for results (open loop) — at full speed, or paced so the
+    threads jointly target ``qps`` — then gathers its futures.  Returns
+    (results in submission order, wall seconds).
+    """
+    results = [None] * len(qvecs)
+    errors = []
+    shards = np.array_split(np.arange(len(qvecs)), n_clients)
+    period = n_clients / qps if qps > 0 else 0.0
+    barrier = threading.Barrier(n_clients + 1)
+
+    def client(shard):
+        try:
+            barrier.wait()
+            futures = []
+            t_next = time.perf_counter()
+            for i in shard:
+                if period:
+                    now = time.perf_counter()
+                    if now < t_next:
+                        time.sleep(t_next - now)
+                    t_next += period
+                futures.append((i, driver.submit(qvecs[i], timeout=timeout)))
+            for i, fut in futures:
+                results[i] = fut.result(timeout)
+        except Exception as e:                    # surfaced after join
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(s,), daemon=True)
+               for s in shards if len(s)]
+    for t in threads:
+        t.start()
+    barrier.wait()                                # release all clients at once
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return results, wall
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=2000)
@@ -36,6 +88,14 @@ def main():
     ap.add_argument("--backend", type=str, default="flat",
                     choices=("flat", "ivf", "quantized"),
                     help="index backend behind the retrieval engine")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent open-loop client threads")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="driver deadline: max wait for batch companions")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="aggregate open-loop submit rate (0 = full speed)")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="driver pending-queue bound (backpressure)")
     ap.add_argument("--new-tokens", type=int, default=8)
     args = ap.parse_args()
 
@@ -62,19 +122,26 @@ def main():
     # Warm the bucket ladder so steady-state percentiles exclude compiles.
     engine.warmup()
 
-    # --- retrieval: per-request submission, engine-coalesced batches -------
-    t0 = time.perf_counter()
-    rids = [engine.submit(v) for v in qvecs]
-    engine.run_until_idle()
-    wall = time.perf_counter() - t0
-    results = [engine.poll(r) for r in rids]
+    # --- retrieval: N client threads -> async driver -> coalesced batches --
+    n_clients = max(1, min(args.clients, args.requests))
+    driver = pipe.start_driver(max_wait_ms=args.max_wait_ms,
+                               max_queue=args.max_queue)
+    print(f"[driver]   {driver.describe()}")
+    try:
+        results, wall = run_clients(driver, qvecs, n_clients, args.qps)
+    finally:
+        pipe.stop_driver()
     retrieved = np.stack([r.doc_ids for r in results])
     hits = int((retrieved[:, 0] == gt).sum())
     s = engine.stats.summary()
-    print(f"[retrieve] {args.requests} requests via buckets={buckets}: "
+    ds = driver.stats.summary()
+    print(f"[retrieve] {args.requests} requests, {n_clients} clients, "
+          f"max_wait={args.max_wait_ms:g}ms, buckets={buckets}: "
           f"qps={args.requests / wall:.1f} "
           f"p50={s['latency_ms_p50']:.1f}ms p95={s['latency_ms_p95']:.1f}ms "
           f"batches={s['n_batches']} padded={s['n_padded_slots']} "
+          f"flush(full/deadline/drain)={ds['n_flush_full']}/"
+          f"{ds['n_flush_deadline']}/{ds['n_flush_drain']} "
           f"hit-rate={hits / args.requests * 100:.1f}%")
 
     # --- decode: fixed-size LM batches over the retrieved docs -------------

@@ -12,6 +12,12 @@ into shape-bucketed batches (each bucket jits exactly once per corpus
 capacity), and the corpus is mutable — ``add_docs`` / ``delete_docs`` keep
 the doc-token table and the engine's embedding buffers in sync, with deleted
 docs unreturnable from the moment of deletion.
+
+For concurrent serving, ``start_driver()`` puts an async ``EngineDriver`` in
+front of the engine (deadline-based batch formation on a background thread);
+while it runs, ``retrieve``/``serve`` route each query through the driver's
+future-based request path — so calls from many client threads coalesce into
+shared batches — and ``stop_driver()`` drains it.
 """
 
 from __future__ import annotations
@@ -25,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import LMConfig
 from repro.core import ProgressiveSchedule, make_schedule
-from repro.engine import RetrievalEngine
+from repro.engine import EngineDriver, RetrievalEngine
 from repro.models import lm as LM
 
 Array = jax.Array
@@ -124,6 +130,39 @@ class RAGPipeline:
         self.engine.on_remap.append(self._apply_remap)
         self.engine.add_docs(db)
         self.embed = embedder or mean_pool_embedder(lm_params, lm_cfg)
+        self._driver: Optional[EngineDriver] = None
+        # store generation of the last compaction remap (written in
+        # _apply_remap under engine.lock): driver-path results dispatched
+        # before it hold pre-remap ids that no longer index the token table
+        self._last_remap_gen = 0
+
+    # -- async serving driver -------------------------------------------------
+    @property
+    def driver(self) -> Optional[EngineDriver]:
+        """The running ``EngineDriver`` (None while serving synchronously)."""
+        return self._driver
+
+    def start_driver(self, *, max_wait_ms: float = 2.0, max_queue: int = 1024,
+                     **driver_kw) -> EngineDriver:
+        """Put an async batching driver in front of the engine and start it.
+
+        While the driver runs, ``retrieve``/``serve`` submit through it (one
+        future per query) instead of calling ``engine.search`` — so requests
+        from many threads coalesce into shared deadline-flushed batches.
+        """
+        if self._driver is not None:
+            raise RuntimeError("driver already running; stop_driver() first")
+        self._driver = EngineDriver(
+            self.engine, max_wait_ms=max_wait_ms, max_queue=max_queue,
+            **driver_kw,
+        ).start()
+        return self._driver
+
+    def stop_driver(self, *, drain: bool = True) -> None:
+        """Stop the async driver (drain by default); idempotent."""
+        if self._driver is not None:
+            driver, self._driver = self._driver, None
+            driver.stop(drain=drain)
 
     # -- corpus mutation ------------------------------------------------------
     @property
@@ -192,12 +231,52 @@ class RAGPipeline:
             self._tokens_owned = True
         self._n_tokens = live_old.size
         self._tokens[: self._n_tokens] = rows
+        self._last_remap_gen = self.engine.store.generation
 
     # -- serving --------------------------------------------------------------
     def retrieve(self, query_tokens: Array) -> Tuple[np.ndarray, np.ndarray]:
-        """(B, S) query tokens -> ((B, k) scores, (B, k) doc indices)."""
-        q = self.embed(query_tokens)
-        return self.engine.search(q)
+        """(B, S) query tokens -> ((B, k) scores, (B, k) doc indices).
+
+        Routes through the async driver when one is running (each query
+        becomes a future; the driver coalesces across concurrent callers),
+        otherwise through the engine's synchronous bucketed batch API.
+        """
+        q = np.asarray(self.embed(query_tokens), np.float32)
+        driver = self._driver
+        if driver is None:
+            return self.engine.search(q)
+        if q.shape[0] == 0:
+            k = self.engine.out_k
+            return (np.zeros((0, k), np.float32), np.zeros((0, k), np.int32))
+        futures = [driver.submit(v) for v in q]
+        results = [f.result() for f in futures]
+        scores = np.stack([r.scores for r in results])
+        ids = np.stack([r.doc_ids for r in results])
+        with self.engine.lock:
+            # A compaction can land between a result's dispatch and this
+            # gather: such ids predate a remap the futures never saw, and
+            # would index the already-reorganized token table wrongly.
+            # store_generation detects exactly this; re-retrieve those rows
+            # synchronously under the lock.  The re-search runs the engine's
+            # own safe point and may itself compact (remapping the rows we
+            # did NOT re-search), so loop until no row predates the last
+            # remap.  Terminates: compaction clears every tombstone and no
+            # other thread can delete while we hold the lock, so at most
+            # one compaction can fire in here.
+            gens = [r.store_generation for r in results]
+            while True:
+                # the g < generation guard bounds the loop unconditionally:
+                # a re-searched row carries the newest generation, so it can
+                # only be flagged again if a compaction bumped it since
+                cur = self.engine.store.generation
+                stale = [j for j, g in enumerate(gens)
+                         if g < self._last_remap_gen and g < cur]
+                if not stale:
+                    break
+                scores[stale], ids[stale] = self.engine.search(q[stale])
+                for j in stale:
+                    gens[j] = self.engine.store.generation
+        return scores, ids
 
     def assemble_prompts(self, query_tokens: Array, doc_idx) -> Array:
         """Prepend the top-1 retrieved document to each query.

@@ -420,3 +420,88 @@ class TestProtocolSubclass:
         _, idx = eng.search(db[:2])
         np.testing.assert_array_equal(idx[:, 0], [0, 1])
         assert isinstance(eng.backend, IndexBackend)
+
+
+class TestDriverCompactionInterleave:
+    """Compaction/background rebuilds racing in-flight driver requests.
+
+    The engine compacts at safe points *between* driver dispatches; every id
+    a client polls must survive the remap protocol — an ``on_remap``
+    subscriber applying the engine's id maps to previously-returned ids must
+    always land on a valid row (or the -1 tombstone sentinel), never out of
+    range.  Regression for the driver/rebuild safe-point composition.
+    """
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("rebuild_mode", ("sync", "background"))
+    def test_polled_ids_survive_remap_under_driver_traffic(self, rebuild_mode):
+        import threading
+
+        from repro.engine import EngineDriver
+
+        eng = RetrievalEngine(
+            D, d_start=8, k0=16, buckets=(1, 2, 4), capacity=1024,
+            block_n=64, backend="flat", rebuild_mode=rebuild_mode,
+            compact_dead_frac=0.2,
+        )
+        rng = np.random.default_rng(5)
+        base = rng.normal(size=(120, D)).astype(np.float32)
+        eng.add_docs(base)
+        eng.warmup()
+
+        # on_remap subscriber: replays every engine id map over all ids the
+        # clients registered so far (same protocol RAGPipeline relies on)
+        polled = []                       # mutated under eng.lock only
+        last_remap_gen = [0]              # store generation of last remap
+        def follow_remap(id_map):
+            for ids in polled:
+                live = ids >= 0
+                assert ids[live].max(initial=-1) < id_map.shape[0]
+                ids[live] = id_map[ids[live]]
+            last_remap_gen[0] = eng.store.generation
+        eng.on_remap.append(follow_remap)
+
+        errors = []
+
+        def client(seed):
+            r = np.random.default_rng(seed)
+            try:
+                for _ in range(12):
+                    res = driver.retrieve(base[r.integers(len(base))],
+                                          timeout=30.0)
+                    ids = np.array(res.doc_ids, np.int64)
+                    with eng.lock:        # serialize vs compaction remaps
+                        if res.store_generation < last_remap_gen[0]:
+                            # a compaction landed between dispatch and this
+                            # registration: the ids predate a map we never
+                            # saw — exactly what store_generation exists to
+                            # detect.  A real client would re-retrieve.
+                            continue
+                        assert (ids < eng.store.size).all()
+                        polled.append(ids)
+            except Exception as e:
+                errors.append(e)
+
+        with EngineDriver(eng, max_wait_ms=1.0) as driver:
+            threads = [threading.Thread(target=client, args=(i,), daemon=True)
+                       for i in range(4)]
+            for t in threads:
+                t.start()
+            # deletes push dead_frac past compact_dead_frac repeatedly while
+            # clients are in flight; adds keep the corpus from emptying
+            for round_ in range(4):
+                with eng.lock:
+                    live = [i for i in range(eng.store.size)
+                            if eng.store.is_live(i)]
+                eng.delete_docs(live[:len(live) // 3])
+                eng.add_docs(rng.normal(size=(20, D)).astype(np.float32))
+            for t in threads:
+                t.join(timeout=30.0)
+                assert not t.is_alive(), "client thread hung"
+        assert not errors, errors[:3]
+        assert eng.stats.n_compactions >= 1, "no compaction ever triggered"
+        assert polled, "every result raced a compaction — nothing verified"
+        # after all remaps: every recorded id is -1 or an in-range row
+        for ids in polled:
+            live = ids[ids >= 0]
+            assert (live < eng.store.size).all()

@@ -249,6 +249,57 @@ class TestPipelineCorpusSync:
         assert out["retrieved"][0, 0] == -1
         assert out["generated"].shape == (1, 2)
 
+    def test_driver_path_matches_sync_path(self):
+        import jax.numpy as jnp
+        pipe, db, toks = self._pipe()
+        q = jnp.asarray(toks[:3])
+        _, sync_ids = pipe.retrieve(q)
+        pipe.start_driver(max_wait_ms=0.5)
+        try:
+            _, driver_ids = pipe.retrieve(q)
+            np.testing.assert_array_equal(driver_ids, sync_ids)
+        finally:
+            pipe.stop_driver()
+        # driver gone: back to the synchronous path
+        _, after = pipe.retrieve(q)
+        np.testing.assert_array_equal(after, sync_ids)
+
+    def test_driver_results_refreshed_when_compaction_races_delivery(self):
+        """A compaction landing between a driver dispatch and the pipeline's
+        gather must not leak pre-remap doc ids: retrieve() detects the stale
+        store_generation and re-searches under engine.lock."""
+        import jax.numpy as jnp
+        pipe, db, toks = self._pipe()
+        eng = pipe.engine
+        pipe.start_driver(max_wait_ms=0.5)
+        try:
+            # interpose on the driver's dispatch: right after the batch runs
+            # (results already stamped with the pre-compaction generation),
+            # delete half the corpus and force the compaction+rebuild —
+            # deterministic stand-in for a racing mutator thread
+            orig, fired = eng.execute_batch, []
+
+            def tampered(reqs):
+                out = orig(reqs)
+                if not fired:
+                    fired.append(True)
+                    eng.delete_docs([3, 4, 5])   # dead_frac 0.5 >= 0.3
+                    eng.maybe_rebuild(force=True)
+                return out
+
+            eng.execute_batch = tampered
+            try:
+                _, ids = pipe.retrieve(jnp.asarray(toks[:3]))
+            finally:
+                eng.execute_batch = orig
+            assert eng.stats.n_compactions == 1
+            # ids must be post-remap: valid rows of the shrunken token table
+            assert (ids < pipe.doc_tokens.shape[0]).all()
+            _, expected = pipe.retrieve(jnp.asarray(toks[:3]))
+            np.testing.assert_array_equal(ids, expected)
+        finally:
+            pipe.stop_driver()
+
     def test_conflicting_engine_args_rejected(self):
         import jax
         import jax.numpy as jnp

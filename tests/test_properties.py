@@ -1,5 +1,7 @@
 """Property-based (hypothesis) tests on system invariants."""
 
+import math
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -15,11 +17,116 @@ from repro.core import (
     truncated_search,
     rescore_candidates,
 )
+from repro.engine.batching import BucketPolicy, DeadlineBatcher, pad_batch
 from repro.kernels import ref as kref
 from repro.layers.common import softmax_xent
 
 
 F32 = st.floats(-10, 10, width=32, allow_nan=False, allow_infinity=False)
+
+# random bucket ladders: ascending unique positive sizes
+LADDERS = st.lists(
+    st.integers(1, 64), min_size=1, max_size=6, unique=True
+).map(lambda xs: tuple(sorted(xs)))
+
+
+@given(ladder=LADDERS, n=st.integers(1, 200))
+@settings(max_examples=100, deadline=None)
+def test_bucket_choice_is_minimal_in_ladder(ladder, n):
+    """The chosen bucket covers the batch (when any bucket can) and is the
+    *smallest* ladder element that does — no over-padding."""
+    p = BucketPolicy(ladder)
+    b = p.bucket_for(n)
+    assert b in ladder
+    if n <= p.max_size:
+        assert b >= n                            # bucket >= batch size
+        smaller = [s for s in ladder if s < b]
+        assert all(s < n for s in smaller)       # minimal in the ladder
+    else:
+        assert b == p.max_size                   # oversized: caller splits
+
+
+@given(ladder=LADDERS, n=st.integers(1, 200), extra=st.integers(1, 128))
+@settings(max_examples=100, deadline=None)
+def test_bucket_choice_stable_under_irrelevant_ladder_edits(ladder, n, extra):
+    """The choice depends only on the relevant ladder slice: adding a
+    strictly larger bucket, or dropping buckets too small to cover the
+    batch, never perturbs it.  (Permutations of the *sizes* themselves are
+    rejected by construction — BucketPolicy requires an ascending ladder —
+    so irrelevant-edit invariance is the meaningful stability property.)"""
+    p = BucketPolicy(ladder)
+    b = p.bucket_for(n)
+    if n <= p.max_size:
+        # a new bucket above the chosen one can't become the minimal cover
+        bigger = b + extra
+        p_plus = BucketPolicy(tuple(sorted(set(ladder) | {bigger})))
+        assert p_plus.bucket_for(n) == b
+    # buckets below min(n, max) were never candidates; dropping them is a
+    # no-op (for oversized n this leaves exactly the top bucket)
+    kept = tuple(s for s in ladder if s >= min(n, p.max_size))
+    assert BucketPolicy(kept).bucket_for(n) == b
+
+
+@given(ladder=LADDERS, n=st.integers(0, 300))
+@settings(max_examples=100, deadline=None)
+def test_plan_covers_batch_with_bounded_padding(ladder, n):
+    p = BucketPolicy(ladder)
+    plan = p.plan(n)
+    assert all(b in ladder for b in plan)
+    assert sum(plan) >= n                        # every request gets a slot
+    if n:
+        assert sum(plan) - n < p.max_size        # padding strictly bounded
+        assert all(b == p.max_size for b in plan[:-1])   # full buckets first
+    else:
+        assert plan == []
+
+
+@given(
+    data=st.data(),
+    b=st.integers(1, 12),
+    d=st.sampled_from([3, 8]),
+    extra=st.integers(0, 9),
+)
+@settings(max_examples=50, deadline=None)
+def test_pad_batch_preserves_prefix_and_zero_fills(data, b, d, extra):
+    q = data.draw(hnp.arrays(np.float32, (b, d), elements=F32))
+    out = pad_batch(q, b + extra)
+    assert out.shape == (b + extra, d)
+    np.testing.assert_array_equal(out[:b], q)    # real queries untouched
+    assert (out[b:] == 0).all()                  # padding is zero queries
+
+
+@given(
+    ladder=LADDERS,
+    n=st.integers(0, 200),
+    wait=st.floats(0, 10, allow_nan=False),
+    oldest=st.floats(0, 1e6, allow_nan=False),
+    dt=st.floats(0, 20, allow_nan=False),
+)
+@settings(max_examples=100, deadline=None)
+def test_deadline_batcher_decisions_are_sound(ladder, n, wait, oldest, dt):
+    """For every queue state and clock reading: flushes never exceed the top
+    bucket or the queue depth, waits are non-negative and never overshoot
+    the deadline, and a full bucket always flushes."""
+    b = DeadlineBatcher(BucketPolicy(ladder), max_wait_s=wait)
+    now = oldest + dt
+    deadline = oldest + wait      # same float expression the policy computes
+    d = b.decide(n, oldest, now)
+    if n == 0:
+        assert d.action == "idle"
+    elif n >= b.policy.max_size:
+        assert (d.action, d.n, d.reason) == ("flush", b.policy.max_size,
+                                             "full")
+    elif now >= deadline:
+        assert (d.action, d.n, d.reason) == ("flush", n, "deadline")
+    else:
+        assert d.action == "wait"
+        # float slack: deadline/now each round once, so the remaining wait
+        # can exceed max_wait_s by a couple of ulps at large clock values
+        assert 0 < d.wait_s <= wait + 4 * math.ulp(deadline)
+        # the clock reaching the deadline itself always flushes
+        later = b.decide(n, oldest, deadline)
+        assert later.action == "flush"
 
 
 @given(
