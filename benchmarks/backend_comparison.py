@@ -11,9 +11,20 @@ unclustered truncation-profile corpus.
 
 Writes ``results/BENCH_backends.json`` for CI/regression tracking.
 
+``--ivf-kernel`` switches to the fused-kernel comparison: the ``ivf``
+backend runs once per stage-0 path (XLA gather+rescore, fused Pallas
+kernel, fused int8 member slabs) and each record carries the *modeled*
+stage-0 HBM bytes/query from `repro.kernels.ivf_scan.stage0_bytes_model`
+alongside measured QPS and recall — the acceptance check is that the fused
+paths model strictly fewer bytes.  On CPU the kernel runs in interpret
+mode, so its *measured* QPS understates real-TPU throughput (the modeled
+bytes are the hardware-relevant number); writes
+``results/BENCH_ivf_kernel.json``.
+
     PYTHONPATH=src python -m benchmarks.backend_comparison [--smoke]
     PYTHONPATH=src python -m benchmarks.backend_comparison \
         --sizes 8192,65536 --dim 256 --requests 256
+    PYTHONPATH=src python -m benchmarks.backend_comparison --smoke --ivf-kernel
 """
 
 from __future__ import annotations
@@ -36,8 +47,34 @@ BACKEND_OPTS = {
 }
 
 
+def _stage0_bytes(eng):
+    """Modeled stage-0 HBM bytes/query for the engine's live IVF state."""
+    from repro.kernels.ivf_scan import stage0_bytes_model
+
+    state = eng.index_state
+    if state is None or state.data.get("flat") or "n_lists" not in state.data:
+        return None
+    pack = state.data.get("pack")
+    max_len = pack["max_len"] if pack else state.data["max_len"]
+    model = stage0_bytes_model(
+        n_lists=state.data["n_lists"],
+        max_len=max_len,
+        n_probe=min(eng.backend.n_probe, state.data["n_lists"]),
+        d0=eng.sched.stages[0].dim,
+        k=eng.sched.stages[0].k,
+        member_bytes=1 if (pack and pack["dtype"] == "int8") else 4,
+    )
+    fused = pack is not None
+    return {
+        "stage0_path": "fused" if fused else "xla",
+        "stage0_hbm_bytes_per_query": (
+            model["fused_bytes"] if fused else model["xla_bytes"]),
+        "stage0_bytes_model": model,
+    }
+
+
 def run_backend(corpus, backend, *, d_start, k0, k, buckets, exact_ids,
-                backend_opts=None):
+                backend_opts=None, label=None):
     import jax.numpy as jnp
 
     from repro.core import overlap_at_k, recall_at_k
@@ -67,8 +104,11 @@ def run_backend(corpus, backend, *, d_start, k0, k, buckets, exact_ids,
 
     s = eng.stats.summary()
     state = eng.index_state
+    bytes_info = _stage0_bytes(eng)
     return {
         "backend": backend,
+        "label": label or backend,
+        **(bytes_info or {}),
         "docs": n_docs,
         "build_s": build_s,
         "qps": len(rids) / wall,
@@ -95,8 +135,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--buckets", type=str, default="32")
     ap.add_argument("--backends", type=str, default="flat,ivf,quantized")
+    ap.add_argument("--ivf-kernel", action="store_true",
+                    help="compare the ivf backend's stage-0 paths (XLA vs "
+                         "fused Pallas kernel vs fused int8) instead of the "
+                         "backend sweep; writes BENCH_ivf_kernel.json")
     ap.add_argument("--out", type=str, default=None,
-                    help="output JSON (default results/BENCH_backends.json)")
+                    help="output JSON (default results/BENCH_backends.json, "
+                         "or BENCH_ivf_kernel.json with --ivf-kernel)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fast run for CI (overrides sizes)")
     args = ap.parse_args()
@@ -111,11 +156,21 @@ def main() -> None:
 
     sizes = [int(x) for x in args.sizes.split(",")]
     buckets = tuple(int(x) for x in args.buckets.split(","))
-    backends = args.backends.split(",")
+    if args.ivf_kernel:
+        # one ivf run per stage-0 path; use_kernel=True is interpret mode
+        # on CPU (parity-true, slow) and the real kernel on TPU
+        runs = [
+            ("ivf-xla", "ivf", {"use_kernel": False}),
+            ("ivf-fused", "ivf", {"use_kernel": True}),
+            ("ivf-fused-int8", "ivf",
+             {"use_kernel": True, "stage0_dtype": "int8"}),
+        ]
+    else:
+        runs = [(b, b, BACKEND_OPTS.get(b)) for b in args.backends.split(",")]
 
     print(f"# backend_comparison dim={args.dim} requests={args.requests} "
-          f"k={args.k} smoke={args.smoke}")
-    print("docs,backend,build_s,qps,p50_ms,p95_ms,recall@k_vs_exact")
+          f"k={args.k} smoke={args.smoke} ivf_kernel={args.ivf_kernel}")
+    print("docs,label,build_s,qps,p50_ms,p95_ms,recall@k_vs_exact")
     records = []
     for n_docs in sizes:
         corpus = make_clustered_corpus(
@@ -125,31 +180,54 @@ def main() -> None:
             jnp.asarray(corpus.queries), jnp.asarray(corpus.db),
             dim=args.dim, k=args.k, block_n=min(n_docs, 65536))
         exact_ids = np.asarray(exact_ids)
-        for backend in backends:
+        for label, backend, opts in runs:
             rec = run_backend(
                 corpus, backend, d_start=args.d_start, k0=args.k0, k=args.k,
                 buckets=buckets, exact_ids=exact_ids,
-                backend_opts=BACKEND_OPTS.get(backend),
+                backend_opts=opts, label=label,
             )
             records.append(rec)
-            print(f"{n_docs},{backend},{rec['build_s']:.2f},"
+            print(f"{n_docs},{label},{rec['build_s']:.2f},"
                   f"{rec['qps']:.1f},{rec['latency_ms_p50']:.2f},"
                   f"{rec['latency_ms_p95']:.2f},"
                   f"{rec['recall_at_k_vs_exact']:.3f}")
 
-    # acceptance summary: ivf vs flat at the largest corpus size
     largest = sizes[-1]
-    by = {r["backend"]: r for r in records if r["docs"] == largest}
-    if "ivf" in by and "flat" in by:
+    by = {r["label"]: r for r in records if r["docs"] == largest}
+    if args.ivf_kernel:
+        # acceptance: every fused path must model strictly fewer stage-0
+        # HBM bytes than the XLA lowering (the fusion's whole point)
+        if any(r.get("stage0_hbm_bytes_per_query") is None
+               for r in by.values()):
+            raise SystemExit(
+                f"corpus of {largest} docs is below the ivf backend's "
+                f"min_index_rows (flat fallback served, no stage-0 model); "
+                f"use --sizes with at least 64 docs")
+        xla = by["ivf-xla"]["stage0_hbm_bytes_per_query"]
+        for label in ("ivf-fused", "ivf-fused-int8"):
+            fused = by[label]["stage0_hbm_bytes_per_query"]
+            ok = fused < xla
+            print(f"# {label} @ {largest} docs: modeled stage-0 "
+                  f"{fused/1e3:.1f} kB/q vs xla {xla/1e3:.1f} kB/q "
+                  f"({fused/xla:.3f}x) recall@{args.k}="
+                  f"{by[label]['recall_at_k_vs_exact']:.3f} "
+                  f"{'OK' if ok else 'FAIL'}")
+            if not ok:
+                raise SystemExit(
+                    f"{label} models >= XLA stage-0 bytes ({fused} >= {xla})")
+    elif "ivf" in by and "flat" in by:
         speedup = by["ivf"]["qps"] / max(by["flat"]["qps"], 1e-9)
         print(f"# ivf vs flat @ {largest} docs: {speedup:.2f}x QPS, "
               f"ivf recall@{args.k}={by['ivf']['recall_at_k_vs_exact']:.3f}")
 
+    default_name = ("BENCH_ivf_kernel.json" if args.ivf_kernel
+                    else "BENCH_backends.json")
     out_path = args.out or os.path.join(
-        os.path.dirname(__file__), "..", "results", "BENCH_backends.json")
+        os.path.dirname(__file__), "..", "results", default_name)
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     payload = {
-        "benchmark": "backend_comparison",
+        "benchmark": ("backend_comparison/ivf_kernel" if args.ivf_kernel
+                      else "backend_comparison"),
         "dim": args.dim,
         "requests": args.requests,
         "k": args.k,

@@ -1,7 +1,15 @@
 """Roofline report: aggregates results/dryrun/*.json into the per-cell
 three-term table (EXPERIMENTS.md §Roofline reads from this).
 
+``--ivf-kernel`` instead reports the fused IVF stage-0 kernel's modeled
+HBM traffic (results/BENCH_ivf_kernel.json, written by
+``benchmarks.backend_comparison --ivf-kernel``): per path, the modeled
+bytes/query, the memory-roofline time those bytes cost at the reference
+HBM bandwidth, and the fused/XLA ratio — the "how much of the stage-0
+memory wall did the fusion remove" number that CPU-measured QPS can't show.
+
     PYTHONPATH=src python -m benchmarks.roofline [--outdir results/dryrun]
+    PYTHONPATH=src python -m benchmarks.roofline --ivf-kernel
 """
 
 import argparse
@@ -10,6 +18,7 @@ import json
 import os
 
 from repro.configs import get_arch, family_of
+from repro.launch.hlo_analysis import HBM_BW
 
 
 def model_flops_per_device(arch: str, shape_name: str, n_chips: int):
@@ -119,11 +128,55 @@ def report(outdir: str = "results/dryrun", mesh: str = "single",
     return rows
 
 
+def ivf_kernel_report(path: str = "results/BENCH_ivf_kernel.json"):
+    """Fused-vs-XLA IVF stage-0 table from the backend_comparison records."""
+    if not os.path.exists(path):
+        print(f"no {path}; run "
+              f"`python -m benchmarks.backend_comparison --ivf-kernel` first")
+        return []
+    with open(path) as f:
+        payload = json.load(f)
+    recs = [r for r in payload["records"]
+            if r.get("stage0_hbm_bytes_per_query") is not None]
+    xla_by_docs = {r["docs"]: r["stage0_hbm_bytes_per_query"]
+                   for r in recs if r.get("stage0_path") == "xla"}
+    rows = []
+    for r in recs:
+        b = r["stage0_hbm_bytes_per_query"]
+        xla = xla_by_docs.get(r["docs"])
+        rows.append({
+            "cell": f"{r['label']} x {r['docs']} docs",
+            "path": r.get("stage0_path", "?"),
+            "bytes/q": f"{b/1e3:.1f}kB",
+            "mem_s/q": fmt_seconds(b / HBM_BW),
+            "vs_xla": f"{b/xla:.3f}x" if xla else "-",
+            "qps_meas": f"{r['qps']:.1f}",
+            "recall@k": f"{r['recall_at_k_vs_exact']:.3f}",
+        })
+    cols = ["cell", "path", "bytes/q", "mem_s/q", "vs_xla", "qps_meas",
+            "recall@k"]
+    widths = {c: max(len(c), *(len(str(row.get(c, ""))) for row in rows))
+              for c in cols}
+    print(" | ".join(c.ljust(widths[c]) for c in cols))
+    print("-+-".join("-" * widths[c] for c in cols))
+    for row in rows:
+        print(" | ".join(str(row.get(c, "")).ljust(widths[c]) for c in cols))
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--outdir", default="results/dryrun")
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--ivf-kernel", action="store_true",
+                    help="report the fused IVF stage-0 kernel's modeled HBM "
+                         "bytes (reads results/BENCH_ivf_kernel.json)")
+    ap.add_argument("--ivf-kernel-json",
+                    default="results/BENCH_ivf_kernel.json")
     args = ap.parse_args()
+    if args.ivf_kernel:
+        ivf_kernel_report(args.ivf_kernel_json)
+        return
     report(args.outdir, args.mesh)
 
 

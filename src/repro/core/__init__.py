@@ -44,9 +44,11 @@ from repro.core.ivf import (
     balanced_assign,
     build_ivf,
     ivf_progressive_search,
+    ivf_progressive_search_kernel,
     ivf_progressive_search_sched,
     ivf_search,
     kmeans,
+    pack_lists,
 )
 from repro.core.metrics import overlap_at_k, recall_at_k, top1_accuracy
 
@@ -61,6 +63,7 @@ __all__ = [
     "PCAState", "fit_pca", "fit_pca_power", "fit_rotation", "rotate",
     "pca_transform",
     "balanced_assign", "build_ivf", "ivf_search", "ivf_progressive_search",
-    "ivf_progressive_search_sched", "kmeans",
+    "ivf_progressive_search_sched", "ivf_progressive_search_kernel",
+    "kmeans", "pack_lists",
     "top1_accuracy", "recall_at_k", "overlap_at_k",
 ]

@@ -89,6 +89,48 @@ def balanced_assign(
     return assign
 
 
+def pack_lists(
+    assign: np.ndarray,
+    n_lists: int,
+    *,
+    ids: Optional[np.ndarray] = None,
+    spare: int = 0,
+    round_pow2: bool = False,
+) -> np.ndarray:
+    """Pack a (N,) list assignment into a dense -1-padded member table.
+
+    The single packing path shared by `build_ivf` and the engine's IVF
+    backend (one stable argsort, not a per-list scan — n_lists scales with
+    N, so a scan per list would make builds quadratic).
+
+    Args:
+      assign:     (N,) int list assignment.
+      n_lists:    number of lists.
+      ids:        (N,) global ids to store (default ``arange(N)``).
+      spare:      reserved free slots per list beyond the max occupancy
+                  (incremental appends land here between rebuilds).
+      round_pow2: round the table width up to a power of two (shape
+                  stability across rebuilds keeps state swaps compile-free).
+
+    Returns:
+      (n_lists, width) int32 member table, -1 padded.
+    """
+    n = len(assign)
+    if ids is None:
+        ids = np.arange(n)
+    counts = np.bincount(assign, minlength=n_lists)
+    width = max(int(counts.max()) if n else 0, 0) + int(spare)
+    width = max(width, 1)
+    if round_pow2:
+        width = 1 << (width - 1).bit_length()
+    order = np.argsort(assign, kind="stable")
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    table = np.full((n_lists, width), -1, np.int32)
+    sorted_lists = assign[order]
+    table[sorted_lists, np.arange(n) - starts[sorted_lists]] = ids[order]
+    return table
+
+
 @functools.partial(jax.jit, static_argnames=("n_lists", "n_iter"))
 def kmeans(db: Array, n_lists: int, *, n_iter: int = 10, key=None) -> Array:
     """Lloyd's k-means over db rows. Returns (n_lists, D) centroids."""
@@ -121,15 +163,14 @@ def build_ivf(
     """
     cents = kmeans(db, n_lists, key=key, n_iter=n_iter)
     s = T.l2_scores(db.astype(jnp.float32), cents)
-    assign = jnp.asarray(jnp.argmin(s, axis=1))
-    # Host-side packing (build time, not query time).
-    import numpy as np
-    assign_np = np.asarray(assign)
-    lists = [np.nonzero(assign_np == c)[0] for c in range(n_lists)]
-    max_len = max(max(len(l) for l in lists), 1)
-    table = np.full((n_lists, max_len), -1, np.int32)
-    for c, l in enumerate(lists):
-        table[c, : len(l)] = l
+    # Host-side packing (build time, not query time) through the same
+    # assignment + packing path the engine backend uses: balanced_assign
+    # with an unbounded cap IS plain nearest-centroid assignment, and
+    # pack_lists is the one dense-table builder — the two paths can't drift.
+    choices = np.asarray(jnp.argmin(s, axis=1))[:, None]
+    n = choices.shape[0]
+    assign_np = balanced_assign(choices, np.arange(n), n_lists, cap=n)
+    table = pack_lists(assign_np, n_lists)
     return {
         "centroids": cents,
         "lists": jnp.asarray(table),
@@ -178,7 +219,7 @@ def ivf_progressive_search(
     Realizes the paper's future-work suggestion: ANN candidate generation
     composed with progressive dimensional refinement.
     """
-    _, cand = ivf_search(q, db, ivf, n_probe=n_probe, k=max(k * 8, k),
+    _, cand = ivf_search(q, db, ivf, n_probe=n_probe, k=k * 8,
                          dim=d_probe, valid=valid)
     return T.rescore_candidates(q, db, cand, dim=d_final, k=k, valid=valid)
 
@@ -199,6 +240,7 @@ def ivf_progressive_search_sched(
     index_dims: Optional[tuple] = None,
     extra_cand: Optional[Array] = None,
     metric: str = "l2",
+    cent_sq: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """Full progressive schedule with IVF probing replacing the stage-0 scan.
 
@@ -216,6 +258,9 @@ def ivf_progressive_search_sched(
                   candidate list (-1 padded); must be disjoint from list
                   members so the final top-k carries no duplicate ids.
       valid:      optional (N,) bool row mask threaded through every stage.
+      cent_sq:    optional (n_lists,) precomputed centroid squared norms —
+                  built backends cache these so probing doesn't recompute
+                  them per search call.
     """
     from repro.core.progressive import rescore_ladder
 
@@ -223,7 +268,7 @@ def ivf_progressive_search_sched(
     score_fn = T._METRICS[metric]
 
     d_probe = centroids.shape[1]
-    cs = score_fn(q[:, :d_probe], centroids)          # (Q, n_lists)
+    cs = score_fn(q[:, :d_probe], centroids, cent_sq)  # (Q, n_lists)
     _, probe = jax.lax.top_k(-cs, min(n_probe, centroids.shape[0]))
     cand = lists[probe].reshape(q.shape[0], -1)       # (Q, n_probe*max_len)
     cand = T.inject_candidates(cand, extra_cand)
@@ -237,4 +282,133 @@ def ivf_progressive_search_sched(
         q, db, cand, sched.stages,
         sq_prefix=sq_prefix, index_dims=index_dims,
         valid=valid, metric=metric,
+    )
+
+
+def _sq_col(sq_prefix, index_dims, dim: int):
+    """Static lookup of the cached prefix-norm column at ``dim``, if any."""
+    if sq_prefix is None or index_dims is None:
+        return None
+    dims = tuple(int(x) for x in index_dims)
+    if int(dim) not in dims:
+        return None
+    return sq_prefix[:, dims.index(int(dim))]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sched", "n_probe", "index_dims", "metric",
+                     "pack_meta", "merge", "interpret"),
+)
+def _kernel_search_jit(
+    q, db, centroids, lists, pack_rows, pack_sq, pack_scale,
+    valid, sq_prefix, extra_cand, cent_sq, sched,
+    *, n_probe, index_dims, metric, pack_meta, merge, interpret,
+):
+    from repro.kernels.ivf_scan import ivf_scan_topk
+    from repro.core.progressive import rescore_ladder
+
+    s0 = sched.stages[0]
+    d_probe = centroids.shape[1]
+    cs = T._METRICS[metric](q[:, :d_probe], centroids, cent_sq)
+    _, probe = jax.lax.top_k(-cs, min(n_probe, centroids.shape[0]))
+
+    # mask every unreturnable slot to -1 BEFORE the kernel: list padding is
+    # already -1, tombstoned rows come from the live validity bits (the
+    # packed member vectors are a build-time snapshot)
+    member_ids = lists
+    if valid is not None:
+        member_ids = jnp.where(
+            (lists >= 0) & valid[jnp.maximum(lists, 0)], lists, -1)
+
+    pack = {
+        "rows": pack_rows, "sq": pack_sq, "scale": pack_scale,
+        "dim": pack_meta[0], "max_len": pack_meta[1],
+        "block_m": pack_meta[2], "dtype": pack_meta[3],
+    }
+    scores, cand = ivf_scan_topk(
+        q, probe, member_ids, pack, k=s0.k, merge=merge, interpret=interpret)
+
+    if extra_cand is not None:
+        # the un-indexed tail window competes in stage 0 exactly as the XLA
+        # path's inject_candidates placement: rescore the (few) tail rows at
+        # the stage-0 dim and fold them into the kernel's top-k
+        e = extra_cand.shape[0]
+        tail_tbl = jnp.broadcast_to(
+            extra_cand[None, :], (q.shape[0], e))
+        ts, ti = T.rescore_candidates(
+            q, db, tail_tbl, dim=s0.dim, k=min(s0.k, e),
+            db_sq_at_dim=_sq_col(sq_prefix, index_dims, s0.dim),
+            valid=valid, metric=metric,
+        )
+        cat_s = jnp.concatenate([scores, ts], axis=1)
+        cat_i = jnp.concatenate([cand, ti], axis=1)
+        neg, pos = jax.lax.top_k(-cat_s, s0.k)
+        scores = -neg
+        cand = jnp.take_along_axis(cat_i, pos, axis=1)
+
+    return rescore_ladder(
+        q, db, cand, sched.stages[1:],
+        sq_prefix=sq_prefix, index_dims=index_dims,
+        valid=valid, metric=metric, scores=scores,
+    )
+
+
+def ivf_progressive_search_kernel(
+    q: Array,
+    db: Array,
+    centroids: Array,
+    lists: Array,
+    sched: ProgressiveSchedule,
+    *,
+    n_probe: int,
+    valid: Optional[Array] = None,
+    sq_prefix: Optional[Array] = None,
+    index_dims: Optional[tuple] = None,
+    extra_cand: Optional[Array] = None,
+    metric: str = "l2",
+    cent_sq: Optional[Array] = None,
+    pack: Optional[Dict] = None,
+    merge: str = "sort",
+    block_m: int = 128,
+    interpret: bool = False,
+) -> Tuple[Array, Array]:
+    """`ivf_progressive_search_sched` with the fused Pallas stage-0 kernel.
+
+    Same signature and same results (identical top-k id sets under fixed
+    probes — the parity contract `tests/test_kernels.py` enforces), but
+    stage 0 runs `repro.kernels.ivf_scan.ivf_scan_topk`: probed lists'
+    member rows stream HBM→VMEM once and the top-k never leaves VMEM,
+    instead of the XLA gather → materialized candidate table → score matrix
+    round trips.  The tail ``extra_cand`` window is rescored at the stage-0
+    dim and merged into the kernel's top-k, so injected rows compete exactly
+    where `inject_candidates` puts them on the XLA path.
+
+    Extra args over the sched path:
+      pack:      `pack_ivf_lists` build artifact (member slabs at the
+                 stage-0 dim; pass the cached one from backend state — when
+                 None it is packed on the fly, which costs a full gather).
+      merge:     in-kernel top-k merge strategy ('sort' | 'select').
+      block_m:   member rows per kernel step (on-the-fly packs only).
+      interpret: run the kernel in interpret mode (CPU validation).
+    """
+    if metric != "l2":
+        raise ValueError(
+            f"the fused IVF kernel scores L2 only, got metric={metric!r} "
+            f"(use ivf_progressive_search_sched)"
+        )
+    s0 = sched.stages[0]
+    if pack is None:
+        from repro.kernels.ivf_scan import pack_ivf_lists
+        pack = pack_ivf_lists(
+            db, lists, dim=s0.dim,
+            db_sq_at_dim=_sq_col(sq_prefix, index_dims, s0.dim),
+            block_m=block_m,
+        )
+    pack_meta = (pack["dim"], pack["max_len"], pack["block_m"], pack["dtype"])
+    return _kernel_search_jit(
+        q, db, centroids, lists, pack["rows"], pack["sq"], pack["scale"],
+        valid, sq_prefix, extra_cand, cent_sq, sched,
+        n_probe=n_probe, index_dims=index_dims, metric=metric,
+        pack_meta=pack_meta, merge=merge, interpret=interpret,
     )

@@ -372,6 +372,18 @@ class RetrievalEngine:
                 self.stats.n_rebuilds += 1
                 adopted = True
 
+        # incremental maintenance first: backends that can absorb appended
+        # rows into the live index (IVF nearest-centroid spare slots) do it
+        # here, at the same safe point — absorbed rows stop counting against
+        # the tail window, so the staleness checks below see the post-absorb
+        # load and append-heavy workloads stop forcing early rebuilds
+        if self._index_state is not None:
+            store = self.store
+            self.backend.absorb_appends(
+                self._index_state, store.db, store.valid,
+                sq_prefix=store.sq_prefix, stats=store.stats(),
+            )
+
         st = self.store.stats()
         state = self._index_state
         must = state is not None and self.backend.must_rebuild(state, st)

@@ -187,6 +187,27 @@ class IndexBackend(abc.ABC):
         """Hard staleness: searching ``state`` would be incorrect."""
         return False
 
+    def absorb_appends(
+        self,
+        state: IndexState,
+        db: Array,
+        valid: Array,
+        *,
+        sq_prefix: Optional[Array] = None,
+        stats: StoreStats,
+    ) -> None:
+        """Fold rows appended since the build into ``state`` incrementally.
+
+        Called by the engine at the same safe points as ``maybe_rebuild``
+        (under ``engine.lock``, never mid-batch); may mutate ``state.data``
+        in place but must preserve every traced shape (``shape_key`` is
+        fixed for the state's lifetime).  Default: no-op — appended rows
+        ride the tail window until the next rebuild.  Backends that can
+        absorb appends cheaply (e.g. IVF nearest-centroid assignment into
+        spare list slots) override this so append-heavy workloads stop
+        forcing early rebuilds.
+        """
+
     def describe(self) -> str:
         return f"{type(self).__name__}(metric={self.metric})"
 
@@ -221,6 +242,16 @@ class ChurnRebuildBackend(IndexBackend):
             stats.total_deleted - state.built_deleted
         )
 
+    def _tail_load(self, state: IndexState, stats: StoreStats) -> int:
+        """Rows the tail window must currently carry.
+
+        Default: everything appended since the build.  Backends that absorb
+        appends into the index between rebuilds (``absorb_appends``)
+        override this to count only the rows still outside it, which is
+        what keeps absorbed appends from tripping the rebuild bounds.
+        """
+        return stats.size - state.built_size
+
     def _tail_cap(self, n_active: int) -> int:
         # 2x the soft-staleness budget, clamped to an absolute window: every
         # query rescores the whole window (even empty slots cost a gather),
@@ -240,7 +271,7 @@ class ChurnRebuildBackend(IndexBackend):
         # appends approaching the hard tail bound: start rebuilding now
         # (in background mode this is what keeps the sync path off the
         # serving thread — the hard bound only fires if the build lags)
-        if stats.size - state.built_size >= state.data["tail_cap"] // 2:
+        if self._tail_load(state, stats) >= state.data["tail_cap"] // 2:
             return True
         threshold = max(
             self.min_rebuild_rows,
@@ -249,9 +280,9 @@ class ChurnRebuildBackend(IndexBackend):
         return self._churn_since_build(state, stats) >= threshold
 
     def must_rebuild(self, state: IndexState, stats: StoreStats) -> bool:
-        # correctness bound: appended rows beyond the tail window would be
-        # unreachable until the next build
-        return stats.size - state.built_size > state.data["tail_cap"]
+        # correctness bound: un-absorbed appended rows beyond the tail
+        # window would be unreachable until the next build
+        return self._tail_load(state, stats) > state.data["tail_cap"]
 
 
 # -- registry ---------------------------------------------------------------

@@ -17,16 +17,32 @@ decisions drive the cost/recall profile:
   the mean occupancy (see `repro.core.ivf.balanced_assign`), trading a
   little displacement for a table width near the mean.
 
-Staleness: appended rows ride the tail window (see ``base.tail_ids``) until
-churn crosses ``rebuild_frac`` of the built corpus, at which point the
-engine re-clusters; deletes only degrade list occupancy (the validity mask
-keeps them unreturnable) and count toward the same churn budget.  A rebuild
-drops tombstoned rows from the lists entirely — the index side of
-compaction.
+**Fused stage-0 kernel** (``use_kernel``): the probe+scan hot path can run
+as the Pallas kernel `repro.kernels.ivf_scan` — probed lists' member rows
+stream HBM→VMEM once (list-major slabs packed at build time) and the
+stage-0 top-k never leaves VMEM, instead of the XLA gather → candidate
+table → score matrix round trips.  ``'auto'`` picks the kernel on real TPUs
+and the XLA path on CPU (where the kernel would run in the interpreter);
+``True`` forces it everywhere (interpret mode off-TPU — the parity-tested
+configuration).  ``stage0_dtype='int8'`` stores the member slabs as
+per-dimension int8 codes (`repro.core.quant`'s grid), composing the
+quantized and IVF backends: 4× less stage-0 HBM traffic on top of the
+probed-list pruning, full-precision rescore unchanged.
+
+Staleness: appended rows are **absorbed incrementally** at engine safe
+points (``absorb_appends``): each new row goes to its nearest centroid's
+list while that list has spare slots (``append_spare`` reserved per list at
+build time); only rows whose list is full ride the tail window (see
+``base.tail_ids``), so append-heavy workloads stop forcing early rebuilds.
+Churn past ``rebuild_frac`` of the built corpus still triggers a full
+re-cluster (assignment quality), and deletes only degrade list occupancy
+(the validity mask keeps them unreturnable).  A rebuild drops tombstoned
+rows from the lists entirely — the index side of compaction.
 """
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional, Tuple
 
@@ -36,17 +52,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import progressive_search
-from repro.core.ivf import balanced_assign, ivf_progressive_search_sched, kmeans
+from repro.core.ivf import (
+    balanced_assign,
+    ivf_progressive_search_kernel,
+    ivf_progressive_search_sched,
+    kmeans,
+    pack_lists,
+)
 from repro.core import truncated as T
 from repro.index_backends.base import (
     ChurnRebuildBackend,
     IndexState,
     StoreStats,
     register_backend,
-    tail_ids,
 )
 
 Array = jax.Array
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_lists_donate(lists, lst, slot, ids):
+    return lists.at[lst, slot].set(ids)
+
+
+@jax.jit
+def _scatter_lists_copy(lists, lst, slot, ids):
+    return lists.at[lst, slot].set(ids)
 
 
 @register_backend
@@ -73,6 +104,11 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         min_rebuild_rows: int = 64,
         tail_window: int = 512,
         min_index_rows: int = 64,
+        append_spare: int = 8,
+        use_kernel="auto",
+        stage0_dtype: str = "float32",
+        kernel_block_m: int = 128,
+        kernel_merge: str = "sort",
         seed: int = 0,
     ):
         """Args beyond the shared engine config:
@@ -100,6 +136,19 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         min_index_rows: below this live-row count, skip clustering and
                         serve the flat path (state flag) — exact and
                         cheaper than probing a near-empty table.
+        append_spare:   free slots reserved per list at build time;
+                        ``absorb_appends`` places appended rows there
+                        (nearest centroid) between rebuilds, so only rows
+                        whose list is full consume the tail window.  0
+                        disables absorption (appends ride the tail only).
+        use_kernel:     'auto' | True | False — stage-0 via the fused
+                        Pallas probe+scan kernel ('auto': TPU only; True
+                        forces it, interpret mode off-TPU; False: XLA).
+        stage0_dtype:   'float32' | 'int8' member slabs for the kernel
+                        scan (int8 composes `repro.core.quant`'s codes;
+                        requires the kernel path).
+        kernel_block_m: member rows per kernel step.
+        kernel_merge:   in-kernel top-k merge ('sort' | 'select').
         """
         super().__init__(
             sched, metric=metric, block_n=block_n,
@@ -115,7 +164,43 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         self.train_rows = int(train_rows)
         self.assign_block = int(assign_block)
         self.min_index_rows = int(min_index_rows)
+        self.append_spare = int(append_spare)
+        if use_kernel not in ("auto", True, False):
+            raise ValueError(
+                f"use_kernel must be 'auto'|True|False, got {use_kernel!r}")
+        if stage0_dtype not in ("float32", "int8"):
+            raise ValueError(
+                f"stage0_dtype must be float32|int8, got {stage0_dtype!r}")
+        if use_kernel is True and metric != "l2":
+            raise ValueError(
+                "the fused IVF kernel scores L2 only; use metric='l2' or "
+                "use_kernel='auto'/False")
+        self.use_kernel = use_kernel
+        self.stage0_dtype = stage0_dtype
+        self.kernel_block_m = int(kernel_block_m)
+        self.kernel_merge = kernel_merge
         self.seed = int(seed)
+        if stage0_dtype == "int8" and not self._kernel_enabled():
+            # int8 member slabs only exist on the kernel path; silently
+            # serving the f32 XLA path instead would report a traffic win
+            # that never happens
+            raise ValueError(
+                "stage0_dtype='int8' packs member slabs for the fused "
+                "kernel, which is disabled here (use_kernel="
+                f"{use_kernel!r} on backend {jax.default_backend()!r}); "
+                "pass use_kernel=True (interpret mode off-TPU) or "
+                "stage0_dtype='float32'")
+
+    def _kernel_enabled(self) -> bool:
+        if self.use_kernel is False or self.metric != "l2":
+            return False
+        if self.use_kernel is True:
+            return True
+        return jax.default_backend() == "tpu"
+
+    @staticmethod
+    def _interpret() -> bool:
+        return jax.default_backend() != "tpu"
 
     # -- build --------------------------------------------------------------
     def build(
@@ -157,6 +242,9 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
             train = db_live
         cents = kmeans(train, n_lists, n_iter=self.kmeans_iters,
                        key=jax.random.PRNGKey(self.seed))
+        # centroid norms are probe-time constants: cache them in the state
+        # so no search call recomputes them
+        cent_sq = jnp.sum(cents.astype(jnp.float32) ** 2, axis=-1)
 
         m = min(self.assign_m, n_lists)
         # rank cells with the serving metric so assignment and probing
@@ -166,7 +254,7 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         neg_parts, choice_parts = [], []
         for lo in range(0, n_live, self.assign_block):
             blk = db_live[lo: lo + self.assign_block]
-            neg_b, choices_b = jax.lax.top_k(-score_fn(blk, cents), m)
+            neg_b, choices_b = jax.lax.top_k(-score_fn(blk, cents, cent_sq), m)
             # keep tiles on device: converting inside the loop would sync
             # per tile and serialize dispatch against compute
             neg_parts.append(neg_b[:, 0])
@@ -181,31 +269,155 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
             order = np.argsort(-neg0)               # confident rows first
             assign = balanced_assign(choices, order, n_lists, cap)
 
-        # Host-side packing into a dense -1-padded table of *global* doc ids
-        # (one argsort, not a per-list scan — n_lists scales with n_live, so
-        # a scan per list would make the build quadratic).
-        order = np.argsort(assign, kind="stable")
-        counts = np.bincount(assign, minlength=n_lists)
-        # table width rounds UP to a power of two (same shape-stability
-        # story as n_lists; the padding rows are -1 and score +inf)
-        max_len = 1 << (max(int(counts.max()), 1) - 1).bit_length()
-        starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
-        table = np.full((n_lists, max_len), -1, np.int32)
-        sorted_lists = assign[order]
-        table[sorted_lists, np.arange(n_live) - starts[sorted_lists]] = (
-            live[order])
+        # Dense -1-padded table of *global* doc ids via the shared packing
+        # path; append_spare slots stay free for incremental absorption, and
+        # the width rounds UP to a power of two (same shape-stability story
+        # as n_lists; padding slots are -1 and score +inf)
+        table = pack_lists(assign, n_lists, ids=live,
+                           spare=self.append_spare, round_pow2=True)
+        max_len = table.shape[1]
+        list_fill = np.bincount(assign, minlength=n_lists).astype(np.int64)
         tail_cap = self._tail_cap(n_live)
+
+        kernel_on = self._kernel_enabled()
+        pack = None
+        if kernel_on:
+            from repro.core.ivf import _sq_col
+            from repro.kernels.ivf_scan import pack_ivf_lists
+            s0_dim = self.sched.stages[0].dim
+            pack = pack_ivf_lists(
+                db, jnp.asarray(table), dim=s0_dim,
+                db_sq_at_dim=_sq_col(sq_prefix, self.dims, s0_dim),
+                dtype=self.stage0_dtype, block_m=self.kernel_block_m,
+            )
         return IndexState.from_stats(
             self.name, stats,
-            shape_key=(self.name, n_lists, max_len, tail_cap),
+            shape_key=(self.name, n_lists, max_len, tail_cap,
+                       kernel_on, self.stage0_dtype),
             data={
                 "centroids": cents,                 # (n_lists, d_probe) f32
+                "cent_sq": cent_sq,                 # (n_lists,) f32 cached
                 "lists": jnp.asarray(table),        # (n_lists, max_len) i32
+                "list_fill": list_fill,             # (n_lists,) host counts
+                "absorb_upto": stats.size,          # rows examined so far
+                "tail_pending": np.zeros((0,), np.int32),
+                "pack": pack,                       # kernel member slabs
                 "n_lists": n_lists,
                 "max_len": max_len,
                 "tail_cap": tail_cap,
             },
         )
+
+    # -- incremental maintenance -------------------------------------------
+    def _tail_load(self, state: IndexState, stats: StoreStats) -> int:
+        if state.data.get("flat"):
+            return super()._tail_load(state, stats)
+        return (len(state.data["tail_pending"])
+                + (stats.size - state.data["absorb_upto"]))
+
+    def absorb_appends(
+        self,
+        state: IndexState,
+        db: Array,
+        valid: Array,
+        *,
+        sq_prefix: Optional[Array] = None,
+        stats: StoreStats,
+    ) -> None:
+        """Assign appended rows to their nearest centroid's spare slots.
+
+        Runs between rebuilds at engine safe points: each row in
+        ``[absorb_upto, n_total)`` joins its nearest list if that list has a
+        free slot, otherwise it stays in the tail window (``tail_pending``).
+        Mutates ``state.data`` in place; every traced shape is preserved —
+        only table/slab *contents* change, so no dispatch recompiles.
+        """
+        if state.data.get("flat"):
+            return
+        if self.append_spare == 0:
+            # incremental maintenance disabled: appended rows ride the tail
+            # window until the next rebuild (the pre-absorption behavior,
+            # and what the tail-overflow hard-bound tests exercise)
+            return
+        n_total = stats.size
+        upto = state.data["absorb_upto"]
+        if n_total <= upto:
+            # no new rows — deletes may have freed tail-window capacity, but
+            # only re-check liveness when something was actually deleted
+            # since the last prune: this branch runs on every dispatch and
+            # the gather below is a device round trip under engine.lock
+            pending = state.data["tail_pending"]
+            if (pending.size
+                    and state.data.get("pruned_at_deleted")
+                    != stats.total_deleted):
+                alive = np.asarray(valid[jnp.asarray(pending)])
+                state.data["tail_pending"] = pending[alive]
+                state.data["pruned_at_deleted"] = stats.total_deleted
+            return
+        new_ids = np.arange(upto, n_total, dtype=np.int64)
+        cents = state.data["centroids"]
+        d_probe = cents.shape[1]
+        score_fn = T._METRICS[self.metric]
+        rows = db[jnp.asarray(new_ids), :d_probe].astype(jnp.float32)
+        nearest = np.asarray(jnp.argmin(
+            score_fn(rows, cents, state.data["cent_sq"]), axis=1))
+
+        lists = state.data["lists"]
+        pack = state.data["pack"]
+        fill = state.data["list_fill"]
+        max_len = state.data["max_len"]
+        acc_ids, acc_lists, acc_slots, rejected = [], [], [], []
+        for rid, lst in zip(new_ids, nearest):
+            lst = int(lst)
+            if fill[lst] < max_len:
+                acc_ids.append(rid)
+                acc_lists.append(lst)
+                acc_slots.append(int(fill[lst]))
+                fill[lst] += 1
+            else:
+                rejected.append(rid)
+        if acc_ids:
+            # jitted scatter with buffer donation off-CPU: absorbing a few
+            # rows must update the device tables in place, not copy them
+            # (batch padded to a power of two so burst sizes don't retrace)
+            from repro.kernels.ivf_scan import _pad_pow2, update_pack
+            scatter = (_scatter_lists_copy
+                       if jax.default_backend() == "cpu"
+                       else _scatter_lists_donate)
+            lists = scatter(
+                lists,
+                jnp.asarray(_pad_pow2(np.asarray(acc_lists, np.int32))),
+                jnp.asarray(_pad_pow2(np.asarray(acc_slots, np.int32))),
+                jnp.asarray(_pad_pow2(np.asarray(acc_ids, np.int32))))
+            if pack is not None:
+                dests = (np.asarray(acc_lists, np.int64) * pack["max_len"]
+                         + np.asarray(acc_slots, np.int64))
+                pack = update_pack(pack, db, np.asarray(acc_ids, np.int32),
+                                   dests)
+        pending = np.concatenate(
+            [state.data["tail_pending"],
+             np.asarray(rejected, np.int32)]).astype(np.int32)
+        if pending.size:
+            # tombstoned pending rows would hold window capacity forever;
+            # the validity mask already makes them unreturnable, so drop them
+            alive = np.asarray(valid[jnp.asarray(pending)])
+            pending = pending[alive]
+        state.data.update(
+            lists=lists, pack=pack, list_fill=fill,
+            absorb_upto=n_total, tail_pending=pending,
+            pruned_at_deleted=stats.total_deleted,
+        )
+
+    def _tail_ids(self, state: IndexState, n_total: int) -> np.ndarray:
+        """Static-shape (tail_cap,) window: pending + not-yet-absorbed ids."""
+        cap = state.data["tail_cap"]
+        out = np.full((cap,), -1, np.int32)
+        ids = np.concatenate([
+            state.data["tail_pending"],
+            np.arange(state.data["absorb_upto"], n_total, dtype=np.int32),
+        ])[:cap]
+        out[: ids.size] = ids
+        return out
 
     # -- search -------------------------------------------------------------
     def search(
@@ -227,20 +439,31 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
                 metric=self.metric,
             )
             return scores[:, :k], ids[:, :k]
-        tail = tail_ids(state, n_total, state.data["tail_cap"])
-        scores, ids = ivf_progressive_search_sched(
-            q, db, state.data["centroids"], state.data["lists"], self.sched,
-            n_probe=min(self.n_probe, state.data["n_lists"]),
-            valid=valid,
-            sq_prefix=sq_prefix, index_dims=self.dims,
-            extra_cand=jnp.asarray(tail),
-            metric=self.metric,
-        )
+        tail = jnp.asarray(self._tail_ids(state, n_total))
+        n_probe = min(self.n_probe, state.data["n_lists"])
+        if state.data["pack"] is not None:
+            scores, ids = ivf_progressive_search_kernel(
+                q, db, state.data["centroids"], state.data["lists"],
+                self.sched, n_probe=n_probe,
+                valid=valid, sq_prefix=sq_prefix, index_dims=self.dims,
+                extra_cand=tail, metric=self.metric,
+                cent_sq=state.data["cent_sq"], pack=state.data["pack"],
+                merge=self.kernel_merge, interpret=self._interpret(),
+            )
+        else:
+            scores, ids = ivf_progressive_search_sched(
+                q, db, state.data["centroids"], state.data["lists"],
+                self.sched, n_probe=n_probe,
+                valid=valid, sq_prefix=sq_prefix, index_dims=self.dims,
+                extra_cand=tail, metric=self.metric,
+                cent_sq=state.data["cent_sq"],
+            )
         return scores[:, :k], ids[:, :k]
 
     def describe(self) -> str:
         return (
             f"IVFProgressiveBackend(n_lists={self.n_lists or 'auto'}, "
             f"n_probe={self.n_probe}, rebuild_frac={self.rebuild_frac}, "
-            f"metric={self.metric})"
+            f"metric={self.metric}, use_kernel={self.use_kernel}, "
+            f"stage0_dtype={self.stage0_dtype})"
         )

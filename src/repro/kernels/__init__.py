@@ -2,6 +2,8 @@
 and the architecture zoo, each with a pure-jnp oracle in `ref.py`.
 
   distance_topk   — fused L2 scores + streaming top-k (stage-0 full-DB scan)
+  ivf_scan        — fused IVF probe+scan: probed lists stream HBM→VMEM once,
+                    top-k in VMEM (stage 0 of the IVF backend; f32 or int8)
   gather_rescore  — DMA-gather candidates + high-dim rescore (late stages)
   embedding_bag   — fused gather + bag-reduce (recsys tables)
   flash_attention — online-softmax attention (LM prefill/decode)

@@ -1,0 +1,377 @@
+"""Fused IVF probe+scan Pallas TPU kernel: probed lists stay in VMEM from
+gather to top-k.
+
+The IVF stage-0 hot path in XLA is three HBM round trips: the ``lists[probe]``
+gather materializes a (Q, n_probe·max_len) candidate-id table, the rescore
+gathers every candidate row into a (Q, C, d0) tensor, and the (Q, C) score
+matrix is written back out for ``top_k``.  All three are pure memory traffic —
+exactly where the RAG surveys put the retrieval bottleneck.  This kernel
+collapses them into **one streaming read of the probed lists' member rows**:
+
+* Member vectors are re-packed *list-major* at build time
+  (`pack_ivf_lists`): list ``c``'s members occupy the contiguous slab
+  ``rows[c·max_len : (c+1)·max_len]`` at the stage-0 dimensionality, so one
+  probed list is one contiguous HBM→VMEM block copy — no row-granular
+  gather at query time.
+* The probe table is **scalar-prefetched** (like `gather_rescore`'s
+  candidate ids): BlockSpec index maps read ``probe[i, p]`` before the body
+  runs, so Pallas's pipeline machinery double-buffers list ``p+1``'s member
+  slab while list ``p`` is being scored.
+* Scores are truncated-dim L2 (``‖x‖² − 2 q·x`` on the MXU, f32 accumulate)
+  with padding (``-1`` ids) and tombstoned rows masked to +inf in-kernel via
+  the caller-masked id table.
+* A running top-k rides in VMEM scratch across the sequential
+  (probe × chunk) grid axis, reusing `distance_topk`'s ``sort``/``select``
+  merge strategies — only the final (Q, k) result ever reaches HBM.
+
+An **int8 member-block variant** composes with `repro.core.quant`: member
+slabs are stored as per-dimension-scaled int8 codes (4× less stage-0 HBM
+traffic), the query is folded onto the same grid outside the kernel
+(``q_eff = round(clip(q/s))·s²``, the `_scaled_space_scores` split), and the
+packed norms are the dequantized ones — so the quantized and IVF backends
+stop being either/or.
+
+Validated against `repro.kernels.ref.ivf_scan_ref` and the XLA
+`ivf_progressive_search_sched` path in interpret mode (CPU container); the
+same code targets real TPUs with ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams, MemorySpace
+from repro.kernels.distance_topk import _merge_topk_select, _merge_topk_sort
+
+Array = jax.Array
+
+
+def pack_ivf_lists(
+    db: Array,
+    lists: Array,
+    *,
+    dim: int,
+    db_sq_at_dim: Optional[Array] = None,
+    dtype: str = "float32",
+    block_m: int = 128,
+    scale: Optional[Array] = None,
+) -> Dict:
+    """Build the list-major member pack the fused kernel scans.
+
+    Args:
+      db:           (N, D) corpus rows (HBM snapshot at build time).
+      lists:        (n_lists, max_len) int32 member table, -1 padded.
+      dim:          stage-0 dimensionality; member slabs store ``[:, :dim]``.
+      db_sq_at_dim: optional (N,) precomputed prefix squared norms at ``dim``
+                    (the store's cached ``sq_prefix`` column) — passing it
+                    keeps the pack's norms bit-identical to the XLA rescore
+                    path and skips the O(N·dim) recompute.
+      dtype:        'float32' | 'int8' (per-dimension symmetric codes; the
+                    packed norms become the *dequantized* ones).
+      block_m:      member rows scored per kernel step; ``max_len`` is padded
+                    to a multiple.
+      scale:        optional (dim,) quantization scale to reuse (int8 only) —
+                    lets incremental appends code new rows onto the grid the
+                    pack was built with.
+
+    Returns:
+      dict: ``rows`` (n_lists·max_len_p, dim) member slabs, ``sq``
+      (n_lists, max_len_p) f32 norms (+inf at pads), ``scale`` (dim,) f32 or
+      None, plus static meta (``dim``, ``max_len``, ``block_m``, ``dtype``).
+    """
+    if dtype not in ("float32", "int8"):
+        raise ValueError(f"pack dtype must be float32|int8, got {dtype!r}")
+    n_lists, max_len = lists.shape
+    bm = min(int(block_m), max(int(max_len), 1))
+    pad = -max_len % bm
+    if pad:
+        lists = jnp.pad(lists, ((0, 0), (0, pad)), constant_values=-1)
+        max_len = max_len + pad
+    flat = lists.reshape(-1)
+    safe = jnp.maximum(flat, 0)
+    rows = db[safe, :dim].astype(jnp.float32)          # (n_lists*max_len, dim)
+    member = flat >= 0
+
+    if dtype == "int8":
+        if scale is None:
+            # fit the grid on real member rows only (pad slots repeat row 0)
+            amax = jnp.max(
+                jnp.where(member[:, None], jnp.abs(rows), 0.0), axis=0)
+            scale = jnp.maximum(amax, 1e-12) / 127.0
+        codes = jnp.clip(jnp.round(rows / scale), -127, 127).astype(jnp.int8)
+        deq = codes.astype(jnp.float32) * scale
+        sq = jnp.sum(deq * deq, axis=-1)
+        rows = codes
+    else:
+        scale = None
+        if db_sq_at_dim is not None:
+            sq = db_sq_at_dim[safe].astype(jnp.float32)
+        else:
+            sq = jnp.sum(rows * rows, axis=-1)
+    sq = jnp.where(member, sq, jnp.inf).reshape(n_lists, max_len)
+    return {
+        "rows": rows,
+        "sq": sq,
+        "scale": scale,
+        "dim": int(dim),
+        "max_len": int(max_len),
+        "block_m": int(bm),
+        "dtype": dtype,
+    }
+
+
+def _pad_pow2(a):
+    """Pad axis 0 up to a power of two by repeating the last element.
+
+    Scatter updates are idempotent under repeats (same dest, same value),
+    and bounding the batch shape to O(log B) distinct sizes keeps the
+    donated scatter from retracing on every append-burst size.
+    """
+    n = a.shape[0]
+    target = 1 << (max(n, 1) - 1).bit_length()
+    if target == n:
+        return a
+    reps = np.ones(n, np.int64)
+    reps[-1] = target - n + 1
+    return np.repeat(a, reps, axis=0)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_pack_donate(rows_buf, sq_flat, dests, rows, sq):
+    return rows_buf.at[dests].set(rows), sq_flat.at[dests].set(sq)
+
+
+@jax.jit
+def _scatter_pack_copy(rows_buf, sq_flat, dests, rows, sq):
+    return rows_buf.at[dests].set(rows), sq_flat.at[dests].set(sq)
+
+
+def update_pack(pack: Dict, db: Array, ids, dests) -> Dict:
+    """Write appended rows into the pack's member slabs (incremental IVF).
+
+    ``ids`` are global doc ids, ``dests`` their flat slab positions
+    (``list·max_len + slot``).  Returns a new pack dict; int8 packs code
+    the new rows with the **stored** scale so the grid stays consistent
+    with the built slabs.  On accelerators the slab buffers are *donated*
+    to the scatter, so XLA updates them in place — absorbing a handful of
+    rows must not copy the whole O(n_lists·max_len·dim) slab (CPU has no
+    donation; it pays the copy, which only matters for interpret-mode
+    validation).
+    """
+    ids = _pad_pow2(np.asarray(ids, np.int32))
+    dests = jnp.asarray(_pad_pow2(np.asarray(dests, np.int32)))
+    rows = db[jnp.asarray(ids), : pack["dim"]].astype(jnp.float32)
+    if pack["dtype"] == "int8":
+        s = pack["scale"]
+        codes = jnp.clip(jnp.round(rows / s), -127, 127).astype(jnp.int8)
+        deq = codes.astype(jnp.float32) * s
+        sq = jnp.sum(deq * deq, axis=-1)
+        rows = codes
+    else:
+        sq = jnp.sum(rows * rows, axis=-1)
+    scatter = (_scatter_pack_copy if jax.default_backend() == "cpu"
+               else _scatter_pack_donate)
+    new_rows, new_sq = scatter(
+        pack["rows"], pack["sq"].reshape(-1), dests, rows, sq)
+    out = dict(pack)
+    out["rows"] = new_rows
+    out["sq"] = new_sq.reshape(pack["sq"].shape)
+    return out
+
+
+def _kernel(
+    probe_ref, q_ref, rows_ref, sq_ref, ids_ref, out_s_ref, out_i_ref,
+    best_s, best_i, *, k: int, merge: str, cast: str,
+):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_s[...] = jnp.full_like(best_s, jnp.inf)
+        best_i[...] = jnp.full_like(best_i, -1)
+
+    q = q_ref[...]                                     # (1, d0) f32
+    rows = rows_ref[...]                               # (bm, d0)
+    # int8 slabs matmul through bf16 (the int8 path of core.quant); f32
+    # slabs pass through untouched
+    rows = rows.astype(jnp.bfloat16 if cast == "int8" else jnp.float32)
+    ip = jax.lax.dot_general(
+        q, rows, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (1, bm)
+    scores = sq_ref[...] - 2.0 * ip
+    # -1 ids are list padding or tombstoned rows: unreturnable
+    scores = jnp.where(ids_ref[...] >= 0, scores, jnp.inf)
+
+    cat_s = jnp.concatenate([best_s[...], scores], axis=1)
+    cat_i = jnp.concatenate([best_i[...], ids_ref[...]], axis=1)
+    if merge == "sort":
+        new_s, new_i = _merge_topk_sort(cat_s, cat_i, k)
+    else:
+        new_s, new_i = _merge_topk_select(cat_s, cat_i, k)
+    best_s[...] = new_s
+    best_i[...] = new_i
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        out_s_ref[...] = best_s[...]
+        out_i_ref[...] = best_i[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "dim", "max_len", "block_m", "dtype", "merge",
+                     "interpret"),
+)
+def _ivf_scan_call(
+    q, probe, rows, sq, member_ids, *, k, dim, max_len, block_m, dtype,
+    merge, interpret,
+):
+    nq = q.shape[0]
+    n_probe = probe.shape[1]
+    nc = max_len // block_m
+    nj = n_probe * nc
+
+    def rows_idx(i, j, probe):
+        return (probe[i, j // nc] * nc + j % nc, 0)
+
+    def list_idx(i, j, probe):
+        return (probe[i, j // nc], j % nc)
+
+    kern = functools.partial(_kernel, k=k, merge=merge, cast=dtype)
+    out_s, out_i = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nq, nj),
+            in_specs=[
+                pl.BlockSpec((1, dim), lambda i, j, probe: (i, 0)),
+                pl.BlockSpec((block_m, dim), rows_idx),
+                pl.BlockSpec((1, block_m), list_idx),
+                pl.BlockSpec((1, block_m), list_idx),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, k), lambda i, j, probe: (i, 0)),
+                pl.BlockSpec((1, k), lambda i, j, probe: (i, 0)),
+            ],
+            scratch_shapes=[
+                MemorySpace.VMEM((1, k), jnp.float32),
+                MemorySpace.VMEM((1, k), jnp.int32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(probe, q, rows, sq, member_ids)
+    return out_s, out_i
+
+
+def ivf_scan_topk(
+    q: Array,
+    probe: Array,
+    member_ids: Array,
+    pack: Dict,
+    *,
+    k: int,
+    merge: str = "sort",
+    interpret: bool = False,
+) -> Tuple[Array, Array]:
+    """Fused stage-0 scan: score every probed list's members, keep the best k.
+
+    Args:
+      q:          (Q, D) queries (only ``[:, :pack['dim']]`` is scored).
+      probe:      (Q, n_probe) int32 — per-query probed list indices, all in
+                  ``[0, n_lists)`` and **distinct within a row** (duplicated
+                  probes would double-count their members in the top-k).
+      member_ids: (n_lists, max_len) int32 global doc ids with every
+                  unreturnable slot already masked to -1 (list padding AND
+                  tombstoned rows — mask with the live validity bits before
+                  calling; the packed member *vectors* are a build-time
+                  snapshot and are not consulted for liveness).
+      pack:       `pack_ivf_lists` output (member slabs at stage-0 dim).
+      k:          neighbours kept (static).
+      merge:      'sort' | 'select' (see `distance_topk`).
+      interpret:  interpret mode for CPU validation.
+
+    Returns:
+      ((Q, k) float32 rank-equivalent L2 scores ascending, +inf at empty
+      slots; (Q, k) int32 global doc ids, -1 at empty slots).
+    """
+    if merge not in ("sort", "select"):
+        raise ValueError(f"merge must be sort|select, got {merge!r}")
+    d0, max_len, bm = pack["dim"], pack["max_len"], pack["block_m"]
+    nq = q.shape[0]
+    if nq == 0:
+        return (jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32))
+    qd = q[:, :d0].astype(jnp.float32)
+    if pack["dtype"] == "int8":
+        # fold the query onto the codes' grid outside the kernel: int32-ish
+        # inner products rescaled per-dim by s², db side stays int8
+        s = pack["scale"]
+        qq = jnp.clip(jnp.round(qd / s), -127, 127)
+        qd = (qq * s * s).astype(jnp.float32)
+    pad = max_len - member_ids.shape[1]
+    if pad:
+        member_ids = jnp.pad(member_ids, ((0, 0), (0, pad)),
+                             constant_values=-1)
+    return _ivf_scan_call(
+        qd, probe.astype(jnp.int32), pack["rows"], pack["sq"], member_ids,
+        k=k, dim=d0, max_len=max_len, block_m=bm, dtype=pack["dtype"],
+        merge=merge, interpret=interpret,
+    )
+
+
+def stage0_bytes_model(
+    *,
+    n_lists: int,
+    max_len: int,
+    n_probe: int,
+    d0: int,
+    k: int,
+    member_bytes: int = 4,
+) -> Dict[str, float]:
+    """Modeled per-query stage-0 HBM bytes: fused kernel vs the XLA lowering.
+
+    Both paths share the probe matmul (centroid read, amortized across the
+    batch) so it is excluded; the model counts the candidate-dependent terms
+    with C = n_probe · max_len:
+
+      XLA   : write + re-read the (C,) id table (top_k gather feeds from it),
+              read C member rows (4 B/dim f32), write + re-read the gathered
+              (C, d0) tensor (XLA materializes it for the einsum), and
+              write + re-read the (C,) f32 score row for top_k.
+      fused : stream C member rows once (``member_bytes``/dim), plus the
+              (C,) id and norm side tables, plus the (k,) result.
+
+    The fused path models strictly fewer bytes for every d0 ≥ 1 — the
+    acceptance check `benchmarks/backend_comparison.py --ivf-kernel` records.
+    """
+    c = float(n_probe * max_len)
+    xla = (
+        2 * 4 * c            # candidate-id table: write + read back
+        + 4 * c * d0         # gather reads member rows (f32)
+        + 2 * 4 * c * d0     # materialized (C, d0) gather: write + re-read
+        + 2 * 4 * c          # (C,) score row: write + read for top_k
+    )
+    fused = (
+        member_bytes * c * d0   # one streaming read of member slabs
+        + 4 * c                 # masked id table
+        + 4 * c                 # packed norms
+        + 8 * k                 # (k,) scores + ids out
+    )
+    return {"xla_bytes": xla, "fused_bytes": fused,
+            "ratio": fused / xla if xla else 0.0}

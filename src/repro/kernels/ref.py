@@ -50,6 +50,27 @@ def gather_rescore_ref(
     return jnp.where(cand >= 0, s, jnp.inf)
 
 
+def ivf_scan_ref(
+    q: Array, db: Array, member_ids: Array, probe: Array, *, dim: int, k: int
+) -> Tuple[Array, Array]:
+    """Fused IVF stage-0 oracle: exact top-k over each query's probed lists.
+
+    Args:
+      q:          (Q, D) queries; db: (N, D) corpus.
+      member_ids: (n_lists, max_len) int32 global ids, -1 = masked/padding.
+      probe:      (Q, n_probe) int32 probed list indices (distinct per row).
+      dim:        stage-0 truncation; k: neighbours kept.
+    Returns:
+      ((Q, k) scores ascending, +inf empties; (Q, k) int32 ids, -1 empties).
+    """
+    cand = member_ids[probe].reshape(q.shape[0], -1)   # (Q, n_probe*max_len)
+    s = gather_rescore_ref(q[:, :dim], db[:, :dim], cand)
+    neg, pos = jax.lax.top_k(-s, k)
+    idx = jnp.take_along_axis(cand, pos, axis=1)
+    idx = jnp.where(jnp.isfinite(-neg), idx, -1)
+    return -neg, idx.astype(jnp.int32)
+
+
 def embedding_bag_ref(
     table: Array, indices: Array, *, mode: str = "sum",
     weights: Optional[Array] = None,

@@ -88,6 +88,14 @@ def main():
     ap.add_argument("--backend", type=str, default="flat",
                     choices=("flat", "ivf", "quantized"),
                     help="index backend behind the retrieval engine")
+    ap.add_argument("--use-kernel", type=str, default="auto",
+                    choices=("auto", "true", "false"),
+                    help="ivf only: fused Pallas stage-0 probe+scan kernel "
+                         "(auto = TPU only; true forces interpret mode on "
+                         "CPU)")
+    ap.add_argument("--stage0-dtype", type=str, default="float32",
+                    choices=("float32", "int8"),
+                    help="ivf only: member-slab dtype for the fused kernel")
     ap.add_argument("--clients", type=int, default=4,
                     help="concurrent open-loop client threads")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
@@ -110,8 +118,16 @@ def main():
     embed = mean_pool_embedder(params, cfg)
     db = embed(doc_tokens)
     buckets = tuple(int(x) for x in args.buckets.split(","))
+    backend_opts = None
+    if args.backend == "ivf":
+        backend_opts = {
+            "use_kernel": {"auto": "auto", "true": True,
+                           "false": False}[args.use_kernel],
+            "stage0_dtype": args.stage0_dtype,
+        }
     pipe = RAGPipeline(params, cfg, db, doc_tokens, d_start=16, k0=32,
-                       buckets=buckets, backend=args.backend)
+                       buckets=buckets, backend=args.backend,
+                       backend_opts=backend_opts)
     engine = pipe.engine
     print(f"[engine]   {engine.describe()}")
 

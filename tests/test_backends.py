@@ -21,7 +21,10 @@ from repro.index_backends import (
 
 RNG = np.random.default_rng(11)
 D = 32
-BACKENDS = ("flat", "ivf", "quantized")
+REGISTERED = ("flat", "ivf", "quantized")
+# "ivf_kernel" is the ivf backend with the fused Pallas stage-0 scan forced
+# (interpret mode on CPU) — it must pass the identical engine contract
+BACKENDS = REGISTERED + ("ivf_kernel",)
 
 
 def opts_for(backend, **extra):
@@ -30,9 +33,16 @@ def opts_for(backend, **extra):
         # small corpora: force real clustering instead of the flat fallback
         "ivf": dict(n_lists=12, n_probe=6, min_index_rows=32,
                     min_rebuild_rows=16),
+        "ivf_kernel": dict(n_lists=12, n_probe=6, min_index_rows=32,
+                           min_rebuild_rows=16, use_kernel=True,
+                           kernel_block_m=16),
         "quantized": dict(min_rebuild_rows=16),
     }[backend]
     return {**base, **extra} or None
+
+
+def engine_backend(backend):
+    return "ivf" if backend == "ivf_kernel" else backend
 
 
 def make_engine(backend, n_docs=200, seed=7, **kw):
@@ -42,7 +52,8 @@ def make_engine(backend, n_docs=200, seed=7, **kw):
     kw.setdefault("buckets", (4,))
     kw.setdefault("capacity", 64)
     kw.setdefault("block_n", 64)
-    eng = RetrievalEngine(D, backend=backend, backend_opts=opts, **kw)
+    eng = RetrievalEngine(D, backend=engine_backend(backend),
+                          backend_opts=opts, **kw)
     db = np.random.default_rng(seed).normal(size=(n_docs, D)).astype(np.float32)
     eng.add_docs(db)
     return eng, db
@@ -50,7 +61,7 @@ def make_engine(backend, n_docs=200, seed=7, **kw):
 
 class TestRegistry:
     def test_names(self):
-        assert set(BACKENDS) <= set(backend_names())
+        assert set(REGISTERED) <= set(backend_names())
 
     def test_unknown_backend_raises(self):
         with pytest.raises(ValueError, match="unknown index backend"):
@@ -139,7 +150,11 @@ class TestBackendEngineSuite:
     def test_tail_overflow_forces_rebuild_even_when_off(self, backend):
         if backend == "flat":
             pytest.skip("flat covers every row; no tail window")
+        # append_spare=0 turns incremental absorption off (where supported),
+        # so appends land in the tail window and the hard bound must fire
         opts = opts_for(backend, min_rebuild_rows=4, rebuild_frac=0.01)
+        if "ivf" in backend:
+            opts["append_spare"] = 0
         eng, db = make_engine(backend, backend_opts=opts,
                               rebuild_mode="off")
         eng.search(db[:1])
@@ -151,7 +166,7 @@ class TestBackendEngineSuite:
         assert eng.stats.n_rebuilds > n_rebuilds
 
 
-@pytest.mark.parametrize("backend", ("ivf", "quantized"))
+@pytest.mark.parametrize("backend", ("ivf", "ivf_kernel", "quantized"))
 class TestRecall:
     def test_recall_vs_flat_on_clustered_corpus(self, backend):
         from repro.rag import make_clustered_corpus
@@ -170,9 +185,12 @@ class TestRecall:
             return float(overlap_at_k(jnp.asarray(ids), exact, 10))
 
         flat = run("flat", None)
-        opts = (dict(n_lists=24, n_probe=8, min_index_rows=32)
-                if backend == "ivf" else None)
-        approx = run(backend, opts)
+        opts = None
+        if "ivf" in backend:
+            opts = dict(n_lists=24, n_probe=8, min_index_rows=32)
+            if backend == "ivf_kernel":
+                opts["use_kernel"] = True
+        approx = run(engine_backend(backend), opts)
         assert flat >= 0.9                       # schedule is wide enough
         # approximate backends stay within 10 points of the exact baseline
         assert approx >= flat - 0.10
@@ -355,6 +373,99 @@ class TestBackgroundRebuild:
         assert eng.store.is_live(int(ids[0]))
 
 
+class TestIncrementalAbsorb:
+    """Incremental IVF maintenance: appended rows join their nearest
+    centroid's spare list slots between rebuilds; only rows whose list is
+    full ride the tail window, and the rebuild bounds count only those."""
+
+    def _build(self, n_docs=96, **opts):
+        from repro.core import make_schedule
+        sched = make_schedule(8, D, 16)
+        base = dict(n_lists=8, n_probe=8, min_index_rows=16,
+                    balance_factor=1.0, append_spare=4, tail_window=16,
+                    min_rebuild_rows=4, rebuild_frac=10.0)  # churn disabled
+        base.update(opts)
+        be = make_backend("ivf", sched=sched, **base)
+        store = DocStore(D, (8, 16, 32), capacity=128)
+        store.add(RNG.normal(size=(n_docs, D)).astype(np.float32))
+        state = be.build(store.db, store.valid,
+                         sq_prefix=store.sq_prefix, stats=store.stats())
+        return be, store, state
+
+    def _absorb(self, be, store, state):
+        be.absorb_appends(state, store.db, store.valid,
+                          sq_prefix=store.sq_prefix, stats=store.stats())
+
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_appends_absorbed_into_lists(self, use_kernel):
+        be, store, state = self._build(use_kernel=use_kernel,
+                                       kernel_block_m=16)
+        new = RNG.normal(size=(4, D)).astype(np.float32) * 3
+        ids = store.add(new)
+        self._absorb(be, store, state)
+        assert state.data["absorb_upto"] == store.size
+        assert len(state.data["tail_pending"]) == 0
+        # reachable through the LISTS: the tail window is empty
+        assert (be._tail_ids(state, store.size) == -1).all()
+        _, idx = be.search(jnp.asarray(new), state, store.db, store.valid,
+                           sq_prefix=store.sq_prefix, n_total=store.size,
+                           k=1)
+        np.testing.assert_array_equal(np.asarray(idx)[:, 0], ids)
+        assert not be.must_rebuild(state, store.stats())
+        assert not be.needs_rebuild(state, store.stats())
+
+    def test_full_lists_overflow_to_tail_then_force_rebuild(self):
+        be, store, state = self._build()
+        # total list capacity is 8 lists x 16 slots = 128; 96 built rows
+        # leave at most 32 free slots, so 60 appends must overflow
+        store.add(RNG.normal(size=(60, D)).astype(np.float32))
+        self._absorb(be, store, state)
+        assert state.data["absorb_upto"] == store.size
+        pend = state.data["tail_pending"]
+        assert len(pend) >= 60 - 32
+        # the overflow exceeds the tail window: the hard bound fires — an
+        # engine would rebuild before the next dispatch
+        assert be.must_rebuild(state, store.stats())
+
+    def test_absorb_disabled_with_zero_spare(self):
+        be, store, state = self._build(append_spare=0)
+        store.add(RNG.normal(size=(4, D)).astype(np.float32))
+        self._absorb(be, store, state)
+        assert state.data["absorb_upto"] == 96      # untouched
+        # appended rows still reachable — via the tail window
+        tail = be._tail_ids(state, store.size)
+        np.testing.assert_array_equal(tail[:4], np.arange(96, 100))
+
+    def test_tombstoned_pending_rows_pruned(self):
+        be, store, state = self._build()
+        store.add(RNG.normal(size=(60, D)).astype(np.float32))
+        self._absorb(be, store, state)
+        pend = state.data["tail_pending"]
+        assert len(pend) > 0
+        store.delete(pend.tolist())
+        self._absorb(be, store, state)              # no new rows; prunes
+        # deleted pending rows no longer hold tail-window capacity
+        assert len(state.data["tail_pending"]) == 0
+
+    @pytest.mark.parametrize("backend", ("ivf", "ivf_kernel"))
+    def test_engine_absorbs_appends_without_rebuild(self, backend):
+        eng, db = make_engine(backend)
+        eng.search(db[:1])                          # initial build
+        n_rb = eng.stats.n_rebuilds
+        new = RNG.normal(size=(8, D)).astype(np.float32) * 4
+        ids = eng.add_docs(new)
+        _, idx = eng.search(new)
+        np.testing.assert_array_equal(idx[:, 0], ids)
+        st = eng.index_state
+        assert st.data["absorb_upto"] == eng.store.size
+        assert len(st.data["tail_pending"]) == 0
+        assert eng.stats.n_rebuilds == n_rb
+        # a deleted absorbed row is unreturnable immediately
+        eng.delete_docs([int(ids[0])])
+        _, idx = eng.search(new[:1])
+        assert int(ids[0]) not in idx
+
+
 class TestStaleness:
     def test_needs_rebuild_thresholds(self):
         from repro.core import make_schedule
@@ -491,9 +602,12 @@ class TestDriverCompactionInterleave:
             # clients are in flight; adds keep the corpus from emptying
             for round_ in range(4):
                 with eng.lock:
+                    # snapshot + delete atomically: a driver-thread
+                    # compaction between them would remap the snapshot's ids
+                    # out from under the delete (the lock is reentrant)
                     live = [i for i in range(eng.store.size)
                             if eng.store.is_live(i)]
-                eng.delete_docs(live[:len(live) // 3])
+                    eng.delete_docs(live[:len(live) // 3])
                 eng.add_docs(rng.normal(size=(20, D)).astype(np.float32))
             for t in threads:
                 t.join(timeout=30.0)

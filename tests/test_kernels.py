@@ -9,9 +9,25 @@ from repro.kernels.distance_topk import l2_topk
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gather_rescore import gather_rescore
+from repro.kernels.ivf_scan import ivf_scan_topk, pack_ivf_lists, update_pack
 from repro.kernels import ref
 
 RNG = np.random.default_rng(42)
+
+
+def _random_ivf(n, n_lists, max_len, rng, *, coverage=1.0):
+    """Random -1-padded member table over a subset of rows (no duplicates)."""
+    lists = np.full((n_lists, max_len), -1, np.int32)
+    rows = rng.permutation(n)[: int(n * coverage)]
+    assign = rng.integers(0, n_lists, rows.size)
+    for c in range(n_lists):
+        mem = rows[assign == c][:max_len]
+        lists[c, : mem.size] = mem
+    return lists
+
+
+def _id_sets(ids):
+    return [set(int(x) for x in row if x >= 0) for row in np.asarray(ids)]
 
 
 class TestDistanceTopK:
@@ -73,6 +89,164 @@ class TestDistanceTopK:
                          interpret=True)
         s2, i2 = l2_topk(q, db, k=2, block_q=8, block_n=32, interpret=True)
         np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+class TestIvfScan:
+    """Fused IVF probe+scan kernel vs the jnp oracle and the XLA IVF path."""
+
+    @pytest.mark.parametrize("n,d,n_lists,max_len,bm,nq,n_probe,k", [
+        (300, 16, 8, 64, 16, 5, 3, 10),
+        (250, 32, 6, 48, 16, 7, 4, 8),      # max_len not a block multiple
+        (200, 8, 10, 13, 8, 4, 5, 6),       # heavy pad: 13 -> 16
+        (120, 24, 4, 64, 64, 3, 2, 12),     # single chunk per list
+    ])
+    @pytest.mark.parametrize("merge", ["sort", "select"])
+    def test_matches_ref(self, n, d, n_lists, max_len, bm, nq, n_probe, k,
+                         merge):
+        rng = np.random.default_rng(n + max_len)
+        db = rng.normal(size=(n, d)).astype(np.float32)
+        lists = _random_ivf(n, n_lists, max_len, rng, coverage=0.9)
+        probe = np.stack([rng.choice(n_lists, n_probe, replace=False)
+                          for _ in range(nq)]).astype(np.int32)
+        q = rng.normal(size=(nq, d)).astype(np.float32)
+        pack = pack_ivf_lists(jnp.asarray(db), jnp.asarray(lists), dim=d,
+                              block_m=bm)
+        s, i = ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                             jnp.asarray(lists), pack, k=k, merge=merge,
+                             interpret=True)
+        rs, ri = ref.ivf_scan_ref(jnp.asarray(q), jnp.asarray(db),
+                                  jnp.asarray(lists), jnp.asarray(probe),
+                                  dim=d, k=k)
+        assert _id_sets(i) == _id_sets(ri)
+        ss = np.sort(np.asarray(s), axis=1)
+        rr = np.sort(np.asarray(rs), axis=1)
+        fin = np.isfinite(rr)
+        np.testing.assert_allclose(ss[fin], rr[fin], rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.isinf(ss), np.isinf(rr))
+
+    def test_tombstoned_and_empty_lists(self):
+        """Masked ids never surface; a fully-masked probe set yields -1."""
+        rng = np.random.default_rng(7)
+        n, d, n_lists, max_len = 150, 16, 6, 32
+        db = rng.normal(size=(n, d)).astype(np.float32)
+        lists = _random_ivf(n, n_lists, max_len, rng)
+        lists[2] = -1                                 # empty list
+        valid = rng.random(n) > 0.3
+        masked = np.where((lists >= 0) & valid[np.maximum(lists, 0)],
+                          lists, -1).astype(np.int32)
+        pack = pack_ivf_lists(jnp.asarray(db), jnp.asarray(lists), dim=d,
+                              block_m=16)
+        q = rng.normal(size=(4, d)).astype(np.float32)
+        probe = np.stack([[0, 2, 4], [1, 2, 5], [2, 3, 0], [2, 2 + 3, 1]]
+                         ).astype(np.int32)
+        s, i = ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                             jnp.asarray(masked), pack, k=8, interpret=True)
+        ia = np.asarray(i)
+        live = ia[ia >= 0]
+        assert valid[live].all()                      # no tombstone returned
+        # and against the oracle over the masked table
+        rs, ri = ref.ivf_scan_ref(jnp.asarray(q), jnp.asarray(db),
+                                  jnp.asarray(masked), jnp.asarray(probe),
+                                  dim=d, k=8)
+        assert _id_sets(i) == _id_sets(ri)
+
+    def test_k_exceeds_candidates(self):
+        rng = np.random.default_rng(3)
+        n, d = 40, 8
+        db = rng.normal(size=(n, d)).astype(np.float32)
+        lists = _random_ivf(n, 4, 8, rng, coverage=0.5)
+        pack = pack_ivf_lists(jnp.asarray(db), jnp.asarray(lists), dim=d,
+                              block_m=8)
+        q = rng.normal(size=(2, d)).astype(np.float32)
+        probe = np.asarray([[0, 1], [2, 3]], np.int32)
+        s, i = ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                             jnp.asarray(lists), pack, k=30, interpret=True)
+        sa, ia = np.asarray(s), np.asarray(i)
+        assert (ia >= 0).sum(1).max() <= 16           # at most 2 lists x 8
+        assert np.isinf(sa[ia < 0]).all()
+
+    @pytest.mark.parametrize("with_valid", [False, True])
+    @pytest.mark.parametrize("with_tail", [False, True])
+    def test_parity_vs_xla_sched_path(self, with_valid, with_tail):
+        """The acceptance contract: identical top-k id sets to
+        `ivf_progressive_search_sched` under fixed probes/schedule, across
+        validity masking and tail extra_cand injection."""
+        from repro.core import make_schedule
+        from repro.core.ivf import (build_ivf, ivf_progressive_search_kernel,
+                                    ivf_progressive_search_sched)
+        rng = np.random.default_rng(17)
+        n, d = 400, 64
+        db = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(9, d)).astype(np.float32))
+        sched = make_schedule(8, d, 32, final_k=5)
+        ivf = build_ivf(db, 12)
+        valid = (jnp.asarray(rng.random(n) > 0.15) if with_valid else None)
+        tail = (jnp.asarray(np.r_[np.arange(n - 8, n),
+                                  -np.ones(5)].astype(np.int32))
+                if with_tail else None)
+        kw = dict(n_probe=5, valid=valid, extra_cand=tail)
+        s1, i1 = ivf_progressive_search_sched(
+            q, db, ivf["centroids"], ivf["lists"], sched, **kw)
+        s2, i2 = ivf_progressive_search_kernel(
+            q, db, ivf["centroids"], ivf["lists"], sched, interpret=True,
+            **kw)
+        assert _id_sets(i1) == _id_sets(i2)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(s1), axis=1), np.sort(np.asarray(s2), axis=1),
+            rtol=1e-4, atol=1e-4)
+
+    def test_int8_pack_composes(self):
+        """int8 member slabs: valid results, near-f32 ranking quality."""
+        rng = np.random.default_rng(23)
+        n, d, n_lists, max_len = 400, 32, 8, 64
+        db = rng.normal(size=(n, d)).astype(np.float32)
+        lists = _random_ivf(n, n_lists, max_len, rng)
+        q = rng.normal(size=(16, d)).astype(np.float32)
+        probe = np.stack([rng.choice(n_lists, 4, replace=False)
+                          for _ in range(16)]).astype(np.int32)
+        pf = pack_ivf_lists(jnp.asarray(db), jnp.asarray(lists), dim=d,
+                            block_m=16)
+        p8 = pack_ivf_lists(jnp.asarray(db), jnp.asarray(lists), dim=d,
+                            block_m=16, dtype="int8")
+        assert p8["rows"].dtype == jnp.int8
+        _, i_f = ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                               jnp.asarray(lists), pf, k=10, interpret=True)
+        _, i_8 = ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                               jnp.asarray(lists), p8, k=10, interpret=True)
+        overlap = np.mean([
+            len(a & b) / max(len(a), 1)
+            for a, b in zip(_id_sets(i_f), _id_sets(i_8))])
+        assert overlap >= 0.8                   # int8 is stage-0 only; the
+        # full-precision rescore ladder absorbs the residual ranking noise
+
+    @pytest.mark.parametrize("dtype", ["float32", "int8"])
+    def test_update_pack_absorbs_new_rows(self, dtype):
+        """Incremental append: a row written into a spare slot scores like
+        a built one (int8 codes reuse the stored scale)."""
+        rng = np.random.default_rng(5)
+        n, d, n_lists, max_len = 100, 16, 4, 32
+        db = rng.normal(size=(n + 1, d)).astype(np.float32)
+        lists = _random_ivf(n, n_lists, max_len, rng, coverage=0.5)
+        pack = pack_ivf_lists(jnp.asarray(db[:n]), jnp.asarray(lists), dim=d,
+                              block_m=16, dtype=dtype)
+        # place the new row (id n) into list 1's first free slot
+        slot = int((lists[1] >= 0).sum())
+        lists[1, slot] = n
+        pack = update_pack(pack, jnp.asarray(db), np.asarray([n], np.int32),
+                           np.asarray([1 * pack["max_len"] + slot]))
+        q = db[n:n + 1] + 0.01 * rng.normal(size=(1, d)).astype(np.float32)
+        probe = np.asarray([[1, 0]], np.int32)
+        _, i = ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                             jnp.asarray(lists), pack, k=1, interpret=True)
+        assert int(np.asarray(i)[0, 0]) == n
+
+    def test_bytes_model_fused_strictly_fewer(self):
+        from repro.kernels.ivf_scan import stage0_bytes_model
+        for d0 in (1, 4, 8, 64, 256):
+            for mb in (4, 1):
+                m = stage0_bytes_model(n_lists=64, max_len=128, n_probe=8,
+                                       d0=d0, k=32, member_bytes=mb)
+                assert m["fused_bytes"] < m["xla_bytes"]
 
 
 class TestGatherRescore:
