@@ -128,6 +128,15 @@ def report(outdir: str = "results/dryrun", mesh: str = "single",
     return rows
 
 
+def _print_table(rows, cols):
+    widths = {c: max(len(c), *(len(str(row.get(c, ""))) for row in rows))
+              for c in cols}
+    print(" | ".join(c.ljust(widths[c]) for c in cols))
+    print("-+-".join("-" * widths[c] for c in cols))
+    for row in rows:
+        print(" | ".join(str(row.get(c, "")).ljust(widths[c]) for c in cols))
+
+
 def ivf_kernel_report(path: str = "results/BENCH_ivf_kernel.json"):
     """Fused-vs-XLA IVF stage-0 table from the backend_comparison records."""
     if not os.path.exists(path):
@@ -155,12 +164,54 @@ def ivf_kernel_report(path: str = "results/BENCH_ivf_kernel.json"):
         })
     cols = ["cell", "path", "bytes/q", "mem_s/q", "vs_xla", "qps_meas",
             "recall@k"]
-    widths = {c: max(len(c), *(len(str(row.get(c, ""))) for row in rows))
-              for c in cols}
-    print(" | ".join(c.ljust(widths[c]) for c in cols))
-    print("-+-".join("-" * widths[c] for c in cols))
-    for row in rows:
-        print(" | ".join(str(row.get(c, "")).ljust(widths[c]) for c in cols))
+    _print_table(rows, cols)
+    return rows
+
+
+# each PQ path's int8 counterpart in the --pq records (same scan shape,
+# coarser codes): the "how much of the int8 stage-0 memory wall does PQ
+# remove" denominator
+_PQ_BASELINE = {
+    "quantized-pq": "quantized-int8",
+    "quantized-pq-fused": "quantized-int8",
+    "ivf-pq-fused": "ivf-int8-fused",
+}
+
+
+def pq_report(path: str = "results/BENCH_pq.json"):
+    """PQ-vs-int8 stage-0 table from the --pq backend_comparison records.
+
+    Per path: modeled bytes/query, the memory-roofline time those bytes
+    cost at the reference HBM bandwidth, and the PQ/int8 ratio at the same
+    corpus size — CPU-measured QPS can't show the bandwidth win, the model
+    can.
+    """
+    if not os.path.exists(path):
+        print(f"no {path}; run "
+              f"`python -m benchmarks.backend_comparison --pq` first")
+        return []
+    with open(path) as f:
+        payload = json.load(f)
+    recs = [r for r in payload["records"]
+            if r.get("stage0_hbm_bytes_per_query") is not None]
+    by = {(r["label"], r["docs"]): r["stage0_hbm_bytes_per_query"]
+          for r in recs}
+    rows = []
+    for r in recs:
+        b = r["stage0_hbm_bytes_per_query"]
+        base = by.get((_PQ_BASELINE.get(r["label"], ""), r["docs"]))
+        rows.append({
+            "cell": f"{r['label']} x {r['docs']} docs",
+            "path": r.get("stage0_path", "?"),
+            "bytes/q": f"{b/1e3:.1f}kB",
+            "mem_s/q": fmt_seconds(b / HBM_BW),
+            "vs_int8": f"{b/base:.3f}x" if base else "-",
+            "qps_meas": f"{r['qps']:.1f}",
+            "recall@k": f"{r['recall_at_k_vs_exact']:.3f}",
+        })
+    cols = ["cell", "path", "bytes/q", "mem_s/q", "vs_int8", "qps_meas",
+            "recall@k"]
+    _print_table(rows, cols)
     return rows
 
 
@@ -173,9 +224,17 @@ def main():
                          "bytes (reads results/BENCH_ivf_kernel.json)")
     ap.add_argument("--ivf-kernel-json",
                     default="results/BENCH_ivf_kernel.json")
+    ap.add_argument("--pq", action="store_true",
+                    help="report the PQ stage-0 paths' modeled HBM bytes vs "
+                         "their int8 counterparts (reads "
+                         "results/BENCH_pq.json)")
+    ap.add_argument("--pq-json", default="results/BENCH_pq.json")
     args = ap.parse_args()
     if args.ivf_kernel:
         ivf_kernel_report(args.ivf_kernel_json)
+        return
+    if args.pq:
+        pq_report(args.pq_json)
         return
     report(args.outdir, args.mesh)
 

@@ -1,9 +1,11 @@
 from repro.checkpoint.ckpt import (
     CheckpointManager,
     latest_step,
+    load_arrays,
     restore_checkpoint,
+    save_arrays,
     save_checkpoint,
 )
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
-           "latest_step"]
+           "save_arrays", "load_arrays", "latest_step"]

@@ -96,6 +96,52 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = N
     return final
 
 
+def save_arrays(ckpt_dir: str, step: int, arrays: Dict[str, np.ndarray], *,
+                extra: Optional[dict] = None, keep: int = 3) -> str:
+    """Atomically save a *named* flat array dict (self-describing restore).
+
+    `save_checkpoint` needs a matching target tree at restore time;
+    serving-side state (e.g. a built retrieval index) has none on a fresh
+    process, so the names are recorded in the manifest and `load_arrays`
+    reconstructs the dict without a target.  Same atomic tmp-dir + fsynced
+    manifest protocol.
+    """
+    named = {k: np.asarray(v) for k, v in sorted(arrays.items())}
+    extra = {"array_names": list(named), **(extra or {})}
+    return save_checkpoint(ckpt_dir, step, named, extra=extra, keep=keep)
+
+
+def load_arrays(ckpt_dir: str, *, step: Optional[int] = None):
+    """Restore a `save_arrays` checkpoint without a target tree.
+
+    Returns (name->array dict, manifest ``extra`` dict, step), or
+    (None, None, None) when no checkpoint exists.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        return None, None, None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    extra = manifest.get("extra", {})
+    names = extra.get("array_names")
+    if names is None:
+        raise ValueError(
+            f"{path} was not written by save_arrays (no array_names); "
+            f"use restore_checkpoint with a target tree")
+    dtypes = manifest.get("dtypes", {})
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        # flatten order of a dict is sorted-key order — the order
+        # save_arrays fixed by sorting the names
+        arrays = {
+            name: _decode(z[f"arr_{i}"], dtypes.get(f"arr_{i}",
+                                                    str(z[f"arr_{i}"].dtype)))
+            for i, name in enumerate(names)
+        }
+    return arrays, extra, step
+
+
 def all_steps(ckpt_dir: str):
     if not os.path.isdir(ckpt_dir):
         return []

@@ -298,14 +298,17 @@ def _sq_col(sq_prefix, index_dims, dim: int):
 @functools.partial(
     jax.jit,
     static_argnames=("sched", "n_probe", "index_dims", "metric",
-                     "pack_meta", "merge", "interpret"),
+                     "pack_meta", "merge", "pq_oversample", "interpret"),
 )
 def _kernel_search_jit(
     q, db, centroids, lists, pack_rows, pack_sq, pack_scale,
+    pack_codebooks, pack_cent_sq,
     valid, sq_prefix, extra_cand, cent_sq, sched,
-    *, n_probe, index_dims, metric, pack_meta, merge, interpret,
+    *, n_probe, index_dims, metric, pack_meta, merge, pq_oversample,
+    interpret,
 ):
     from repro.kernels.ivf_scan import ivf_scan_topk
+    from repro.kernels.pq_scan import pq_ivf_scan_topk
     from repro.core.progressive import rescore_ladder
 
     s0 = sched.stages[0]
@@ -323,11 +326,22 @@ def _kernel_search_jit(
 
     pack = {
         "rows": pack_rows, "sq": pack_sq, "scale": pack_scale,
+        "codebooks": pack_codebooks, "cent_sq": pack_cent_sq,
         "dim": pack_meta[0], "max_len": pack_meta[1],
         "block_m": pack_meta[2], "dtype": pack_meta[3],
     }
-    scores, cand = ivf_scan_topk(
-        q, probe, member_ids, pack, k=s0.k, merge=merge, interpret=interpret)
+    if pack_meta[3] == "pq":
+        # oversampled survivor pool: the classic PQ remedy for ADC ranking
+        # noise — the full-precision rescore ladder cuts it back
+        k0_eff = s0.k * pq_oversample
+        scores, cand = pq_ivf_scan_topk(
+            q, probe, member_ids, pack, k=k0_eff, merge=merge,
+            interpret=interpret)
+    else:
+        k0_eff = s0.k
+        scores, cand = ivf_scan_topk(
+            q, probe, member_ids, pack, k=k0_eff, merge=merge,
+            interpret=interpret)
 
     if extra_cand is not None:
         # the un-indexed tail window competes in stage 0 exactly as the XLA
@@ -336,14 +350,17 @@ def _kernel_search_jit(
         e = extra_cand.shape[0]
         tail_tbl = jnp.broadcast_to(
             extra_cand[None, :], (q.shape[0], e))
+        # keep as many tail survivors as the (possibly oversampled) pool
+        # can seat — capping at s0.k would let coded rows crowd appended
+        # rows out of pool slots they outscore
         ts, ti = T.rescore_candidates(
-            q, db, tail_tbl, dim=s0.dim, k=min(s0.k, e),
+            q, db, tail_tbl, dim=s0.dim, k=min(k0_eff, e),
             db_sq_at_dim=_sq_col(sq_prefix, index_dims, s0.dim),
             valid=valid, metric=metric,
         )
         cat_s = jnp.concatenate([scores, ts], axis=1)
         cat_i = jnp.concatenate([cand, ti], axis=1)
-        neg, pos = jax.lax.top_k(-cat_s, s0.k)
+        neg, pos = jax.lax.top_k(-cat_s, k0_eff)
         scores = -neg
         cand = jnp.take_along_axis(cat_i, pos, axis=1)
 
@@ -371,18 +388,22 @@ def ivf_progressive_search_kernel(
     pack: Optional[Dict] = None,
     merge: str = "sort",
     block_m: int = 128,
+    pq_oversample: int = 1,
     interpret: bool = False,
 ) -> Tuple[Array, Array]:
     """`ivf_progressive_search_sched` with the fused Pallas stage-0 kernel.
 
     Same signature and same results (identical top-k id sets under fixed
     probes — the parity contract `tests/test_kernels.py` enforces), but
-    stage 0 runs `repro.kernels.ivf_scan.ivf_scan_topk`: probed lists'
-    member rows stream HBM→VMEM once and the top-k never leaves VMEM,
-    instead of the XLA gather → materialized candidate table → score matrix
-    round trips.  The tail ``extra_cand`` window is rescored at the stage-0
-    dim and merged into the kernel's top-k, so injected rows compete exactly
-    where `inject_candidates` puts them on the XLA path.
+    stage 0 runs `repro.kernels.ivf_scan.ivf_scan_topk` — or, for
+    ``dtype='pq'`` packs, `repro.kernels.pq_scan.pq_ivf_scan_topk` (the
+    fused probe+LUT-scan: per-query ADC tables stay VMEM-resident while
+    M-byte code slabs stream) — so probed lists' member rows stream
+    HBM→VMEM once and the top-k never leaves VMEM, instead of the XLA
+    gather → materialized candidate table → score matrix round trips.  The
+    tail ``extra_cand`` window is rescored at the stage-0 dim and merged
+    into the kernel's top-k, so injected rows compete exactly where
+    `inject_candidates` puts them on the XLA path.
 
     Extra args over the sched path:
       pack:      `pack_ivf_lists` build artifact (member slabs at the
@@ -390,6 +411,9 @@ def ivf_progressive_search_kernel(
                  None it is packed on the fly, which costs a full gather).
       merge:     in-kernel top-k merge strategy ('sort' | 'select').
       block_m:   member rows per kernel step (on-the-fly packs only).
+      pq_oversample: 'pq' packs only — stage-0 survivor pool widens to
+                 ``pq_oversample × k0`` (ADC ranking noise is absorbed by
+                 the full-precision rescore, which cuts the pool back).
       interpret: run the kernel in interpret mode (CPU validation).
     """
     if metric != "l2":
@@ -408,7 +432,9 @@ def ivf_progressive_search_kernel(
     pack_meta = (pack["dim"], pack["max_len"], pack["block_m"], pack["dtype"])
     return _kernel_search_jit(
         q, db, centroids, lists, pack["rows"], pack["sq"], pack["scale"],
+        pack.get("codebooks"), pack.get("cent_sq"),
         valid, sq_prefix, extra_cand, cent_sq, sched,
         n_probe=n_probe, index_dims=index_dims, metric=metric,
-        pack_meta=pack_meta, merge=merge, interpret=interpret,
+        pack_meta=pack_meta, merge=merge, pq_oversample=pq_oversample,
+        interpret=interpret,
     )

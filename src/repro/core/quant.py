@@ -23,6 +23,8 @@ from __future__ import annotations
 import functools
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -30,6 +32,100 @@ from repro.core import truncated as T
 from repro.core.schedule import ProgressiveSchedule
 
 Array = jax.Array
+
+
+# -- shared int8 grid helpers -------------------------------------------------
+# The one home for per-dimension symmetric int8 bookkeeping: the quantized
+# backend, the fused IVF kernel's member-slab packing, and incremental
+# append encoding all share the same grid (fit scale -> encode -> fold the
+# query), so the math cannot drift between the XLA and Pallas paths.
+
+def fit_int8_scale(x: Array, mask: Optional[Array] = None) -> Array:
+    """Per-dimension symmetric scale: ``amax/127`` over (masked) rows.
+
+    ``mask`` selects the rows the grid is fit on (live corpus rows — dead /
+    padding slots would drag the grid toward zero); codes can still be
+    emitted for every row afterwards.
+    """
+    ax = jnp.abs(x.astype(jnp.float32))
+    if mask is not None:
+        ax = jnp.where(mask[:, None], ax, 0.0)
+    amax = jnp.max(ax, axis=0)
+    return jnp.maximum(amax, 1e-12) / 127.0
+
+
+def int8_encode(x: Array, scale: Array) -> Tuple[Array, Array]:
+    """Code rows onto an existing grid.
+
+    Returns (codes (N, D) int8, deq_sq (N,) f32) where ``deq_sq`` holds the
+    squared norms of the *dequantized* rows — the norm table every int8
+    scoring path pairs with the codes.
+    """
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+    deq = codes.astype(jnp.float32) * scale
+    return codes, jnp.sum(deq * deq, axis=-1)
+
+
+def fold_int8_query(q: Array, scale: Array) -> Array:
+    """Fold a query onto the codes' grid for rank-equivalent int8 scoring.
+
+    Distances in the *scaled* space (x_d / s_d) are NOT rank-equivalent to
+    true distances, so the query is quantized onto the same grid and the
+    per-dim ``s_d^2`` rescale is folded into the query side:
+    ``ip = (round(clip(q/s)) * s^2) @ codes^T`` keeps the db operand — the
+    side that dominates HBM traffic — int8.
+    """
+    qq = jnp.clip(jnp.round(q.astype(jnp.float32) / scale), -127, 127)
+    return (qq * scale * scale).astype(jnp.float32)
+
+
+def pad_pow2(a: np.ndarray) -> np.ndarray:
+    """Pad axis 0 up to a power of two by repeating the last element.
+
+    Scatter updates are idempotent under repeats (same dest, same value),
+    and bounding the batch shape to O(log B) distinct sizes keeps jitted
+    append-scatters from retracing on every burst size.
+    """
+    a = np.asarray(a)
+    n = a.shape[0]
+    target = 1 << (max(n, 1) - 1).bit_length()
+    if target == n:
+        return a
+    reps = np.ones(n, np.int64)
+    reps[-1] = target - n + 1
+    return np.repeat(a, reps, axis=0)
+
+
+# incremental-append scatters, shared by the quantized backend's code block
+# and the fused kernels' member-slab packs: on accelerators the target
+# buffers are DONATED so XLA updates them in place (absorbing a handful of
+# rows must not copy an O(corpus) buffer); CPU has no donation and pays the
+# copy, which only matters for interpret-mode validation
+_scatter_rows_donate = jax.jit(
+    lambda buf, dests, rows: buf.at[dests].set(rows), donate_argnums=(0,))
+_scatter_rows_copy = jax.jit(
+    lambda buf, dests, rows: buf.at[dests].set(rows))
+_scatter_rows2_donate = jax.jit(
+    lambda a, b, dests, ra, rb: (a.at[dests].set(ra), b.at[dests].set(rb)),
+    donate_argnums=(0, 1))
+_scatter_rows2_copy = jax.jit(
+    lambda a, b, dests, ra, rb: (a.at[dests].set(ra), b.at[dests].set(rb)))
+
+
+def scatter_rows(buf: Array, dests: Array, rows: Array) -> Array:
+    """Scatter ``rows`` into ``buf[dests]``, in place off-CPU (donation)."""
+    fn = (_scatter_rows_copy if jax.default_backend() == "cpu"
+          else _scatter_rows_donate)
+    return fn(buf, dests, rows)
+
+
+def scatter_rows2(a: Array, b: Array, dests: Array,
+                  ra: Array, rb: Array) -> Tuple[Array, Array]:
+    """Paired scatter (codes + their norm table) sharing one dest batch."""
+    fn = (_scatter_rows2_copy if jax.default_backend() == "cpu"
+          else _scatter_rows2_donate)
+    return fn(a, b, dests, ra, rb)
 
 
 def quantize_per_dim(x: Array, valid: Optional[Array] = None) -> Tuple[Array, Array]:
@@ -40,12 +136,8 @@ def quantize_per_dim(x: Array, valid: Optional[Array] = None) -> Tuple[Array, Ar
     unpopulated buffer slots would otherwise drag the grid toward zero), but
     codes are still emitted for every row.
     """
-    ax = jnp.abs(x.astype(jnp.float32))
-    if valid is not None:
-        ax = jnp.where(valid[:, None], ax, 0.0)
-    amax = jnp.max(ax, axis=0)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    scale = fit_int8_scale(x, valid)
+    q, _ = int8_encode(x, scale)
     return q, scale
 
 
@@ -54,8 +146,8 @@ def build_quantized_index(
 ) -> Dict[str, Array]:
     """Stage-0 int8 block + full-precision corpus + stage-0 squared norms."""
     ds = sched.stages[0].dim
-    q0, scale0 = quantize_per_dim(db[:, :ds], valid)
-    deq_sq = jnp.sum((q0.astype(jnp.float32) * scale0) ** 2, axis=1)
+    scale0 = fit_int8_scale(db[:, :ds], valid)
+    q0, deq_sq = int8_encode(db[:, :ds], scale0)
     return {
         "db": db,
         "db0_q": q0,                 # (N, Ds) int8
@@ -65,21 +157,11 @@ def build_quantized_index(
 
 
 def _scaled_space_scores(q: Array, idx: Dict[str, Array]) -> Array:
-    """Rank-equivalent stage-0 scores computed wholly in scaled int8 space.
-
-    Distances in the *scaled* space (x_d / s_d) are NOT rank-equivalent to
-    true distances, so instead we quantize the query onto the same grid and
-    compute int32 inner products of raw int8 codes, then rescale per-dim by
-    s_d^2 — folded into the query codes as f32 before the matmul would lose
-    the int8 path, so we split: ip = (qq * s^2) @ db0_q^T with the f32
-    left operand (still a skinny (Q, Ds) f32 x int8 matmul — the *db* side,
-    which dominates traffic, stays int8).
-    """
+    """Rank-equivalent stage-0 scores computed wholly in scaled int8 space
+    (see `fold_int8_query` for why the rescale rides on the query side)."""
     db0_q = idx["db0_q"]
-    s = idx["scale0"]
     ds = db0_q.shape[1]
-    qq = jnp.clip(jnp.round(q[:, :ds].astype(jnp.float32) / s), -127, 127)
-    q_scaled = (qq * s * s).astype(jnp.float32)         # (Q, Ds)
+    q_scaled = fold_int8_query(q[:, :ds], idx["scale0"])  # (Q, Ds)
     ip = jax.lax.dot_general(
         q_scaled, db0_q.astype(jnp.bfloat16),
         (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)

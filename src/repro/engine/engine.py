@@ -439,6 +439,51 @@ class RetrievalEngine:
         """The live index state (None until the first build)."""
         return self._index_state
 
+    # -- index persistence ---------------------------------------------------
+    def save_index(self, ckpt_dir: str, *, keep: int = 3) -> str:
+        """Persist the live index state through `repro.checkpoint`.
+
+        Writes the backend's ``state_dict`` (centroids, packed member
+        slabs, int8 scales, PQ codebooks — whatever the backend built)
+        with the atomic tmp-dir + fsynced-manifest protocol, so a serving
+        restart can `load_index` instead of re-running k-means / codebook
+        builds.  Builds the index first if none is live yet.
+        """
+        from repro.checkpoint import save_arrays
+
+        with self.lock:
+            state = self._ensure_index()
+            payload = self.backend.state_dict(state)
+            return save_arrays(
+                ckpt_dir, state.generation, payload["arrays"],
+                extra=payload["meta"], keep=keep)
+
+    def load_index(self, ckpt_dir: str, *, step: Optional[int] = None) -> bool:
+        """Adopt a `save_index` checkpoint as the live index state.
+
+        Contract: the store must already hold the same rows
+        ``[0, built_size)`` the checkpoint was built over (the usual
+        serving restart re-adds the identical corpus before loading).
+        Rows added beyond that ride the tail window exactly like rows
+        appended after a build; staleness counters restart clean.  Returns
+        False when ``ckpt_dir`` holds no checkpoint; raises on a
+        backend/corpus mismatch.
+        """
+        from repro.checkpoint import load_arrays
+
+        arrays, meta, _ = load_arrays(ckpt_dir, step=step)
+        if arrays is None:
+            return False
+        with self.lock:
+            store = self.store
+            state = self.backend.load_state(
+                {"meta": meta, "arrays": arrays},
+                db=store.db, valid=store.valid, sq_prefix=store.sq_prefix,
+                stats=store.stats(),
+            )
+            self._index_state = state
+            return True
+
     # -- request path --------------------------------------------------------
     def check_query(self, query) -> np.ndarray:
         """Validate/normalize one query to a (D,) float32 vector (no lock)."""

@@ -40,6 +40,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.index import stage_dims
 from repro.core.schedule import ProgressiveSchedule
@@ -210,6 +211,149 @@ class IndexBackend(abc.ABC):
 
     def describe(self) -> str:
         return f"{type(self).__name__}(metric={self.metric})"
+
+    # -- persistence ---------------------------------------------------------
+    # Data paths (slash-joined nested keys) excluded from state_dict; they
+    # reference live store buffers and are re-bound at load (_rebind_loaded).
+    _SAVE_SKIP: Tuple[str, ...] = ()
+
+    def state_dict(self, state: IndexState) -> Dict:
+        """Serialize ``state`` to ``{"meta": json-able, "arrays": {name:
+        np.ndarray}}`` — the payload `repro.checkpoint.save_arrays` persists.
+
+        Generic over every backend: ``state.data`` is walked as a nested
+        dict of device arrays / host arrays / scalars; array leaves land in
+        ``arrays`` under their slash-joined path with their host-vs-device
+        kind recorded, everything else lands in the meta.  Backends whose
+        data references live store buffers list those paths in
+        ``_SAVE_SKIP`` and re-attach them at load.
+        """
+        arrays: Dict[str, np.ndarray] = {}
+        scalars: Dict[str, object] = {}
+        kinds: Dict[str, str] = {}
+        dicts: list = []
+
+        def walk(d: Dict, prefix: str) -> None:
+            for key, val in d.items():
+                path = f"{prefix}{key}"
+                if path in self._SAVE_SKIP:
+                    continue
+                if isinstance(val, dict):
+                    dicts.append(path)
+                    walk(val, path + "/")
+                elif isinstance(val, jax.Array):
+                    arrays[path] = np.asarray(jax.device_get(val))
+                    kinds[path] = "jax"
+                elif isinstance(val, np.ndarray):
+                    arrays[path] = val
+                    kinds[path] = "np"
+                elif isinstance(val, np.generic):
+                    scalars[path] = val.item()
+                elif isinstance(val, (bool, int, float, str)) or val is None:
+                    scalars[path] = val
+                else:
+                    raise TypeError(
+                        f"cannot serialize state.data[{path!r}] of type "
+                        f"{type(val).__name__}; extend "
+                        f"{type(self).__name__}.state_dict")
+
+        walk(state.data, "")
+        meta = {
+            "backend": self.name,
+            "kind": state.kind,
+            "built_size": state.built_size,
+            "built_active": state.built_active,
+            "shape_key": _jsonify_key(state.shape_key),
+            "scalars": scalars,
+            "array_kinds": kinds,
+            "dict_paths": dicts,
+        }
+        return {"meta": meta, "arrays": arrays}
+
+    def load_state(
+        self,
+        payload: Dict,
+        *,
+        db: Array,
+        valid: Array,
+        sq_prefix: Optional[Array] = None,
+        stats: StoreStats,
+    ) -> IndexState:
+        """Reconstruct an `IndexState` from a `state_dict` payload.
+
+        The caller (the engine) guarantees the store holds the same rows
+        ``[0, built_size)`` the state was built over — typically a serving
+        restart that re-adds the identical corpus; this method validates
+        only what it can see (backend kind, sizes).  Churn counters are
+        re-stamped against the *current* store so staleness accounting
+        starts clean: rows appended beyond ``built_size`` since the save
+        ride the tail window exactly like rows appended after a build.
+        """
+        meta, arrays = payload["meta"], payload["arrays"]
+        if meta["kind"] != self.name:
+            raise ValueError(
+                f"checkpointed index is a {meta['kind']!r} state; this "
+                f"engine runs the {self.name!r} backend")
+        if meta["built_size"] > stats.size:
+            raise ValueError(
+                f"checkpointed index covers rows [0, {meta['built_size']}) "
+                f"but the store holds only {stats.size}; re-add the corpus "
+                f"before load_index")
+        data: Dict = {}
+        for path in meta["dict_paths"]:
+            _dig(data, path.split("/"))
+        for path, val in meta["scalars"].items():
+            parts = path.split("/")
+            _dig(data, parts[:-1])[parts[-1]] = val
+        for path, arr in arrays.items():
+            parts = path.split("/")
+            if meta["array_kinds"].get(path) == "jax":
+                arr = jnp.asarray(arr)
+            _dig(data, parts[:-1])[parts[-1]] = arr
+        self._rebind_loaded(data, db=db, valid=valid, sq_prefix=sq_prefix)
+        return IndexState(
+            kind=meta["kind"],
+            generation=stats.generation,
+            built_size=meta["built_size"],
+            built_active=meta["built_active"],
+            # re-stamp churn counters so (adds since load) == (rows past
+            # built_size): loaded state starts with zero counted churn
+            built_added=stats.total_added - (stats.size - meta["built_size"]),
+            built_deleted=stats.total_deleted,
+            shape_key=_tuplify_key(meta["shape_key"]),
+            data=data,
+        )
+
+    def _rebind_loaded(
+        self,
+        data: Dict,
+        *,
+        db: Array,
+        valid: Array,
+        sq_prefix: Optional[Array] = None,
+    ) -> None:
+        """Hook: re-attach live-buffer references `_SAVE_SKIP` dropped and
+        validate loaded shapes against the store.  Default: nothing."""
+
+
+def _jsonify_key(key):
+    """shape_key tuple -> msgpack-able nested list."""
+    if isinstance(key, (tuple, list)):
+        return [_jsonify_key(x) for x in key]
+    return key
+
+
+def _tuplify_key(key):
+    """Nested list -> hashable tuple (the engine's compile-tracking set)."""
+    if isinstance(key, list):
+        return tuple(_tuplify_key(x) for x in key)
+    return key
+
+
+def _dig(d: Dict, parts) -> Dict:
+    for p in parts:
+        d = d.setdefault(p, {})
+    return d
 
 
 class ChurnRebuildBackend(IndexBackend):

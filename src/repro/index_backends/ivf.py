@@ -109,6 +109,10 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         stage0_dtype: str = "float32",
         kernel_block_m: int = 128,
         kernel_merge: str = "sort",
+        pq_m: Optional[int] = None,
+        pq_codes: int = 256,
+        pq_iters: int = 10,
+        pq_oversample: int = 4,
         seed: int = 0,
     ):
         """Args beyond the shared engine config:
@@ -144,11 +148,23 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         use_kernel:     'auto' | True | False — stage-0 via the fused
                         Pallas probe+scan kernel ('auto': TPU only; True
                         forces it, interpret mode off-TPU; False: XLA).
-        stage0_dtype:   'float32' | 'int8' member slabs for the kernel
-                        scan (int8 composes `repro.core.quant`'s codes;
-                        requires the kernel path).
+        stage0_dtype:   'float32' | 'int8' | 'pq' member slabs for the
+                        kernel scan (int8 composes `repro.core.quant`'s
+                        codes — 4x less stage-0 traffic; 'pq' composes
+                        `repro.core.pq`'s product-quantization codes —
+                        pq_m bytes/row and a VMEM-resident ADC lookup
+                        table, the fused probe+LUT-scan.  Both require
+                        the kernel path).
         kernel_block_m: member rows per kernel step.
         kernel_merge:   in-kernel top-k merge ('sort' | 'select').
+        pq_m:           'pq' only: subspaces per stage-0 row (None: aim
+                        8-dim subspaces — `repro.core.pq.auto_pq_m`); must
+                        divide the stage-0 dim.
+        pq_codes:       'pq' only: centroids per subspace (<= 256).
+        pq_iters:       'pq' only: k-means iterations per subspace.
+        pq_oversample:  'pq' only: stage-0 survivor pool widens to
+                        ``pq_oversample × k0`` (ADC noise is absorbed by
+                        the full-precision rescore, which cuts it back).
         """
         super().__init__(
             sched, metric=metric, block_n=block_n,
@@ -168,9 +184,9 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         if use_kernel not in ("auto", True, False):
             raise ValueError(
                 f"use_kernel must be 'auto'|True|False, got {use_kernel!r}")
-        if stage0_dtype not in ("float32", "int8"):
+        if stage0_dtype not in ("float32", "int8", "pq"):
             raise ValueError(
-                f"stage0_dtype must be float32|int8, got {stage0_dtype!r}")
+                f"stage0_dtype must be float32|int8|pq, got {stage0_dtype!r}")
         if use_kernel is True and metric != "l2":
             raise ValueError(
                 "the fused IVF kernel scores L2 only; use metric='l2' or "
@@ -179,14 +195,27 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         self.stage0_dtype = stage0_dtype
         self.kernel_block_m = int(kernel_block_m)
         self.kernel_merge = kernel_merge
+        self.pq_codes = int(pq_codes)
+        self.pq_iters = int(pq_iters)
+        self.pq_oversample = max(1, int(pq_oversample))
+        s0_dim = sched.stages[0].dim
+        if stage0_dtype == "pq":
+            from repro.core.pq import auto_pq_m
+            self.pq_m = int(pq_m) if pq_m else auto_pq_m(s0_dim)
+            if s0_dim % self.pq_m:
+                raise ValueError(
+                    f"pq_m={self.pq_m} does not divide the stage-0 dim "
+                    f"{s0_dim}")
+        else:
+            self.pq_m = pq_m
         self.seed = int(seed)
-        if stage0_dtype == "int8" and not self._kernel_enabled():
-            # int8 member slabs only exist on the kernel path; silently
+        if stage0_dtype in ("int8", "pq") and not self._kernel_enabled():
+            # coded member slabs only exist on the kernel path; silently
             # serving the f32 XLA path instead would report a traffic win
             # that never happens
             raise ValueError(
-                "stage0_dtype='int8' packs member slabs for the fused "
-                "kernel, which is disabled here (use_kernel="
+                f"stage0_dtype={stage0_dtype!r} packs member slabs for the "
+                "fused kernel, which is disabled here (use_kernel="
                 f"{use_kernel!r} on backend {jax.default_backend()!r}); "
                 "pass use_kernel=True (interpret mode off-TPU) or "
                 "stage0_dtype='float32'")
@@ -285,10 +314,26 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
             from repro.core.ivf import _sq_col
             from repro.kernels.ivf_scan import pack_ivf_lists
             s0_dim = self.sched.stages[0].dim
+            codebooks = None
+            if self.stage0_dtype == "pq":
+                # ADC codebooks are fit on live rows at the *stage-0* dim
+                # (the space the slabs are scanned in), on the same bounded
+                # sample budget as the coarse quantizer
+                from repro.core.pq import train_pq
+                tr = live
+                if tr.size > self.train_rows:
+                    tr = np.sort(rng.choice(tr, self.train_rows,
+                                            replace=False))
+                codebooks = train_pq(
+                    db[jnp.asarray(tr)][:, :s0_dim],
+                    m=self.pq_m, n_codes=self.pq_codes,
+                    n_iter=self.pq_iters,
+                    key=jax.random.PRNGKey(self.seed + 1))
             pack = pack_ivf_lists(
                 db, jnp.asarray(table), dim=s0_dim,
                 db_sq_at_dim=_sq_col(sq_prefix, self.dims, s0_dim),
                 dtype=self.stage0_dtype, block_m=self.kernel_block_m,
+                pq_codebooks=codebooks,
             )
         return IndexState.from_stats(
             self.name, stats,
@@ -448,7 +493,10 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
                 valid=valid, sq_prefix=sq_prefix, index_dims=self.dims,
                 extra_cand=tail, metric=self.metric,
                 cent_sq=state.data["cent_sq"], pack=state.data["pack"],
-                merge=self.kernel_merge, interpret=self._interpret(),
+                merge=self.kernel_merge,
+                pq_oversample=(self.pq_oversample
+                               if self.stage0_dtype == "pq" else 1),
+                interpret=self._interpret(),
             )
         else:
             scores, ids = ivf_progressive_search_sched(

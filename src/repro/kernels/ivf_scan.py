@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import quant
 from repro.kernels.compat import CompilerParams, MemorySpace
 from repro.kernels.distance_topk import _merge_topk_select, _merge_topk_sort
 
@@ -63,6 +64,7 @@ def pack_ivf_lists(
     dtype: str = "float32",
     block_m: int = 128,
     scale: Optional[Array] = None,
+    pq_codebooks: Optional[Array] = None,
 ) -> Dict:
     """Build the list-major member pack the fused kernel scans.
 
@@ -75,20 +77,29 @@ def pack_ivf_lists(
                     keeps the pack's norms bit-identical to the XLA rescore
                     path and skips the O(N·dim) recompute.
       dtype:        'float32' | 'int8' (per-dimension symmetric codes; the
-                    packed norms become the *dequantized* ones).
+                    packed norms become the *dequantized* ones) | 'pq'
+                    (product-quantization codes against ``pq_codebooks``;
+                    ADC lookup needs no norm table — ``sq`` is None).
       block_m:      member rows scored per kernel step; ``max_len`` is padded
                     to a multiple.
       scale:        optional (dim,) quantization scale to reuse (int8 only) —
                     lets incremental appends code new rows onto the grid the
                     pack was built with.
+      pq_codebooks: (M, C, dim//M) PQ codebooks ('pq' only, required) —
+                    trained by the caller on live rows (`repro.core.pq`);
+                    stored in the pack so incremental appends encode against
+                    the same frozen codebooks.
 
     Returns:
-      dict: ``rows`` (n_lists·max_len_p, dim) member slabs, ``sq``
-      (n_lists, max_len_p) f32 norms (+inf at pads), ``scale`` (dim,) f32 or
-      None, plus static meta (``dim``, ``max_len``, ``block_m``, ``dtype``).
+      dict: ``rows`` (n_lists·max_len_p, dim-or-M) member slabs, ``sq``
+      (n_lists, max_len_p) f32 norms (+inf at pads; None for 'pq'),
+      ``scale`` (dim,) f32 or None, ``codebooks``/``cent_sq`` ('pq' only),
+      plus static meta (``dim``, ``max_len``, ``block_m``, ``dtype``).
     """
-    if dtype not in ("float32", "int8"):
-        raise ValueError(f"pack dtype must be float32|int8, got {dtype!r}")
+    if dtype not in ("float32", "int8", "pq"):
+        raise ValueError(f"pack dtype must be float32|int8|pq, got {dtype!r}")
+    if dtype == "pq" and pq_codebooks is None:
+        raise ValueError("dtype='pq' needs pq_codebooks (see repro.core.pq)")
     n_lists, max_len = lists.shape
     bm = min(int(block_m), max(int(max_len), 1))
     pad = -max_len % bm
@@ -100,27 +111,32 @@ def pack_ivf_lists(
     rows = db[safe, :dim].astype(jnp.float32)          # (n_lists*max_len, dim)
     member = flat >= 0
 
+    codebooks = cent_sq = None
     if dtype == "int8":
         if scale is None:
             # fit the grid on real member rows only (pad slots repeat row 0)
-            amax = jnp.max(
-                jnp.where(member[:, None], jnp.abs(rows), 0.0), axis=0)
-            scale = jnp.maximum(amax, 1e-12) / 127.0
-        codes = jnp.clip(jnp.round(rows / scale), -127, 127).astype(jnp.int8)
-        deq = codes.astype(jnp.float32) * scale
-        sq = jnp.sum(deq * deq, axis=-1)
-        rows = codes
+            scale = quant.fit_int8_scale(rows, member)
+        rows, sq = quant.int8_encode(rows, scale)
+        sq = jnp.where(member, sq, jnp.inf).reshape(n_lists, max_len)
+    elif dtype == "pq":
+        from repro.core.pq import pq_cent_sq, pq_encode
+        scale, sq = None, None
+        codebooks = pq_codebooks
+        cent_sq = pq_cent_sq(codebooks)
+        rows = pq_encode(rows, codebooks)              # (n_lists*max_len, M)
     else:
         scale = None
         if db_sq_at_dim is not None:
             sq = db_sq_at_dim[safe].astype(jnp.float32)
         else:
             sq = jnp.sum(rows * rows, axis=-1)
-    sq = jnp.where(member, sq, jnp.inf).reshape(n_lists, max_len)
+        sq = jnp.where(member, sq, jnp.inf).reshape(n_lists, max_len)
     return {
         "rows": rows,
         "sq": sq,
         "scale": scale,
+        "codebooks": codebooks,
+        "cent_sq": cent_sq,
         "dim": int(dim),
         "max_len": int(max_len),
         "block_m": int(bm),
@@ -128,30 +144,8 @@ def pack_ivf_lists(
     }
 
 
-def _pad_pow2(a):
-    """Pad axis 0 up to a power of two by repeating the last element.
-
-    Scatter updates are idempotent under repeats (same dest, same value),
-    and bounding the batch shape to O(log B) distinct sizes keeps the
-    donated scatter from retracing on every append-burst size.
-    """
-    n = a.shape[0]
-    target = 1 << (max(n, 1) - 1).bit_length()
-    if target == n:
-        return a
-    reps = np.ones(n, np.int64)
-    reps[-1] = target - n + 1
-    return np.repeat(a, reps, axis=0)
-
-
-@functools.partial(jax.jit, donate_argnums=(0, 1))
-def _scatter_pack_donate(rows_buf, sq_flat, dests, rows, sq):
-    return rows_buf.at[dests].set(rows), sq_flat.at[dests].set(sq)
-
-
-@jax.jit
-def _scatter_pack_copy(rows_buf, sq_flat, dests, rows, sq):
-    return rows_buf.at[dests].set(rows), sq_flat.at[dests].set(sq)
+# host-side scatter-batch padding shared with the incremental-append paths
+_pad_pow2 = quant.pad_pow2
 
 
 def update_pack(pack: Dict, db: Array, ids, dests) -> Dict:
@@ -159,29 +153,27 @@ def update_pack(pack: Dict, db: Array, ids, dests) -> Dict:
 
     ``ids`` are global doc ids, ``dests`` their flat slab positions
     (``list·max_len + slot``).  Returns a new pack dict; int8 packs code
-    the new rows with the **stored** scale so the grid stays consistent
-    with the built slabs.  On accelerators the slab buffers are *donated*
-    to the scatter, so XLA updates them in place — absorbing a handful of
-    rows must not copy the whole O(n_lists·max_len·dim) slab (CPU has no
-    donation; it pays the copy, which only matters for interpret-mode
-    validation).
+    the new rows with the **stored** scale and 'pq' packs encode against
+    the **stored** codebooks, so the grid stays consistent with the built
+    slabs.  The scatters are `repro.core.quant.scatter_rows*`: slab
+    buffers are donated off-CPU, so XLA updates them in place instead of
+    copying the whole O(n_lists·max_len·dim) slab.
     """
     ids = _pad_pow2(np.asarray(ids, np.int32))
     dests = jnp.asarray(_pad_pow2(np.asarray(dests, np.int32)))
     rows = db[jnp.asarray(ids), : pack["dim"]].astype(jnp.float32)
+    out = dict(pack)
+    if pack["dtype"] == "pq":
+        from repro.core.pq import pq_encode
+        codes = pq_encode(rows, pack["codebooks"])
+        out["rows"] = quant.scatter_rows(pack["rows"], dests, codes)
+        return out
     if pack["dtype"] == "int8":
-        s = pack["scale"]
-        codes = jnp.clip(jnp.round(rows / s), -127, 127).astype(jnp.int8)
-        deq = codes.astype(jnp.float32) * s
-        sq = jnp.sum(deq * deq, axis=-1)
-        rows = codes
+        rows, sq = quant.int8_encode(rows, pack["scale"])
     else:
         sq = jnp.sum(rows * rows, axis=-1)
-    scatter = (_scatter_pack_copy if jax.default_backend() == "cpu"
-               else _scatter_pack_donate)
-    new_rows, new_sq = scatter(
+    new_rows, new_sq = quant.scatter_rows2(
         pack["rows"], pack["sq"].reshape(-1), dests, rows, sq)
-    out = dict(pack)
     out["rows"] = new_rows
     out["sq"] = new_sq.reshape(pack["sq"].shape)
     return out
@@ -313,6 +305,10 @@ def ivf_scan_topk(
     """
     if merge not in ("sort", "select"):
         raise ValueError(f"merge must be sort|select, got {merge!r}")
+    if pack["dtype"] == "pq":
+        raise ValueError(
+            "pq packs are scanned by repro.kernels.pq_scan.pq_ivf_scan_topk "
+            "(ADC lookup-table scoring, not a distance matmul)")
     d0, max_len, bm = pack["dim"], pack["max_len"], pack["block_m"]
     nq = q.shape[0]
     if nq == 0:
@@ -321,9 +317,7 @@ def ivf_scan_topk(
     if pack["dtype"] == "int8":
         # fold the query onto the codes' grid outside the kernel: int32-ish
         # inner products rescaled per-dim by s², db side stays int8
-        s = pack["scale"]
-        qq = jnp.clip(jnp.round(qd / s), -127, 127)
-        qd = (qq * s * s).astype(jnp.float32)
+        qd = quant.fold_int8_query(qd, pack["scale"])
     pad = max_len - member_ids.shape[1]
     if pad:
         member_ids = jnp.pad(member_ids, ((0, 0), (0, pad)),
@@ -343,6 +337,9 @@ def stage0_bytes_model(
     d0: int,
     k: int,
     member_bytes: int = 4,
+    row_bytes: Optional[float] = None,
+    lut_bytes: float = 0.0,
+    norms: bool = True,
 ) -> Dict[str, float]:
     """Modeled per-query stage-0 HBM bytes: fused kernel vs the XLA lowering.
 
@@ -354,8 +351,12 @@ def stage0_bytes_model(
               read C member rows (4 B/dim f32), write + re-read the gathered
               (C, d0) tensor (XLA materializes it for the einsum), and
               write + re-read the (C,) f32 score row for top_k.
-      fused : stream C member rows once (``member_bytes``/dim), plus the
-              (C,) id and norm side tables, plus the (k,) result.
+      fused : stream C member rows once (``member_bytes``/dim, or
+              ``row_bytes`` per row when the slab width is decoupled from
+              d0 — PQ codes are M bytes/row regardless of d0), plus the
+              (C,) id table, the norm side table (``norms=False`` for ADC
+              scoring, which needs none), the per-query lookup table
+              (``lut_bytes``, PQ only), and the (k,) result.
 
     The fused path models strictly fewer bytes for every d0 ≥ 1 — the
     acceptance check `benchmarks/backend_comparison.py --ivf-kernel` records.
@@ -367,10 +368,12 @@ def stage0_bytes_model(
         + 2 * 4 * c * d0     # materialized (C, d0) gather: write + re-read
         + 2 * 4 * c          # (C,) score row: write + read for top_k
     )
+    per_row = member_bytes * d0 if row_bytes is None else row_bytes
     fused = (
-        member_bytes * c * d0   # one streaming read of member slabs
+        per_row * c             # one streaming read of member slabs
         + 4 * c                 # masked id table
-        + 4 * c                 # packed norms
+        + (4 * c if norms else 0.0)   # packed norms (ADC needs none)
+        + lut_bytes             # per-query LUT read (stays VMEM-resident)
         + 8 * k                 # (k,) scores + ids out
     )
     return {"xla_bytes": xla, "fused_bytes": fused,

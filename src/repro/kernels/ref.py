@@ -7,6 +7,7 @@ No tiling, no memory-space tricks — just the math.
 
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -69,6 +70,71 @@ def ivf_scan_ref(
     idx = jnp.take_along_axis(cand, pos, axis=1)
     idx = jnp.where(jnp.isfinite(-neg), idx, -1)
     return -neg, idx.astype(jnp.int32)
+
+
+def pq_adc_ref(lut: Array, codes: Array) -> Array:
+    """ADC scores of every query against every coded row.
+
+    Args:
+      lut:   (Q, M, C) per-query lookup tables (rank-equivalent distances).
+      codes: (N, M) uint8 PQ codes.
+    Returns:
+      (Q, N) float32: ``sum_m lut[q, m, codes[n, m]]``.
+    """
+    idx = codes.astype(jnp.int32)                     # (N, M)
+    m = idx.shape[1]
+    planes = [jnp.take(lut[:, j, :], idx[:, j], axis=1) for j in range(m)]
+    return functools.reduce(jnp.add, planes)
+
+
+def pq_scan_ref(
+    lut: Array, codes: Array, ids: Array, *, k: int
+) -> Tuple[Array, Array]:
+    """Fused flat PQ scan oracle: exact ADC top-k over masked rows.
+
+    Args:
+      lut:   (Q, M, C) per-query lookup tables.
+      codes: (N, M) uint8 codes.
+      ids:   (N,) int32 ids, -1 = masked (tombstoned / uncoded).
+      k:     neighbours kept.
+    Returns:
+      ((Q, k) scores ascending, +inf empties; (Q, k) int32 ids, -1 empties).
+    """
+    s = pq_adc_ref(lut, codes)
+    s = jnp.where(ids[None, :] >= 0, s, jnp.inf)
+    neg, pos = jax.lax.top_k(-s, k)
+    idx = jnp.where(jnp.isfinite(-neg), ids[pos], -1)
+    return -neg, idx.astype(jnp.int32)
+
+
+def pq_ivf_scan_ref(
+    lut: Array, codes: Array, member_ids: Array, probe: Array, *, k: int
+) -> Tuple[Array, Array]:
+    """Fused IVF-PQ stage-0 oracle: ADC top-k over each query's probed lists.
+
+    Args:
+      lut:        (Q, M, C) per-query lookup tables.
+      codes:      (N, M) uint8 codes indexed by *global* doc id.
+      member_ids: (n_lists, max_len) int32 global ids, -1 = masked/padding.
+      probe:      (Q, n_probe) int32 probed lists (distinct per row).
+      k:          neighbours kept.
+    Returns:
+      ((Q, k) scores ascending, +inf empties; (Q, k) int32 ids, -1 empties).
+    """
+    cand = member_ids[probe].reshape(lut.shape[0], -1)  # (Q, n_probe*max_len)
+    safe = jnp.maximum(cand, 0)
+    idx = codes.astype(jnp.int32)                       # (N, M)
+    m = idx.shape[1]
+    planes = [
+        jnp.take_along_axis(lut[:, j, :], idx[safe, j], axis=1)
+        for j in range(m)
+    ]
+    s = functools.reduce(jnp.add, planes)               # (Q, C_cand)
+    s = jnp.where(cand >= 0, s, jnp.inf)
+    neg, pos = jax.lax.top_k(-s, k)
+    idx_out = jnp.take_along_axis(cand, pos, axis=1)
+    idx_out = jnp.where(jnp.isfinite(-neg), idx_out, -1)
+    return -neg, idx_out.astype(jnp.int32)
 
 
 def embedding_bag_ref(

@@ -90,12 +90,19 @@ def main():
                     help="index backend behind the retrieval engine")
     ap.add_argument("--use-kernel", type=str, default="auto",
                     choices=("auto", "true", "false"),
-                    help="ivf only: fused Pallas stage-0 probe+scan kernel "
+                    help="ivf/quantized-pq: fused Pallas stage-0 kernel "
                          "(auto = TPU only; true forces interpret mode on "
                          "CPU)")
     ap.add_argument("--stage0-dtype", type=str, default="float32",
-                    choices=("float32", "int8"),
-                    help="ivf only: member-slab dtype for the fused kernel")
+                    choices=("float32", "int8", "pq"),
+                    help="ivf only: member-slab dtype for the fused kernel "
+                         "(pq = ADC lookup-table scan over PQ codes)")
+    ap.add_argument("--codec", type=str, default="int8",
+                    choices=("int8", "pq"),
+                    help="quantized only: stage-0 code block codec")
+    ap.add_argument("--pq-m", type=int, default=0,
+                    help="PQ subspaces per row (0 = auto, aim 8-dim "
+                         "subspaces); must divide the stage-0 dim")
     ap.add_argument("--clients", type=int, default=4,
                     help="concurrent open-loop client threads")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
@@ -119,12 +126,19 @@ def main():
     db = embed(doc_tokens)
     buckets = tuple(int(x) for x in args.buckets.split(","))
     backend_opts = None
+    use_kernel = {"auto": "auto", "true": True,
+                  "false": False}[args.use_kernel]
     if args.backend == "ivf":
         backend_opts = {
-            "use_kernel": {"auto": "auto", "true": True,
-                           "false": False}[args.use_kernel],
+            "use_kernel": use_kernel,
             "stage0_dtype": args.stage0_dtype,
         }
+        if args.stage0_dtype == "pq" and args.pq_m:
+            backend_opts["pq_m"] = args.pq_m
+    elif args.backend == "quantized":
+        backend_opts = {"codec": args.codec, "use_kernel": use_kernel}
+        if args.codec == "pq" and args.pq_m:
+            backend_opts["pq_m"] = args.pq_m
     pipe = RAGPipeline(params, cfg, db, doc_tokens, d_start=16, k0=32,
                        buckets=buckets, backend=args.backend,
                        backend_opts=backend_opts)

@@ -23,8 +23,10 @@ RNG = np.random.default_rng(11)
 D = 32
 REGISTERED = ("flat", "ivf", "quantized")
 # "ivf_kernel" is the ivf backend with the fused Pallas stage-0 scan forced
-# (interpret mode on CPU) — it must pass the identical engine contract
-BACKENDS = REGISTERED + ("ivf_kernel",)
+# (interpret mode on CPU), "ivf_pq" composes it with PQ member slabs, and
+# "quantized_pq" is the quantized backend's ADC codec — every variant must
+# pass the identical engine contract
+BACKENDS = REGISTERED + ("ivf_kernel", "ivf_pq", "quantized_pq")
 
 
 def opts_for(backend, **extra):
@@ -36,13 +38,21 @@ def opts_for(backend, **extra):
         "ivf_kernel": dict(n_lists=12, n_probe=6, min_index_rows=32,
                            min_rebuild_rows=16, use_kernel=True,
                            kernel_block_m=16),
+        "ivf_pq": dict(n_lists=12, n_probe=6, min_index_rows=32,
+                       min_rebuild_rows=16, use_kernel=True,
+                       kernel_block_m=16, stage0_dtype="pq"),
         "quantized": dict(min_rebuild_rows=16),
+        "quantized_pq": dict(min_rebuild_rows=16, codec="pq"),
     }[backend]
     return {**base, **extra} or None
 
 
 def engine_backend(backend):
-    return "ivf" if backend == "ivf_kernel" else backend
+    if backend.startswith("ivf"):
+        return "ivf"
+    if backend.startswith("quantized"):
+        return "quantized"
+    return backend
 
 
 def make_engine(backend, n_docs=200, seed=7, **kw):
@@ -150,11 +160,14 @@ class TestBackendEngineSuite:
     def test_tail_overflow_forces_rebuild_even_when_off(self, backend):
         if backend == "flat":
             pytest.skip("flat covers every row; no tail window")
-        # append_spare=0 turns incremental absorption off (where supported),
-        # so appends land in the tail window and the hard bound must fire
+        # append_spare=0 / encode_appends=False turn incremental absorption
+        # off (where supported), so appends land in the tail window and the
+        # hard bound must fire
         opts = opts_for(backend, min_rebuild_rows=4, rebuild_frac=0.01)
         if "ivf" in backend:
             opts["append_spare"] = 0
+        if backend.startswith("quantized"):
+            opts["encode_appends"] = False
         eng, db = make_engine(backend, backend_opts=opts,
                               rebuild_mode="off")
         eng.search(db[:1])
@@ -166,7 +179,8 @@ class TestBackendEngineSuite:
         assert eng.stats.n_rebuilds > n_rebuilds
 
 
-@pytest.mark.parametrize("backend", ("ivf", "ivf_kernel", "quantized"))
+@pytest.mark.parametrize(
+    "backend", ("ivf", "ivf_kernel", "ivf_pq", "quantized", "quantized_pq"))
 class TestRecall:
     def test_recall_vs_flat_on_clustered_corpus(self, backend):
         from repro.rag import make_clustered_corpus
@@ -188,8 +202,12 @@ class TestRecall:
         opts = None
         if "ivf" in backend:
             opts = dict(n_lists=24, n_probe=8, min_index_rows=32)
-            if backend == "ivf_kernel":
+            if backend in ("ivf_kernel", "ivf_pq"):
                 opts["use_kernel"] = True
+            if backend == "ivf_pq":
+                opts["stage0_dtype"] = "pq"
+        elif backend == "quantized_pq":
+            opts = dict(codec="pq")
         approx = run(engine_backend(backend), opts)
         assert flat >= 0.9                       # schedule is wide enough
         # approximate backends stay within 10 points of the exact baseline
@@ -489,6 +507,70 @@ class TestStaleness:
         assert st.n_dead == 4
         assert st.dead_frac == pytest.approx(0.4)
         assert StoreStats(0, 0, 1, 0, 0, 0).dead_frac == 0.0
+
+
+class TestIndexCheckpoint:
+    """Persist/restore built index state through `repro.checkpoint`:
+    serving restarts skip the k-means / codebook builds."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_round_trip_identical_results(self, backend, tmp_path):
+        eng, db = make_engine(backend)
+        s1, i1 = eng.search(db[:8])
+        eng.save_index(str(tmp_path))
+
+        eng2, _ = make_engine(backend)              # same corpus, no build
+        assert eng2.load_index(str(tmp_path))
+        assert eng2.stats.n_rebuilds == 0           # the point of loading
+        s2, i2 = eng2.search(db[:8])
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-5)
+        # staleness restarts clean: nothing to rebuild right after load
+        assert not eng2.backend.needs_rebuild(
+            eng2.index_state, eng2.store.stats())
+
+    @pytest.mark.parametrize("backend", ("ivf", "quantized_pq"))
+    def test_loaded_state_serves_mutations(self, backend, tmp_path):
+        eng, db = make_engine(backend)
+        eng.search(db[:1])
+        eng.save_index(str(tmp_path))
+        eng2, _ = make_engine(backend)
+        assert eng2.load_index(str(tmp_path))
+        new = RNG.normal(size=(3, D)).astype(np.float32) * 5.0
+        ids = eng2.add_docs(new)
+        _, got = eng2.search(new)
+        np.testing.assert_array_equal(got[:, 0], ids)
+        eng2.delete_docs([7])
+        _, after = eng2.search(db[7:8])
+        assert 7 not in after
+
+    def test_missing_checkpoint_returns_false(self, tmp_path):
+        eng, _ = make_engine("flat")
+        assert not eng.load_index(str(tmp_path / "nope"))
+
+    def test_backend_kind_mismatch_raises(self, tmp_path):
+        eng, db = make_engine("ivf")
+        eng.search(db[:1])
+        eng.save_index(str(tmp_path))
+        eng2, _ = make_engine("quantized")
+        with pytest.raises(ValueError, match="backend"):
+            eng2.load_index(str(tmp_path))
+
+    def test_codec_mismatch_raises(self, tmp_path):
+        eng, db = make_engine("quantized_pq")
+        eng.search(db[:1])
+        eng.save_index(str(tmp_path))
+        eng2, _ = make_engine("quantized")
+        with pytest.raises(ValueError, match="codec"):
+            eng2.load_index(str(tmp_path))
+
+    def test_oversized_index_rejected(self, tmp_path):
+        eng, db = make_engine("ivf")
+        eng.search(db[:1])
+        eng.save_index(str(tmp_path))
+        eng2, _ = make_engine("ivf", n_docs=20)     # smaller corpus
+        with pytest.raises(ValueError, match="re-add the corpus"):
+            eng2.load_index(str(tmp_path))
 
 
 class TestBalancedAssign:

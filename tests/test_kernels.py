@@ -249,6 +249,278 @@ class TestIvfScan:
                 assert m["fused_bytes"] < m["xla_bytes"]
 
 
+class TestPqScan:
+    """Fused PQ ADC LUT-scan kernel (flat + IVF-slab variants) vs the jnp
+    ADC oracles and the XLA `pq_progressive_search` path."""
+
+    @staticmethod
+    def _codec(db, d, m, rng, n_codes=64):
+        from repro.core.pq import pq_lut, train_pq
+        cb = train_pq(jnp.asarray(db[:, :d]), m=m, n_codes=n_codes, n_iter=6)
+
+        def lut_of(q):
+            return pq_lut(jnp.asarray(q[:, :d]), cb)
+
+        return cb, lut_of
+
+    @pytest.mark.parametrize("n,d,m,bm,nq,k", [
+        (300, 16, 4, 32, 5, 10),
+        (250, 32, 8, 64, 7, 8),        # n not a block multiple
+        (130, 8, 2, 128, 3, 6),        # single chunk, heavy pad
+        (200, 24, 3, 16, 4, 12),       # odd subspace count
+    ])
+    @pytest.mark.parametrize("merge", ["sort", "select"])
+    def test_flat_matches_ref(self, n, d, m, bm, nq, k, merge):
+        from repro.core.pq import pq_encode
+        from repro.kernels.pq_scan import pq_scan_topk
+        rng = np.random.default_rng(n + m)
+        db = rng.normal(size=(n, d)).astype(np.float32)
+        q = rng.normal(size=(nq, d)).astype(np.float32)
+        cb, lut_of = self._codec(db, d, m, rng)
+        codes = pq_encode(jnp.asarray(db[:, :d]), cb)
+        ids = np.arange(n, dtype=np.int32)
+        ids[rng.random(n) < 0.2] = -1              # tombstones
+        lut = lut_of(q)
+        s, i = pq_scan_topk(lut, codes, jnp.asarray(ids), k=k, block_m=bm,
+                            merge=merge, interpret=True)
+        rs, ri = ref.pq_scan_ref(lut, codes, jnp.asarray(ids), k=k)
+        assert _id_sets(i) == _id_sets(ri)
+        ss, rr = np.sort(np.asarray(s), 1), np.sort(np.asarray(rs), 1)
+        fin = np.isfinite(rr)
+        np.testing.assert_allclose(ss[fin], rr[fin], rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.isinf(ss), np.isinf(rr))
+        # no tombstone ever surfaces
+        live = np.asarray(i)[np.asarray(i) >= 0]
+        assert (ids[live] >= 0).all()
+
+    @pytest.mark.parametrize("merge", ["sort", "select"])
+    def test_ivf_slab_matches_ref(self, merge):
+        from repro.core.pq import pq_encode
+        from repro.kernels.ivf_scan import pack_ivf_lists
+        from repro.kernels.pq_scan import pq_ivf_scan_topk
+        rng = np.random.default_rng(31)
+        n, d, m, n_lists, max_len = 400, 32, 4, 8, 48   # 48 -> pads to 64
+        db = rng.normal(size=(n, d)).astype(np.float32)
+        q = rng.normal(size=(9, d)).astype(np.float32)
+        lists = _random_ivf(n, n_lists, max_len, rng, coverage=0.9)
+        cb, lut_of = self._codec(db, d, m, rng)
+        pack = pack_ivf_lists(jnp.asarray(db), jnp.asarray(lists), dim=d,
+                              dtype="pq", pq_codebooks=cb, block_m=16)
+        assert pack["rows"].dtype == jnp.uint8
+        assert pack["sq"] is None                 # ADC needs no norm table
+        probe = np.stack([rng.choice(n_lists, 4, replace=False)
+                          for _ in range(9)]).astype(np.int32)
+        s, i = pq_ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                                jnp.asarray(lists), pack, k=10, merge=merge,
+                                interpret=True)
+        codes_full = pq_encode(jnp.asarray(db[:, :d]), cb)
+        rs, ri = ref.pq_ivf_scan_ref(lut_of(q), codes_full,
+                                     jnp.asarray(lists), jnp.asarray(probe),
+                                     k=10)
+        assert _id_sets(i) == _id_sets(ri)
+        ss, rr = np.sort(np.asarray(s), 1), np.sort(np.asarray(rs), 1)
+        fin = np.isfinite(rr)
+        np.testing.assert_allclose(ss[fin], rr[fin], rtol=1e-4, atol=1e-4)
+
+    def test_ivf_slab_tombstones_and_empty_lists(self):
+        """Masked ids never surface; a fully-masked probe set yields -1."""
+        from repro.core.pq import pq_encode
+        from repro.kernels.ivf_scan import pack_ivf_lists
+        from repro.kernels.pq_scan import pq_ivf_scan_topk
+        rng = np.random.default_rng(13)
+        n, d, m, n_lists, max_len = 150, 16, 4, 6, 32
+        db = rng.normal(size=(n, d)).astype(np.float32)
+        lists = _random_ivf(n, n_lists, max_len, rng)
+        lists[2] = -1                                 # empty list
+        valid = rng.random(n) > 0.3
+        masked = np.where((lists >= 0) & valid[np.maximum(lists, 0)],
+                          lists, -1).astype(np.int32)
+        cb, lut_of = self._codec(db, d, m, rng)
+        pack = pack_ivf_lists(jnp.asarray(db), jnp.asarray(lists), dim=d,
+                              dtype="pq", pq_codebooks=cb, block_m=16)
+        q = rng.normal(size=(4, d)).astype(np.float32)
+        probe = np.asarray([[0, 2, 4], [1, 2, 5], [2, 3, 0], [2, 5, 1]],
+                           np.int32)
+        s, i = pq_ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                                jnp.asarray(masked), pack, k=8,
+                                interpret=True)
+        ia = np.asarray(i)
+        live = ia[ia >= 0]
+        assert valid[live].all()                      # no tombstone returned
+        codes_full = pq_encode(jnp.asarray(db[:, :d]), cb)
+        rs, ri = ref.pq_ivf_scan_ref(lut_of(q), codes_full,
+                                     jnp.asarray(masked), jnp.asarray(probe),
+                                     k=8)
+        assert _id_sets(i) == _id_sets(ri)
+
+    @pytest.mark.parametrize("with_valid", [False, True])
+    @pytest.mark.parametrize("with_tail", [False, True])
+    def test_parity_vs_xla_adc_path(self, with_valid, with_tail):
+        """The acceptance contract: the fused flat kernel path produces
+        identical top-k id sets to the XLA ADC reference, across validity
+        masking and tail extra_cand injection."""
+        from repro.core import make_schedule
+        from repro.core.pq import (build_pq_index, pq_progressive_search,
+                                   pq_progressive_search_kernel)
+        rng = np.random.default_rng(19)
+        n, d = 400, 64
+        db = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(9, d)).astype(np.float32))
+        sched = make_schedule(16, d, 32, final_k=5)
+        idx = build_pq_index(db, sched, m=4)
+        valid = (jnp.asarray(rng.random(n) > 0.15) if with_valid else None)
+        tail = (jnp.asarray(np.r_[np.arange(n - 8, n),
+                                  -np.ones(5)].astype(np.int32))
+                if with_tail else None)
+        kw = dict(valid=valid, extra_cand=tail, oversample=2)
+        s1, i1 = pq_progressive_search(q, idx, sched, **kw)
+        s2, i2 = pq_progressive_search_kernel(q, idx, sched, interpret=True,
+                                              block_m=64, **kw)
+        assert _id_sets(i1) == _id_sets(i2)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(s1), axis=1), np.sort(np.asarray(s2), axis=1),
+            rtol=1e-4, atol=1e-4)
+
+    def test_ivf_pq_search_end_to_end(self):
+        """`ivf_progressive_search_kernel` over a pq pack: against the
+        exact-over-probed-members baseline, ADC stage 0 with the default
+        oversample loses nothing vs the f32 stage 0 — the full-precision
+        rescore ladder absorbs the quantization noise."""
+        import jax
+        from repro.core import make_schedule
+        from repro.core import truncated as T
+        from repro.core.ivf import (build_ivf, ivf_progressive_search_kernel,
+                                    ivf_progressive_search_sched)
+        from repro.kernels.ivf_scan import pack_ivf_lists
+        rng = np.random.default_rng(23)
+        n, d = 400, 64
+        db = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(16, d)).astype(np.float32))
+        sched = make_schedule(16, d, 32, final_k=10)
+        ivf = build_ivf(db, 12)
+        # backend-default codec quality: 256 codes/subspace, 4x oversample
+        cb, _ = self._codec(np.asarray(db), 16, 4, rng, n_codes=256)
+        pack = pack_ivf_lists(db, ivf["lists"], dim=16, dtype="pq",
+                              pq_codebooks=cb, block_m=16)
+        _, i_pq = ivf_progressive_search_kernel(
+            q, db, ivf["centroids"], ivf["lists"], sched, n_probe=6,
+            pack=pack, pq_oversample=4, interpret=True)
+        _, i_f = ivf_progressive_search_sched(
+            q, db, ivf["centroids"], ivf["lists"], sched, n_probe=6)
+        # exact top-10 over the same probed members at the full dim
+        cs = T.l2_scores(q, ivf["centroids"])
+        _, probe = jax.lax.top_k(-cs, 6)
+        _, i_exact = ref.ivf_scan_ref(q, db, ivf["lists"], probe, dim=d,
+                                      k=10)
+        def recall(i):
+            return np.mean([
+                len(a & b) / max(len(b), 1)
+                for a, b in zip(_id_sets(i), _id_sets(i_exact))])
+        # both paths pay the same truncated-stage-0 noise; PQ must not pay
+        # meaningfully more on top of it
+        assert recall(i_pq) >= recall(i_f) - 0.05
+
+    def test_oversampled_pool_seats_tail_rows(self):
+        """Tail (un-absorbed appended) rows must be able to claim any slot
+        of the oversampled stage-0 pool, not just the first s0.k: a tail
+        row with a mediocre stage-0 prefix but a perfect full-dim match
+        must beat stage-0-flattering decoys at the rescore."""
+        from repro.core import make_schedule
+        from repro.core.ivf import build_ivf, ivf_progressive_search_kernel
+        from repro.core.pq import train_pq
+        from repro.kernels.ivf_scan import pack_ivf_lists
+        rng = np.random.default_rng(41)
+        d, n_coded = 16, 80
+        q = rng.normal(size=(1, d)).astype(np.float32)
+        coded = (rng.normal(size=(n_coded, d)) * 8 + 20).astype(np.float32)
+        # 4 decoys: perfect stage-0 prefix, terrible suffix; 4 true
+        # matches: slightly-off prefix, perfect suffix
+        decoys = np.concatenate(
+            [np.repeat(q[:, :8], 4, axis=0),
+             np.full((4, 8), 30.0, np.float32)], axis=1)
+        true = np.repeat(q, 4, axis=0) + np.concatenate(
+            [np.full((4, 8), 0.5, np.float32), np.zeros((4, 8), np.float32)],
+            axis=1).astype(np.float32)
+        db = jnp.asarray(np.concatenate([coded, decoys, true]))
+        tail_ids = np.arange(n_coded, n_coded + 8, dtype=np.int32)
+        sched = make_schedule(8, d, 4, final_k=4)
+        ivf = build_ivf(db[:n_coded], 4)
+        cb = train_pq(db[:n_coded, :8], m=2, n_codes=32, n_iter=4)
+        pack = pack_ivf_lists(db, ivf["lists"], dim=8, dtype="pq",
+                              pq_codebooks=cb, block_m=16)
+        _, ids = ivf_progressive_search_kernel(
+            jnp.asarray(q), db, ivf["centroids"], ivf["lists"], sched,
+            n_probe=2, pack=pack, pq_oversample=4,
+            extra_cand=jnp.asarray(tail_ids), interpret=True)
+        # the 4 true matches fill the final top-4; every decoy loses
+        assert set(np.asarray(ids)[0].tolist()) == set(
+            range(n_coded + 4, n_coded + 8))
+
+    def test_update_pack_absorbs_new_rows_pq(self):
+        """Incremental append: a row written into a spare slot is encoded
+        against the pack's frozen codebooks and scores like a built one."""
+        from repro.kernels.ivf_scan import pack_ivf_lists, update_pack
+        from repro.kernels.pq_scan import pq_ivf_scan_topk
+        rng = np.random.default_rng(5)
+        n, d, m, n_lists, max_len = 100, 16, 4, 4, 32
+        db = rng.normal(size=(n + 1, d)).astype(np.float32)
+        lists = _random_ivf(n, n_lists, max_len, rng, coverage=0.5)
+        cb, _ = self._codec(db[:n], d, m, rng)
+        pack = pack_ivf_lists(jnp.asarray(db[:n]), jnp.asarray(lists), dim=d,
+                              dtype="pq", pq_codebooks=cb, block_m=16)
+        slot = int((lists[1] >= 0).sum())
+        lists[1, slot] = n
+        pack = update_pack(pack, jnp.asarray(db), np.asarray([n], np.int32),
+                           np.asarray([1 * pack["max_len"] + slot]))
+        q = db[n:n + 1] + 0.01 * rng.normal(size=(1, d)).astype(np.float32)
+        probe = np.asarray([[1, 0]], np.int32)
+        _, i = pq_ivf_scan_topk(jnp.asarray(q), jnp.asarray(probe),
+                                jnp.asarray(lists), pack, k=1,
+                                interpret=True)
+        assert int(np.asarray(i)[0, 0]) == n
+
+    def test_pack_rejects_wrong_scanner(self):
+        from repro.core.pq import train_pq
+        from repro.kernels.ivf_scan import ivf_scan_topk, pack_ivf_lists
+        from repro.kernels.pq_scan import pq_ivf_scan_topk
+        rng = np.random.default_rng(2)
+        db = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+        lists = jnp.asarray(_random_ivf(64, 4, 16, rng))
+        cb = train_pq(db, m=4, n_codes=16, n_iter=2)
+        pq_pack = pack_ivf_lists(db, lists, dim=16, dtype="pq",
+                                 pq_codebooks=cb)
+        f_pack = pack_ivf_lists(db, lists, dim=16)
+        q = jnp.zeros((1, 16), jnp.float32)
+        probe = jnp.zeros((1, 2), jnp.int32)
+        with pytest.raises(ValueError, match="pq_scan"):
+            ivf_scan_topk(q, probe, lists, pq_pack, k=4, interpret=True)
+        with pytest.raises(ValueError, match="dtype='pq'"):
+            pq_ivf_scan_topk(q, probe, lists, f_pack, k=4, interpret=True)
+        with pytest.raises(ValueError, match="pq_codebooks"):
+            pack_ivf_lists(db, lists, dim=16, dtype="pq")
+
+    def test_flat_bytes_model_pq_strictly_under_int8(self):
+        from repro.kernels.pq_scan import flat_stage0_bytes_model
+        for d0, m in ((8, 1), (16, 2), (64, 8), (256, 32)):
+            i8 = flat_stage0_bytes_model(n=65536, k=256, row_bytes=d0)
+            pq = flat_stage0_bytes_model(n=65536, k=256, row_bytes=m,
+                                         lut_bytes=m * 256 * 4)
+            for key in ("xla_bytes", "fused_bytes"):
+                assert pq[key] < i8[key]
+            assert pq["fused_bytes"] < pq["xla_bytes"] + 8 * 256
+
+    def test_ivf_bytes_model_pq_strictly_under_int8(self):
+        from repro.kernels.ivf_scan import stage0_bytes_model
+        for d0, m in ((16, 2), (64, 8), (256, 32)):
+            i8 = stage0_bytes_model(n_lists=64, max_len=128, n_probe=8,
+                                    d0=d0, k=32, member_bytes=1)
+            pq = stage0_bytes_model(n_lists=64, max_len=128, n_probe=8,
+                                    d0=d0, k=32, row_bytes=m,
+                                    lut_bytes=m * 256 * 4, norms=False)
+            assert pq["fused_bytes"] < i8["fused_bytes"]
+            assert pq["fused_bytes"] < pq["xla_bytes"]
+
+
 class TestGatherRescore:
     @pytest.mark.parametrize("nq,n,d,c,bc", [
         (8, 200, 64, 16, 8),

@@ -3,6 +3,7 @@
 import math
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -210,6 +211,82 @@ def test_embedding_bag_ref_linearity(seed, v, b, l):
             + kref.embedding_bag_ref(jnp.asarray(t2), jnp.asarray(idx)))
     np.testing.assert_allclose(np.asarray(a), np.asarray(bsum),
                                rtol=1e-4, atol=1e-4)
+
+
+@given(
+    data=st.data(),
+    n=st.integers(2, 40),
+    d=st.sampled_from([4, 8]),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantize_per_dim_round_trip_error_bounded(data, n, d):
+    """int8 round trip: |x - q*scale| <= scale/2 per element (symmetric
+    grid, ties-to-even rounding), and codes use the full int8 range."""
+    from repro.core.quant import quantize_per_dim
+    x = data.draw(hnp.arrays(np.float32, (n, d), elements=F32))
+    q, scale = quantize_per_dim(jnp.asarray(x))
+    q, scale = np.asarray(q, np.float32), np.asarray(scale)
+    assert (np.abs(q) <= 127).all()
+    deq = q * scale
+    # rounding to the grid loses at most half a step per element
+    assert (np.abs(x - deq) <= scale[None, :] / 2 + 1e-6).all()
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(8, 60),
+    m=st.sampled_from([1, 2, 4]),
+    n_codes=st.sampled_from([4, 16]),
+)
+@settings(max_examples=25, deadline=None)
+def test_pq_encode_is_within_codebook_quantization_error(seed, n, m,
+                                                         n_codes):
+    """PQ round trip: encode picks the per-subspace nearest centroid, so
+    reconstruction error is the codebook quantization error — no other
+    code assignment reconstructs any row better."""
+    from repro.core.pq import pq_decode, pq_encode, train_pq
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+    cb = train_pq(x, m=m, n_codes=n_codes, n_iter=3,
+                  key=jax.random.PRNGKey(seed))
+    codes = pq_encode(x, cb)
+    best = np.sum(
+        (np.asarray(pq_decode(codes, cb)) - np.asarray(x)) ** 2, axis=1)
+    other = jnp.asarray(
+        rng.integers(0, n_codes, np.asarray(codes).shape).astype(np.uint8))
+    err = np.sum(
+        (np.asarray(pq_decode(other, cb)) - np.asarray(x)) ** 2, axis=1)
+    assert (best <= err + 1e-4).all()
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nq=st.integers(1, 6),
+    m=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=25, deadline=None)
+def test_pq_adc_rank_equivalent_to_decoded_l2(seed, nq, m):
+    """ADC identity: summing a row's M LUT entries equals the
+    rank-equivalent L2 score of the query vs that row's reconstruction —
+    so ADC ranking == dequantized-L2 ranking exactly."""
+    from repro.core.pq import pq_adc_scores, pq_decode, pq_encode, pq_lut, \
+        train_pq
+    from repro.core.truncated import l2_scores
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(nq, 8)).astype(np.float32))
+    cb = train_pq(x, m=m, n_codes=8, n_iter=3, key=jax.random.PRNGKey(seed))
+    codes = pq_encode(x, cb)
+    adc = np.asarray(pq_adc_scores(pq_lut(q, cb), codes))
+    exact = np.asarray(l2_scores(q, pq_decode(codes, cb)))
+    np.testing.assert_allclose(adc, exact, rtol=1e-4, atol=1e-3)
+    # rank equivalence wherever the decoded scores are not near-tied
+    # (bit-tied rows — duplicate codes — are tied in both scorings)
+    order = np.argsort(exact, axis=1, kind="stable")
+    sorted_exact = np.take_along_axis(exact, order, axis=1)
+    sorted_adc = np.take_along_axis(adc, order, axis=1)
+    gap_ok = np.diff(sorted_exact, axis=1) > 1e-3
+    assert (np.diff(sorted_adc, axis=1)[gap_ok] > 0).all()
 
 
 @given(seed=st.integers(0, 2**31 - 1))
