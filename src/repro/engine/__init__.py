@@ -4,23 +4,36 @@ pluggable index backends.
 
 Public API:
   RetrievalEngine                — submit/poll/step serving loop + batch search
-                                   (``backend='flat'|'ivf'|'quantized'``,
+                                   (typed ``EngineConfig`` or legacy kwargs,
                                    rebuild/compaction lifecycle); thread-safe
                                    behind ``engine.lock``
+  SearchRequest                  — typed per-request options (k, tenant,
+                                   metadata filter, deadline); accepted by
+                                   every submit/retrieve/search entry point
+                                   alongside raw query vectors
+  EngineConfig + FlatConfig/IVFConfig/QuantizedConfig
+                                 — eager-validating, serializable engine and
+                                   per-backend configuration
   EngineDriver                   — background thread owning batch formation:
                                    deadline-based flushes, futures,
                                    backpressure, drain/abort shutdown
   RetrievalFuture                — write-once result handle from ``submit``
-  DriverStopped, DriverQueueFull — driver client-facing exceptions
+  DriverStopped, DriverQueueFull,
+  DeadlineExceeded               — driver client-facing exceptions
+  UnknownRequest, ResultEvicted  — ``poll`` signals: never-issued id vs a
+                                   result that is gone for good
+  FilterError                    — malformed metadata-filter spec (HTTP 400)
   RetrievalResult, RequestStats  — per-request outputs and timing breakdown
   EngineStats, DriverStats       — aggregate counters / latency percentiles
   DocStore                       — capacity-doubling device buffers + validity
-                                   mask + tombstone compaction
+                                   mask, tombstone compaction, tenant
+                                   namespaces + metadata filter masks
   BucketPolicy                   — static batch-size ladder
   DeadlineBatcher, BatchDecision — pure deadline-flush policy (fake-clock
                                    testable) the driver thread consults
 
-The backend protocol and implementations live in `repro.index_backends`.
+The backend protocol and implementations live in `repro.index_backends`;
+the HTTP serving front-end on top of all this lives in `repro.serve`.
 """
 
 from repro.engine.batching import (
@@ -31,7 +44,16 @@ from repro.engine.batching import (
     RequestQueue,
     pad_batch,
 )
+from repro.engine.config import (
+    BackendConfig,
+    EngineConfig,
+    FlatConfig,
+    IVFConfig,
+    QuantizedConfig,
+    backend_config,
+)
 from repro.engine.driver import (
+    DeadlineExceeded,
     DriverQueueFull,
     DriverStats,
     DriverStopped,
@@ -41,17 +63,23 @@ from repro.engine.driver import (
 from repro.engine.engine import (
     EngineStats,
     RequestStats,
+    ResultEvicted,
     RetrievalEngine,
     RetrievalResult,
+    UnknownRequest,
 )
+from repro.engine.request import FilterError, SearchRequest, canonical_filter
 from repro.engine.store import DocStore
 from repro.index_backends import StoreStats
 
 __all__ = [
     "BatchDecision", "BucketPolicy", "DeadlineBatcher", "PendingRequest",
     "RequestQueue", "pad_batch",
-    "DriverQueueFull", "DriverStats", "DriverStopped", "EngineDriver",
-    "RetrievalFuture",
-    "DocStore", "EngineStats", "RequestStats", "RetrievalEngine",
-    "RetrievalResult", "StoreStats",
+    "BackendConfig", "EngineConfig", "FlatConfig", "IVFConfig",
+    "QuantizedConfig", "backend_config",
+    "DeadlineExceeded", "DriverQueueFull", "DriverStats", "DriverStopped",
+    "EngineDriver", "RetrievalFuture",
+    "DocStore", "EngineStats", "FilterError", "RequestStats",
+    "ResultEvicted", "RetrievalEngine", "RetrievalResult", "SearchRequest",
+    "StoreStats", "UnknownRequest", "canonical_filter",
 ]

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Tuple
+from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -129,11 +129,21 @@ class DeadlineBatcher:
 
 @dataclasses.dataclass
 class PendingRequest:
-    """A submitted query waiting for dispatch."""
+    """A submitted query waiting for dispatch.
+
+    ``k``/``mask_key`` carry the per-request options of the typed
+    `repro.engine.request.SearchRequest` surface; the defaults are exactly
+    the legacy raw-vector request (engine-default k, no tenant/filter).
+    Requests sharing a ``mask_key`` can ride the same dispatch — the batch
+    applies one row bitmask — so batch formation groups by it.
+    """
 
     request_id: int
     query: np.ndarray           # (D,) float32
     t_submit: float             # perf_counter seconds
+    k: Optional[int] = None     # result width; None = engine default
+    mask_key: Optional[Tuple] = None   # DocStore.compile_mask identity
+    deadline: Optional[float] = None   # absolute perf_counter deadline
 
 
 class RequestQueue:
@@ -153,6 +163,28 @@ class RequestQueue:
         out = []
         while self._q and len(out) < max_n:
             out.append(self._q.popleft())
+        return out
+
+    def pop_group(self, max_n: int) -> List[PendingRequest]:
+        """Pop up to ``max_n`` requests sharing the head's ``mask_key``.
+
+        A batch dispatches with ONE row bitmask, so only same-key requests
+        may share it.  The head's key always progresses (no starvation —
+        this is still FIFO by key-of-the-oldest); non-matching requests
+        keep their relative order for the next pop.
+        """
+        if not self._q:
+            return []
+        key = self._q[0].mask_key
+        out: List[PendingRequest] = []
+        skipped: List[PendingRequest] = []
+        while self._q and len(out) < max_n:
+            req = self._q.popleft()
+            if req.mask_key == key:
+                out.append(req)
+            else:
+                skipped.append(req)
+        self._q.extendleft(reversed(skipped))
         return out
 
 

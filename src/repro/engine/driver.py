@@ -47,8 +47,6 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
-import numpy as np
-
 from repro.engine.batching import DeadlineBatcher, PendingRequest
 from repro.engine.engine import RetrievalEngine, RetrievalResult
 
@@ -59,6 +57,12 @@ class DriverStopped(RuntimeError):
 
 class DriverQueueFull(TimeoutError):
     """``submit`` timed out waiting for space in the bounded pending queue."""
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's ``SearchRequest.deadline_ms`` budget expired before its
+    batch dispatched — the driver dropped it instead of burning device time
+    on an answer nobody is waiting for (the HTTP layer maps this to 504)."""
 
 
 class RetrievalFuture:
@@ -107,6 +111,7 @@ class DriverStats:
     n_submitted: int = 0
     n_completed: int = 0
     n_cancelled: int = 0
+    n_expired: int = 0          # dropped: client deadline passed pre-dispatch
     n_batch_errors: int = 0
     n_flush_full: int = 0       # batches flushed because the bucket filled
     n_flush_deadline: int = 0   # batches flushed by max_wait_ms expiry
@@ -119,10 +124,13 @@ class DriverStats:
 
 @dataclasses.dataclass
 class _Pending:
-    query: np.ndarray           # validated (D,) float32
+    req: PendingRequest         # validated request (rid assigned by engine)
     future: RetrievalFuture
-    t_submit: float             # perf_counter seconds (engine latency stats)
     t_arrival: float            # driver-clock seconds (deadline policy)
+
+    @property
+    def mask_key(self):
+        return self.req.mask_key
 
 
 _NEW, _RUNNING, _STOPPING, _STOPPED = "new", "running", "stopping", "stopped"
@@ -240,17 +248,21 @@ class EngineDriver:
             return len(self._pending)
 
     # -- client API ----------------------------------------------------------
-    def submit(self, query, *,
+    def submit(self, request, *,
                timeout: Optional[float] = None) -> RetrievalFuture:
-        """Enqueue one query from any thread; returns a ``RetrievalFuture``.
+        """Enqueue one request from any thread; returns a
+        ``RetrievalFuture``.
 
-        Blocks while the pending queue is full (backpressure); raises
-        ``DriverQueueFull`` if no slot frees within ``timeout`` and
+        ``request`` is a raw (D,)/(1, D) query vector or a
+        `repro.engine.request.SearchRequest` carrying per-request
+        k/tenant/filter/deadline (a raw array means ``SearchRequest(query)``
+        exactly).  Blocks while the pending queue is full (backpressure);
+        raises ``DriverQueueFull`` if no slot frees within ``timeout`` and
         ``DriverStopped`` once the driver is shutting down.  Accepted before
         ``start()`` too — requests just wait for the thread (or an inline
         ``stop(drain=True)``).
         """
-        q = self.engine.check_query(query)
+        req = self.engine.check_request(request)
         fut = RetrievalFuture()
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
@@ -272,27 +284,46 @@ class EngineDriver:
                             f"pending queue held {self._max_queue} requests "
                             f"for {timeout}s")
                     self._cv.wait(remaining)
-            self._pending.append(
-                _Pending(q, fut, time.perf_counter(), self._clock()))
+            self._pending.append(_Pending(req, fut, self._clock()))
             self.stats.n_submitted += 1
             if len(self._pending) > self.stats.queue_peak:
                 self.stats.queue_peak = len(self._pending)
             self._cv.notify_all()
         return fut
 
-    def retrieve(self, query, *,
+    def retrieve(self, request, *,
                  timeout: Optional[float] = None) -> RetrievalResult:
-        """Blocking submit-and-wait; ``timeout`` bounds the whole round trip."""
+        """Blocking submit-and-wait (raw vector or `SearchRequest`);
+        ``timeout`` bounds the whole round trip."""
         t0 = time.perf_counter()
-        fut = self.submit(query, timeout=timeout)
+        fut = self.submit(request, timeout=timeout)
         remaining = (None if timeout is None
                      else max(0.0, timeout - (time.perf_counter() - t0)))
         return fut.result(remaining)
 
     # -- batching loop -------------------------------------------------------
     def _take_locked(self, n: int) -> List[_Pending]:
-        return [self._pending.popleft()
-                for _ in range(min(n, len(self._pending)))]
+        """Take up to ``n`` requests sharing the head's mask key.
+
+        A dispatch applies ONE tenant/filter bitmask, so only same-key
+        requests may share a batch; non-matching requests keep their order
+        for the next iteration (the head always progresses — FIFO by the
+        oldest request, no starvation).  Unfiltered traffic (mask_key None)
+        batches exactly as before.
+        """
+        if not self._pending:
+            return []
+        key = self._pending[0].mask_key
+        taken: List[_Pending] = []
+        skipped: List[_Pending] = []
+        while self._pending and len(taken) < n:
+            p = self._pending.popleft()
+            if p.mask_key == key:
+                taken.append(p)
+            else:
+                skipped.append(p)
+        self._pending.extendleft(reversed(skipped))
+        return taken
 
     def _finish_locked(self) -> None:
         """Cancel whatever is left and mark the driver stopped."""
@@ -308,15 +339,30 @@ class EngineDriver:
         """Run one flushed chunk through the engine and resolve its futures."""
         if not chunk:
             return
+        # drop requests whose client deadline already passed: their futures
+        # fail with DeadlineExceeded and they never reach the device —
+        # under overload this sheds exactly the work nobody waits for
+        now = time.perf_counter()
+        live: List[_Pending] = []
+        for p in chunk:
+            if p.req.deadline is not None and now > p.req.deadline:
+                self.stats.n_expired += 1
+                p.future._finish(error=DeadlineExceeded(
+                    f"deadline expired {((now - p.req.deadline) * 1e3):.1f}ms "
+                    f"before dispatch"))
+            else:
+                live.append(p)
+        chunk = live
+        if not chunk:
+            return
         if reason == "full":
             self.stats.n_flush_full += 1
         elif reason == "deadline":
             self.stats.n_flush_deadline += 1
         else:
             self.stats.n_flush_drain += 1
-        reqs = [PendingRequest(-1, p.query, p.t_submit) for p in chunk]
         try:
-            results = self.engine.execute_batch(reqs)
+            results = self.engine.execute_batch([p.req for p in chunk])
         except Exception as e:
             # fail this batch's clients, keep serving the next one
             self.stats.n_batch_errors += 1

@@ -62,10 +62,28 @@ from repro.core import (
     truncated_search,
 )
 from repro.engine.batching import BucketPolicy, PendingRequest, RequestQueue, pad_batch
+from repro.engine.config import EngineConfig, legacy_config
+from repro.engine.request import SearchRequest
 from repro.engine.store import DocStore
 from repro.index_backends import IndexBackend, IndexState, make_backend
 
 Array = jax.Array
+
+
+class UnknownRequest(KeyError):
+    """``poll`` was handed a request id the engine never issued."""
+
+
+class ResultEvicted(KeyError):
+    """The request ran, but its result is no longer available.
+
+    Either the client let it sit past the ``max_unpolled`` eviction bound,
+    or it was already polled once (results pop), or it was served through
+    the async driver's future path (which never parks results).  Distinct
+    from ``poll`` returning None — that means "still pending, ask again" —
+    and from ``UnknownRequest`` — that means "this id was never issued".
+    A slow HTTP client can therefore tell "gone forever" from "bad id".
+    """
 
 
 @dataclasses.dataclass
@@ -82,7 +100,8 @@ class RequestStats:
 
 @dataclasses.dataclass
 class RetrievalResult:
-    """Top-k neighbours for one request (k == engine.out_k)."""
+    """Top-k neighbours for one request (k == the request's k, which
+    defaults to — and never exceeds — ``engine.out_k``)."""
 
     request_id: int
     scores: np.ndarray         # (out_k,) ascending; +inf marks empty slots
@@ -213,55 +232,89 @@ class RetrievalEngine:
 
     def __init__(
         self,
-        d_emb: int,
+        d_emb: Optional[int] = None,
         *,
+        config: Optional[EngineConfig] = None,
         schedule: Optional[ProgressiveSchedule] = None,
-        d_start: int = 32,
-        k0: int = 32,
-        final_k: int = 1,
-        buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
-        capacity: int = 1024,
-        metric: str = "l2",
-        block_n: int = 65536,
-        max_unpolled: int = 65536,
-        backend="flat",
-        backend_opts: Optional[Dict] = None,
-        rebuild_mode: str = "sync",
-        compact_dead_frac: Optional[float] = 0.3,
         dtype=jnp.float32,
+        backend=None,
+        **legacy_kwargs,
     ):
-        """See the module docstring; backend-subsystem knobs:
+        """Construct from a typed ``EngineConfig`` — or the legacy kwargs.
 
-        Args:
-          backend:       index-backend name (``'flat'``/``'ivf'``/
-                         ``'quantized'``) or a constructed ``IndexBackend``.
-          backend_opts:  kwargs for the named backend (e.g. ``n_lists``,
-                         ``n_probe``, ``rebuild_frac`` for ``'ivf'``).
-          rebuild_mode:  ``'sync'`` — rebuild inline at a safe point between
-                         batches; ``'background'`` — build on a thread and
-                         swap when done (compaction still pauses);
-                         ``'off'`` — only correctness-mandated rebuilds.
-          compact_dead_frac: tombstone fraction that triggers buffer
-                         compaction during a rebuild (None disables).
-                         Compaction REMAPS live doc ids; register an
-                         ``on_remap`` callback to follow.
+        The blessed surface is ``RetrievalEngine(config=EngineConfig(...))``
+        with a typed per-backend block (``FlatConfig``/``IVFConfig``/
+        ``QuantizedConfig``).  The legacy keyword form — ``d_emb`` plus any
+        of ``d_start``/``k0``/``final_k``/``buckets``/``capacity``/
+        ``metric``/``block_n``/``max_unpolled``/``backend``/
+        ``backend_opts``/``rebuild_mode``/``compact_dead_frac`` — still
+        works: it is folded into the equivalent config through
+        `repro.engine.config.legacy_config` (same defaults, now with eager
+        option validation), so ``engine.config`` is populated either way.
+
+        ``schedule`` (an explicit ``ProgressiveSchedule`` overriding the
+        d_start/k0/final_k derivation), ``dtype`` (device buffer dtype) and
+        a pre-constructed ``IndexBackend`` instance as ``backend`` remain
+        engine-level arguments — they hold live objects and don't serialize.
         """
+        backend_instance: Optional[IndexBackend] = None
+        if isinstance(backend, IndexBackend):
+            backend_instance, backend = backend, None
+            if config is not None:
+                raise ValueError(
+                    "pass a pre-constructed IndexBackend instance OR a "
+                    "config, not both")
+            if legacy_kwargs.get("backend_opts") is not None:
+                raise ValueError(
+                    f"backend_opts {sorted(legacy_kwargs['backend_opts'])} "
+                    f"conflict with an already-constructed backend instance")
+        if config is None:
+            if d_emb is None:
+                raise ValueError(
+                    "RetrievalEngine needs d_emb (legacy kwargs) or "
+                    "config=EngineConfig(...)")
+            if backend is not None:
+                legacy_kwargs["backend"] = backend
+            config = legacy_config(int(d_emb), **legacy_kwargs)
+            if backend_instance is not None:
+                # the instance itself is wired below; the config records its
+                # name only (it may be a user-registered backend the typed
+                # config registry has never heard of)
+                from repro.engine.config import CustomBackendConfig
+                config = dataclasses.replace(
+                    config,
+                    backend=CustomBackendConfig(backend_instance.name))
+        else:
+            if legacy_kwargs or backend is not None:
+                extra = sorted(legacy_kwargs) + (
+                    ["backend"] if backend is not None else [])
+                raise ValueError(
+                    f"config=EngineConfig(...) conflicts with legacy "
+                    f"kwarg(s) {extra}; set them on the config")
+            if d_emb is not None and int(d_emb) != config.d_emb:
+                raise ValueError(
+                    f"d_emb={d_emb} conflicts with config.d_emb="
+                    f"{config.d_emb}")
+        self.config = config
+
         self.sched = schedule or make_schedule(
-            min(d_start, d_emb), d_emb, k0, final_k=final_k
+            config.d_start, config.d_emb, config.k0, final_k=config.final_k
         )
-        if self.sched.d_max > d_emb:
+        if self.sched.d_max > config.d_emb:
             raise ValueError(
-                f"schedule d_max={self.sched.d_max} exceeds d_emb={d_emb}"
+                f"schedule d_max={self.sched.d_max} exceeds "
+                f"d_emb={config.d_emb}"
             )
         self.dims = stage_dims(self.sched)
         # actual result width: progressive_search returns stages[-1].k
         # columns (a single-stage schedule keeps k0); slice to final_k so the
         # engine's documented contract holds for every schedule shape
         self.out_k = min(self.sched.final_k, self.sched.stages[-1].k)
-        self.metric = metric
-        self.block_n = int(block_n)
-        self.store = DocStore(d_emb, self.dims, capacity=capacity, dtype=dtype)
-        self.policy = BucketPolicy(tuple(int(b) for b in buckets))
+        self.metric = config.metric
+        self.block_n = int(config.block_n)
+        self.store = DocStore(config.d_emb, self.dims,
+                              capacity=config.capacity, dtype=dtype)
+        self.policy = BucketPolicy(config.buckets)
         self.stats = EngineStats()
         # Guards every store/queue/stats mutation and every dispatch: client
         # threads and the async driver thread share the engine through it.
@@ -272,22 +325,23 @@ class RetrievalEngine:
         # Completed-but-unpolled results are evicted oldest-first (dicts are
         # insertion-ordered) past max_unpolled, so clients that die between
         # submit() and poll() can't leak memory in a long-lived serving loop
-        # (poll() then returns None, same as an unknown request id).
+        # (poll() then raises ResultEvicted — distinct from an unknown id).
         self._results: Dict[int, RetrievalResult] = {}
-        self._max_unpolled = int(max_unpolled)
+        self._max_unpolled = int(config.max_unpolled)
         self._next_rid = 0
+        # queue-path rids not yet parked in _results: lets poll() tell
+        # "still pending" (None) from "evicted/consumed" (ResultEvicted)
+        self._pending_rids: set = set()
         self._seen_shapes: set = set()
 
-        if rebuild_mode not in ("sync", "background", "off"):
-            raise ValueError(
-                f"rebuild_mode must be sync|background|off, got {rebuild_mode!r}"
-            )
-        self.backend: IndexBackend = make_backend(
-            backend, sched=self.sched, metric=metric, block_n=self.block_n,
-            **(backend_opts or {}),
-        )
-        self.rebuild_mode = rebuild_mode
-        self.compact_dead_frac = compact_dead_frac
+        self.backend: IndexBackend = (
+            backend_instance if backend_instance is not None
+            else make_backend(
+                config.backend.name, sched=self.sched, metric=config.metric,
+                block_n=self.block_n, **config.backend.opts(),
+            ))
+        self.rebuild_mode = config.rebuild_mode
+        self.compact_dead_frac = config.compact_dead_frac
         self.on_remap: List[Callable[[np.ndarray], None]] = []
         self._index_state: Optional[IndexState] = None
         self._bg = _BackgroundBuild()
@@ -296,10 +350,16 @@ class RetrievalEngine:
         self._min_state_generation = 0
 
     # -- corpus mutation -----------------------------------------------------
-    def add_docs(self, vectors) -> np.ndarray:
-        """Append document embeddings; returns their stable doc ids."""
+    def add_docs(self, vectors, *, tenant: Optional[str] = None,
+                 metadata=None) -> np.ndarray:
+        """Append document embeddings; returns their stable doc ids.
+
+        ``tenant`` namespaces the rows (searches with ``tenant=`` see only
+        their own namespace); ``metadata`` — one dict or a per-row sequence
+        of dicts — feeds the per-request filter masks.
+        """
         with self.lock:
-            ids = self.store.add(vectors)
+            ids = self.store.add(vectors, tenant=tenant, metadata=metadata)
             self.stats.n_docs_added += len(ids)
             return ids
 
@@ -497,23 +557,69 @@ class RetrievalEngine:
             )
         return q
 
-    def submit(self, query) -> int:
-        """Enqueue one query vector ((D,) or (1, D)); returns a request id
-        for ``poll``.  (The async driver does not pass through here — it
-        forms its own batches and enters via ``execute_batch``, stamping
-        each request's client-side submit time itself.)"""
-        q = self.check_query(query)
+    def check_request(self, request) -> PendingRequest:
+        """Validate a raw query vector or `SearchRequest` into an unstamped
+        ``PendingRequest`` (no lock; request_id assigned at enqueue).
+
+        This is the one normalization point for the typed request surface —
+        the engine's own ``submit``/``search`` and the async driver both
+        route through it, so a raw array behaves exactly like
+        ``SearchRequest(query)`` everywhere.
+        """
+        if not isinstance(request, SearchRequest):
+            request = SearchRequest(request)
+        q = self.check_query(request.query)
+        k = self.out_k if request.k is None else int(request.k)
+        if not 1 <= k <= self.out_k:
+            raise ValueError(
+                f"k={k} outside [1, {self.out_k}]; the engine dispatches a "
+                f"static result width — configure final_k for the largest "
+                f"k it should serve")
+        mask_key = self.store.compile_mask(request.tenant, request.filter)
+        now = time.perf_counter()
+        deadline = (None if request.deadline_ms is None
+                    else now + float(request.deadline_ms) / 1e3)
+        return PendingRequest(-1, q, now, k=k, mask_key=mask_key,
+                              deadline=deadline)
+
+    def submit(self, request) -> int:
+        """Enqueue one request — a raw (D,)/(1, D) query vector or a
+        `SearchRequest` carrying per-request k/tenant/filter — and return a
+        request id for ``poll``.  (The async driver does not pass through
+        here — it forms its own batches and enters via ``execute_batch``,
+        stamping each request's client-side submit time itself.)"""
+        req = self.check_request(request)
         with self.lock:
-            rid = self._next_rid
+            req.request_id = self._next_rid
             self._next_rid += 1
-            self._queue.push(PendingRequest(rid, q, time.perf_counter()))
+            self._queue.push(req)
+            self._pending_rids.add(req.request_id)
             self.stats.n_submitted += 1
-            return rid
+            return req.request_id
 
     def poll(self, request_id: int) -> Optional[RetrievalResult]:
-        """Pop the result for ``request_id`` if its batch has run."""
+        """Pop the result for ``request_id`` if its batch has run.
+
+        Returns None while the request is still pending.  Raises
+        ``UnknownRequest`` for an id the engine never issued, and
+        ``ResultEvicted`` for one whose result is gone — evicted past
+        ``max_unpolled``, already polled (results pop once), or served
+        through the driver's future path.  A slow client can therefore
+        distinguish "ask again" (None) from "gone forever" from "bad id".
+        """
         with self.lock:
-            return self._results.pop(request_id, None)
+            res = self._results.pop(request_id, None)
+            if res is not None:
+                return res
+            if not 0 <= int(request_id) < self._next_rid:
+                raise UnknownRequest(
+                    f"request id {request_id} was never issued "
+                    f"(ids so far: [0, {self._next_rid}))")
+            if request_id in self._pending_rids:
+                return None
+            raise ResultEvicted(
+                f"request {request_id} has no parked result: it was "
+                f"evicted, already polled, or driver-served")
 
     @property
     def n_pending(self) -> int:
@@ -521,12 +627,20 @@ class RetrievalEngine:
             return len(self._queue)
 
     def _execute(self, reqs: List[PendingRequest]) -> List[RetrievalResult]:
-        """Run one bucket-shaped batch (caller holds ``self.lock``)."""
+        """Run one bucket-shaped batch (caller holds ``self.lock``).
+
+        Every request in the chunk must share one ``mask_key`` — the batch
+        dispatches with a single row bitmask AND-ed into the validity mask.
+        ``step``/``execute_batch`` group by key before calling here.
+        """
         self._maybe_rebuild_locked()              # safe point between batches
+        # compile AFTER the rebuild safe point: appends/compaction already
+        # landed, so the mask matches the buffers this dispatch will scan
+        mask = self.store.mask_for_key(reqs[0].mask_key)
         bucket = self.policy.bucket_for(len(reqs))
         t_dispatch = time.perf_counter()
         qb = pad_batch(np.stack([r.query for r in reqs]), bucket)
-        scores, ids, compiled = self._dispatch(qb)
+        scores, ids, compiled = self._dispatch(qb, mask=mask)
         t_done = time.perf_counter()
         compute_ms = (t_done - t_dispatch) * 1e3
         self.stats.record_batch(bucket, len(reqs), compute_ms, compiled)
@@ -540,8 +654,9 @@ class RetrievalEngine:
                 batch_fill=len(reqs),
                 compiled=compiled,
             )
+            k = self.out_k if r.k is None else r.k
             out.append(RetrievalResult(
-                r.request_id, scores[j], ids[j], st,
+                r.request_id, scores[j][:k], ids[j][:k], st,
                 store_generation=self.store.generation,
             ))
             self.stats.record_request(st)
@@ -550,16 +665,20 @@ class RetrievalEngine:
     def step(self) -> int:
         """Dispatch one bucket-shaped batch from the queue head.
 
-        Returns the number of requests completed (0 if the queue is empty).
+        Requests sharing the head's (tenant, filter) mask key batch
+        together; others stay queued for the next ``step`` in arrival
+        order.  Returns the number of requests completed (0 if the queue
+        is empty).
         """
         with self.lock:
             n = len(self._queue)
             if n == 0:
                 return 0
             bucket = self.policy.bucket_for(min(n, self.policy.max_size))
-            reqs = self._queue.pop_chunk(min(n, bucket))
+            reqs = self._queue.pop_group(min(n, bucket))
             for res in self._execute(reqs):
                 self._results[res.request_id] = res
+                self._pending_rids.discard(res.request_id)
             while len(self._results) > self._max_unpolled:
                 self._results.pop(next(iter(self._results)))
             return len(reqs)
@@ -570,10 +689,13 @@ class RetrievalEngine:
         """Dispatch pre-formed requests immediately, bypassing the queue.
 
         The async driver's entry point: its requests already waited out the
-        deadline policy in the driver's own queue, so they dispatch now
-        (split along the bucket ladder when the chunk exceeds the top
-        bucket).  Results return in request order and are never parked in
-        the ``poll`` map — the driver resolves its futures directly, so the
+        deadline policy in the driver's own queue, so they dispatch now —
+        split into consecutive same-``mask_key`` runs (each run shares one
+        filter bitmask; the driver's batch formation already groups, so a
+        mixed chunk only costs extra dispatches, never reorders results)
+        and along the bucket ladder when a run exceeds the top bucket.
+        Results return in request order and are never parked in the
+        ``poll`` map — the driver resolves its futures directly, so the
         ``max_unpolled`` eviction can't drop them.  Requests with a negative
         ``request_id`` are assigned the next engine id.
         """
@@ -586,8 +708,13 @@ class RetrievalEngine:
             self.stats.n_submitted += len(reqs)
             off = 0
             while off < len(reqs):
-                chunk = list(reqs[off:off + self.policy.max_size])
-                off += len(chunk)
+                chunk = [reqs[off]]
+                off += 1
+                while (off < len(reqs)
+                       and len(chunk) < self.policy.max_size
+                       and reqs[off].mask_key == chunk[0].mask_key):
+                    chunk.append(reqs[off])
+                    off += 1
                 out.extend(self._execute(chunk))
         return out
 
@@ -613,14 +740,19 @@ class RetrievalEngine:
                 self._dispatch(np.repeat(probe, b, axis=0))
 
     # -- synchronous batch API (pipeline / benchmarks) ------------------------
-    def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
+    def search(self, queries, *, k: Optional[int] = None,
+               tenant: Optional[str] = None,
+               filter: Optional[Dict] = None,
+               ) -> Tuple[np.ndarray, np.ndarray]:
         """Bucketed search for a (B, D) query batch, bypassing the queue.
 
-        With the default ``flat`` backend, results are identical to calling
-        ``progressive_search`` directly on the live corpus (padding queries
-        are per-query-independent and sliced off); the ``ivf`` and
-        ``quantized`` backends return their approximate results, exactly as
-        the queued request path would.
+        ``k``/``tenant``/``filter`` apply to the whole batch (the
+        per-request variants ride `SearchRequest` through ``submit``).
+        With the default ``flat`` backend and no filter, results are
+        identical to calling ``progressive_search`` directly on the live
+        corpus (padding queries are per-query-independent and sliced off);
+        the ``ivf`` and ``quantized`` backends return their approximate
+        results, exactly as the queued request path would.
         """
         q = np.asarray(queries, np.float32)
         if q.ndim == 1:
@@ -629,11 +761,16 @@ class RetrievalEngine:
             raise ValueError(
                 f"query dim {q.shape[1]} != corpus dim {self.store.d_emb}"
             )
+        out_k = self.out_k if k is None else int(k)
+        if not 1 <= out_k <= self.out_k:
+            raise ValueError(f"k={k} outside [1, {self.out_k}]")
+        mask_key = self.store.compile_mask(tenant, filter)
         if q.shape[0] == 0:
-            k = self.out_k
-            return (np.zeros((0, k), np.float32), np.zeros((0, k), np.int32))
+            return (np.zeros((0, out_k), np.float32),
+                    np.zeros((0, out_k), np.int32))
         with self.lock:
             self._maybe_rebuild_locked()          # safe point: whole batch
+            mask = self.store.mask_for_key(mask_key)
             # Overlap: issue every chunk's dispatch before syncing any of
             # them — XLA executes them back-to-back while the host keeps
             # padding and enqueueing (only step() needs a per-batch sync,
@@ -643,32 +780,42 @@ class RetrievalEngine:
             for bucket in self.policy.plan(q.shape[0]):
                 take = min(bucket, q.shape[0] - off)
                 s, i, _ = self._dispatch_async(
-                    pad_batch(q[off:off + take], bucket))
+                    pad_batch(q[off:off + take], bucket), mask=mask)
                 pend.append((s, i, take))
                 off += take
             jax.block_until_ready([p[0] for p in pend])
-        out_s = [np.asarray(s)[:take] for s, _, take in pend]
-        out_i = [np.asarray(i)[:take] for _, i, take in pend]
+        out_s = [np.asarray(s)[:take, :out_k] for s, _, take in pend]
+        out_i = [np.asarray(i)[:take, :out_k] for _, i, take in pend]
         return np.concatenate(out_s), np.concatenate(out_i)
 
-    def _dispatch_async(self, q_pad: np.ndarray):
+    def _dispatch_async(self, q_pad: np.ndarray, mask=None):
         """Hand one padded bucket to the backend; returns device arrays
-        without forcing a sync (the caller decides when to block)."""
+        without forcing a sync (the caller decides when to block).
+
+        ``mask`` is a compiled (capacity,) tenant/metadata bitmask — it is
+        AND-ed into the store's validity mask here, and that single AND is
+        the entire filtered-search integration: every backend already
+        treats a cleared validity bit as "unreturnable", so no backend
+        grows any filter code (and the traced program is byte-identical —
+        the mask is data, not shape).
+        """
         store = self.store
         state = self._ensure_index()
         shape_key = (q_pad.shape[0], store.capacity, state.shape_key)
         compiled = shape_key not in self._seen_shapes
         self._seen_shapes.add(shape_key)
+        valid = (store.valid if mask is None
+                 else jnp.logical_and(store.valid, mask))
         s, i = self.backend.search(
-            jnp.asarray(q_pad), state, store.db, store.valid,
+            jnp.asarray(q_pad), state, store.db, valid,
             sq_prefix=store.sq_prefix,
             n_total=store.size,
             k=self.out_k,
         )
         return s, i, compiled
 
-    def _dispatch(self, q_pad: np.ndarray):
-        s, i, compiled = self._dispatch_async(q_pad)
+    def _dispatch(self, q_pad: np.ndarray, mask=None):
+        s, i, compiled = self._dispatch_async(q_pad, mask=mask)
         jax.block_until_ready((s, i))
         return np.asarray(s), np.asarray(i), compiled
 

@@ -17,11 +17,23 @@ The one exception is ``compact()``: when the dead fraction is high the engine
 rebuilds the buffers without tombstoned rows, which *remaps* every live id
 (the returned old->new map lets callers follow; the engine fires its
 ``on_remap`` callbacks with it).
+
+**Tenants + metadata (PR 6).**  Each row optionally carries a tenant
+namespace and a flat metadata dict, stored host-side in columnar form
+alongside the device buffers: an int32 tenant-id column plus one object
+column per metadata field.  ``compile_mask`` compiles a (tenant, filter)
+request constraint into a (capacity,) device bool mask — the search path
+ANDs it with the validity mask and nothing else changes: one mask AND, zero
+new search code in any backend.  Compiled masks are cached by their
+canonical key and invalidated by ``mask_epoch`` (bumped on append / growth /
+compaction — deletes don't invalidate, the validity AND already hides dead
+rows).
 """
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,9 +41,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.index import prefix_squared_norms
+from repro.engine.request import FilterError, canonical_filter
 from repro.index_backends.base import StoreStats
 
 Array = jax.Array
+
+# Rows added without a tenant land in this namespace id.
+NO_TENANT = -1
 
 
 class DocStore:
@@ -70,6 +86,19 @@ class DocStore:
         self.generation = 0    # bumped on every mutation
         self.total_added = 0   # lifetime appends (monotonic across compaction)
         self.total_deleted = 0  # lifetime tombstones (monotonic)
+        # -- tenancy + metadata (host-side, columnar) -----------------------
+        self._tenant_col = np.full((self.capacity,), NO_TENANT, np.int32)
+        self._tenant_ids: Dict[str, int] = {}       # name -> dense id
+        self._tenant_names: List[str] = []          # dense id -> name
+        self._tenant_active: Dict[str, int] = {}    # name -> live rows
+        self._meta_cols: Dict[str, np.ndarray] = {}  # field -> (capacity,) obj
+        # mask cache: canonical (tenant, filter) key -> (epoch, device mask).
+        # mask_epoch tracks row-set/shape changes only (append/grow/compact);
+        # tombstones are handled by the validity AND at dispatch.
+        self.mask_epoch = 0
+        self._mask_cache: "OrderedDict[Tuple, Tuple[int, Array]]" = (
+            OrderedDict())
+        self._mask_cache_cap = 256
 
     # -- views the search path consumes ------------------------------------
     @property
@@ -104,17 +133,30 @@ class DocStore:
         self._db = jnp.pad(self._db, ((0, extra), (0, 0)))
         self._sq = jnp.pad(self._sq, ((0, extra), (0, 0)))
         self._valid = jnp.pad(self._valid, (0, extra))
+        self._tenant_col = np.concatenate(
+            [self._tenant_col, np.full((extra,), NO_TENANT, np.int32)])
+        for field, col in self._meta_cols.items():
+            self._meta_cols[field] = np.concatenate(
+                [col, np.full((extra,), None, object)])
         self.capacity = new_capacity
         self.n_grows += 1
 
-    def add(self, vectors) -> np.ndarray:
-        """Append rows; returns their (stable) int64 doc ids."""
+    def add(self, vectors, *, tenant: Optional[str] = None,
+            metadata=None) -> np.ndarray:
+        """Append rows; returns their (stable) int64 doc ids.
+
+        ``tenant`` namespaces the new rows (None = the tenantless pool);
+        ``metadata`` is one flat dict applied to every row, or a sequence of
+        per-row dicts.  Values must be str/int/float/bool/None — the same
+        scalar universe the filter spec accepts.
+        """
         vectors = jnp.asarray(vectors, self._db.dtype)
         if vectors.ndim == 1:
             vectors = vectors[None, :]
         b, d = vectors.shape
         if d != self.d_emb:
             raise ValueError(f"got dim {d}, store holds dim {self.d_emb}")
+        metadata = self._check_metadata(metadata, b)
         new_cap = self.capacity
         while self.size + b > new_cap:
             new_cap *= 2
@@ -129,10 +171,20 @@ class DocStore:
         self._valid = jax.lax.dynamic_update_slice(
             self._valid, jnp.ones((b,), bool), (start,)
         )
+        tid = self.tenant_id(tenant, create=True)
+        self._tenant_col[start:start + b] = tid
+        if tenant is not None:
+            self._tenant_active[tenant] = (
+                self._tenant_active.get(tenant, 0) + b)
+        if metadata is not None:
+            for j, row_meta in enumerate(metadata):
+                for field, value in row_meta.items():
+                    self._meta_col(field)[start + j] = value
         self.size += b
         self.n_active += b
         self.total_added += b
         self.generation += 1
+        self.mask_epoch += 1
         return np.arange(start, start + b, dtype=np.int64)
 
     def delete(self, ids) -> int:
@@ -146,8 +198,14 @@ class DocStore:
                 f"[{ids.min()}, {ids.max()}]"
             )
         dev_ids = jnp.asarray(ids)
-        n_live = int(self._valid[dev_ids].sum())
+        was_live = np.asarray(self._valid[dev_ids])
+        n_live = int(was_live.sum())
         self._valid = self._valid.at[dev_ids].set(False)
+        for tid, cnt in zip(*np.unique(
+                self._tenant_col[ids[was_live]], return_counts=True)):
+            if tid != NO_TENANT:
+                name = self._tenant_names[tid]
+                self._tenant_active[name] -= int(cnt)
         self.n_active -= n_live
         self.total_deleted += n_live
         self.generation += 1
@@ -181,14 +239,179 @@ class DocStore:
         self._db = jnp.pad(self._db[gather], ((0, pad), (0, 0)))
         self._sq = jnp.pad(self._sq[gather], ((0, pad), (0, 0)))
         self._valid = jnp.pad(jnp.ones((n_live,), bool), (0, pad))
+        tenants = np.full((new_cap,), NO_TENANT, np.int32)
+        tenants[:n_live] = self._tenant_col[live]
+        self._tenant_col = tenants
+        for field, col in self._meta_cols.items():
+            packed = np.full((new_cap,), None, object)
+            packed[:n_live] = col[live]
+            self._meta_cols[field] = packed
         self.capacity = new_cap
         self.size = n_live
         self.n_active = n_live
         self.n_compactions += 1
         self.generation += 1
+        self.mask_epoch += 1
         return id_map
 
     def is_live(self, doc_id: int) -> bool:
         if not 0 <= doc_id < self.size:
             return False
         return bool(self._valid[doc_id])
+
+    # -- tenancy + metadata --------------------------------------------------
+    @staticmethod
+    def _check_metadata(metadata, batch: int):
+        """Normalize add()'s metadata arg to a per-row list of dicts."""
+        if metadata is None:
+            return None
+        if isinstance(metadata, dict):
+            metadata = [metadata] * batch
+        metadata = list(metadata)
+        if len(metadata) != batch:
+            raise ValueError(
+                f"metadata holds {len(metadata)} rows for {batch} vectors")
+        for row_meta in metadata:
+            if row_meta is None:
+                continue
+            if not isinstance(row_meta, dict):
+                raise FilterError(
+                    f"metadata rows must be dicts, got "
+                    f"{type(row_meta).__name__}")
+            for field, value in row_meta.items():
+                if not isinstance(field, str) or not field:
+                    raise FilterError(
+                        f"metadata field names must be non-empty strings, "
+                        f"got {field!r}")
+                if value is not None and not isinstance(
+                        value, (str, int, float, bool)):
+                    raise FilterError(
+                        f"metadata field {field!r}: values must be "
+                        f"str/int/float/bool/None, got "
+                        f"{type(value).__name__}")
+        return [m or {} for m in metadata]
+
+    def _meta_col(self, field: str) -> np.ndarray:
+        col = self._meta_cols.get(field)
+        if col is None:
+            col = np.full((self.capacity,), None, object)
+            self._meta_cols[field] = col
+        return col
+
+    def tenant_id(self, tenant: Optional[str], *,
+                  create: bool = False) -> int:
+        """Dense id for a tenant name (NO_TENANT for None; -2 for a name
+        that was never used and ``create=False`` — matches no row)."""
+        if tenant is None:
+            return NO_TENANT
+        tid = self._tenant_ids.get(tenant)
+        if tid is None:
+            if not create:
+                return -2
+            tid = len(self._tenant_names)
+            self._tenant_ids[tenant] = tid
+            self._tenant_names.append(tenant)
+        return tid
+
+    def tenant_of(self, doc_id: int) -> Optional[str]:
+        """Tenant name of one row (None for the tenantless pool)."""
+        if not 0 <= doc_id < self.size:
+            raise IndexError(f"doc id {doc_id} out of range [0, {self.size})")
+        tid = int(self._tenant_col[doc_id])
+        return None if tid == NO_TENANT else self._tenant_names[tid]
+
+    def tenant_doc_count(self, tenant: str) -> int:
+        """Live rows currently held by ``tenant`` (quota accounting)."""
+        return self._tenant_active.get(tenant, 0)
+
+    def tenants(self) -> Dict[str, int]:
+        """Snapshot of {tenant: live rows} for every tenant ever seen."""
+        return dict(self._tenant_active)
+
+    def metadata_of(self, doc_id: int) -> Dict:
+        """The metadata fields set on one row (empty dict when none)."""
+        if not 0 <= doc_id < self.size:
+            raise IndexError(f"doc id {doc_id} out of range [0, {self.size})")
+        out = {}
+        for field, col in self._meta_cols.items():
+            if col[doc_id] is not None:
+                out[field] = col[doc_id]
+        return out
+
+    # -- filter-mask compiler ------------------------------------------------
+    def compile_mask(self, tenant: Optional[str] = None,
+                     filt=None) -> Optional[Tuple]:
+        """Validate a (tenant, filter) constraint; returns its mask key.
+
+        The key is hashable — batch formation groups requests by it — and
+        ``mask_for_key`` turns it into the (capacity,) device bool mask at
+        dispatch time.  None means "no constraint" (nothing is compiled and
+        the dispatch skips the AND entirely).
+        """
+        canon = canonical_filter(filt)
+        if tenant is None and canon is None:
+            return None
+        return (tenant, canon)
+
+    def mask_for_key(self, key: Optional[Tuple]) -> Optional[Array]:
+        """(capacity,) device bool mask for a ``compile_mask`` key.
+
+        Cached per key and recompiled when ``mask_epoch`` moved (rows were
+        appended, buffers grew, or a compaction reshuffled them) — so a mask
+        compiled at submit time can never be stale or mis-shaped by the time
+        its batch dispatches.  Tombstones don't invalidate: the dispatch
+        ANDs the live validity mask on top.
+        """
+        if key is None:
+            return None
+        hit = self._mask_cache.get(key)
+        if hit is not None and hit[0] == self.mask_epoch:
+            self._mask_cache.move_to_end(key)
+            return hit[1]
+        tenant, canon = key
+        mask = np.ones((self.size,), bool)
+        if tenant is not None:
+            mask &= self._tenant_col[:self.size] == self.tenant_id(tenant)
+        if canon is not None:
+            for field, ops in canon:
+                col = self._meta_cols.get(field)
+                for op, value in ops:
+                    mask &= self._field_mask(col, op, value)
+        dev = jnp.asarray(np.pad(mask, (0, self.capacity - self.size)))
+        self._mask_cache[key] = (self.mask_epoch, dev)
+        self._mask_cache.move_to_end(key)
+        while len(self._mask_cache) > self._mask_cache_cap:
+            self._mask_cache.popitem(last=False)
+        return dev
+
+    def _field_mask(self, col: Optional[np.ndarray], op: str,
+                    value) -> np.ndarray:
+        """(size,) bool mask for one (field op value) term.
+
+        Missing-field semantics follow MongoDB: a row without the field
+        matches ``$ne`` / ``$nin`` / ``$exists: False`` and nothing else.
+        """
+        n = self.size
+        if col is None:                      # field never set on any row
+            if op in ("$ne", "$nin"):
+                return np.ones((n,), bool)
+            if op == "$exists":
+                return np.full((n,), not value)
+            return np.zeros((n,), bool)
+        vals = col[:n]
+        present = np.array([v is not None for v in vals], bool)
+        if op == "$exists":
+            return present if value else ~present
+        if op in ("$eq", "$ne"):
+            eq = np.array([v is not None and v == value for v in vals], bool)
+            return eq if op == "$eq" else ~eq
+        if op in ("$in", "$nin"):
+            allowed = set(value)
+            isin = np.array(
+                [v is not None and v in allowed for v in vals], bool)
+            return isin if op == "$in" else ~isin
+        cmp = {"$gt": lambda v: v > value, "$gte": lambda v: v >= value,
+               "$lt": lambda v: v < value, "$lte": lambda v: v <= value}[op]
+        return np.array(
+            [v is not None and not isinstance(v, (str, bool)) and cmp(v)
+             for v in vals], bool)

@@ -1,24 +1,43 @@
-"""Serving launcher: RAG pipeline over a synthetic corpus, driven by the
-async engine driver under multi-threaded client traffic.
+"""Serving launcher: closed-loop RAG demo, HTTP server mode, or HTTP client.
 
-``--clients N`` spawns N open-loop client threads that submit single
-requests through the driver (optionally rate-paced with ``--qps``); the
-driver's background thread coalesces them into shape-bucketed batches with a
-deadline flush (``--max-wait-ms`` is the latency/throughput knob: 0 flushes
-on arrival, larger values hold partial batches back for companions).  The
-launcher reports retrieval QPS, the engine's per-request latency percentiles
-(queue + compute split, compile events excluded by warmup), the driver's
-flush-reason counters, and end-to-end decode latency.
+Three modes sharing one engine flag surface (``EngineConfig.add_flags``):
 
-    PYTHONPATH=src python -m repro.launch.serve --requests 64 --batch 8 \
-        --clients 8 --max-wait-ms 2
+* default (closed loop) — RAG pipeline over a synthetic corpus, driven by
+  the async engine driver under multi-threaded client traffic.
+  ``--clients N`` spawns N open-loop client threads that submit single
+  requests through the driver (optionally rate-paced with ``--qps``); the
+  driver's background thread coalesces them into shape-bucketed batches
+  with a deadline flush (``--max-wait-ms`` is the latency/throughput knob).
+
+      PYTHONPATH=src python -m repro.launch.serve --requests 64 --batch 8 \
+          --clients 8 --max-wait-ms 2
+
+* ``--serve-http`` — boot the `repro.serve` HTTP front-end over a fresh
+  engine (empty corpus; clients add docs over the wire) and serve until
+  interrupted.  Tenancy is on by default (``--allow-anonymous`` turns the
+  tenant requirement off); ``--max-inflight`` / ``--max-docs-per-tenant``
+  set the admission quotas.
+
+      PYTHONPATH=src python -m repro.launch.serve --serve-http --port 8080 \
+          --backend ivf --d-emb 128
+
+* ``--connect URL`` — open-loop HTTP client against a running server:
+  seeds ``--docs`` random documents under ``--tenant``, then drives
+  ``--requests`` searches from ``--clients`` threads and reports QPS and
+  latency percentiles.
+
+      PYTHONPATH=src python -m repro.launch.serve \
+          --connect http://127.0.0.1:8080 --requests 256 --clients 8
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import threading
 import time
+import urllib.error
+import urllib.request
 
 import numpy as np
 
@@ -26,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LMConfig
+from repro.engine import EngineConfig, EngineDriver, RetrievalEngine
 from repro.models import lm as LM
 from repro.rag import RAGPipeline
 from repro.rag.pipeline import mean_pool_embedder
@@ -77,43 +97,105 @@ def run_clients(driver, qvecs, n_clients: int, qps: float,
     return results, wall
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--docs", type=int, default=2000)
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=8,
-                    help="LM decode batch (retrieval batches via --buckets)")
-    ap.add_argument("--buckets", type=str, default="1,2,4,8,16,32",
-                    help="comma-separated static retrieval batch sizes")
-    ap.add_argument("--backend", type=str, default="flat",
-                    choices=("flat", "ivf", "quantized"),
-                    help="index backend behind the retrieval engine")
-    ap.add_argument("--use-kernel", type=str, default="auto",
-                    choices=("auto", "true", "false"),
-                    help="ivf/quantized-pq: fused Pallas stage-0 kernel "
-                         "(auto = TPU only; true forces interpret mode on "
-                         "CPU)")
-    ap.add_argument("--stage0-dtype", type=str, default="float32",
-                    choices=("float32", "int8", "pq"),
-                    help="ivf only: member-slab dtype for the fused kernel "
-                         "(pq = ADC lookup-table scan over PQ codes)")
-    ap.add_argument("--codec", type=str, default="int8",
-                    choices=("int8", "pq"),
-                    help="quantized only: stage-0 code block codec")
-    ap.add_argument("--pq-m", type=int, default=0,
-                    help="PQ subspaces per row (0 = auto, aim 8-dim "
-                         "subspaces); must divide the stage-0 dim")
-    ap.add_argument("--clients", type=int, default=4,
-                    help="concurrent open-loop client threads")
-    ap.add_argument("--max-wait-ms", type=float, default=2.0,
-                    help="driver deadline: max wait for batch companions")
-    ap.add_argument("--qps", type=float, default=0.0,
-                    help="aggregate open-loop submit rate (0 = full speed)")
-    ap.add_argument("--max-queue", type=int, default=1024,
-                    help="driver pending-queue bound (backpressure)")
-    ap.add_argument("--new-tokens", type=int, default=8)
-    args = ap.parse_args()
+def http_json(url: str, path: str, body=None, method: str = "GET",
+              timeout: float = 60.0):
+    """One JSON round trip; returns (status, payload)."""
+    data = None if body is None else json.dumps(body).encode()
+    req = urllib.request.Request(
+        url.rstrip("/") + path, data=data,
+        method=method if body is None else "POST",
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
 
+
+def serve_http(args) -> None:
+    """Boot the HTTP front-end over a fresh engine and block until ^C."""
+    from repro.serve import TenantQuotas, serve_in_thread
+
+    config = EngineConfig.from_flags(args, d_emb=args.d_emb,
+                                     capacity=max(args.docs, 1024))
+    engine = RetrievalEngine(config=config)
+    driver = EngineDriver(engine, max_wait_ms=args.max_wait_ms,
+                          max_queue=args.max_queue).start()
+    quotas = TenantQuotas(
+        max_inflight=args.max_inflight if args.max_inflight > 0 else None,
+        max_docs=(args.max_docs_per_tenant
+                  if args.max_docs_per_tenant > 0 else None))
+    handle = serve_in_thread(
+        engine, driver, quotas=quotas,
+        require_tenant=not args.allow_anonymous,
+        host=args.host, port=args.port)
+    print(f"[engine] {engine.describe()}")
+    print(f"[driver] {driver.describe()}")
+    print(f"[http]   serving on {handle.url} "
+          f"(tenancy {'optional' if args.allow_anonymous else 'required'})")
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        print("\n[http]   shutting down")
+    finally:
+        handle.stop()
+        driver.stop()
+
+
+def connect_client(args) -> None:
+    """Open-loop HTTP client: seed docs, then drive concurrent searches."""
+    url = args.connect
+    status, health = http_json(url, "/healthz")
+    if status != 200:
+        raise SystemExit(f"server unhealthy: {status} {health}")
+    rng = np.random.default_rng(0)
+    d = args.d_emb
+    if args.docs:
+        docs = rng.standard_normal((args.docs, d)).astype(np.float32)
+        status, added = http_json(url, "/v1/docs", {
+            "vectors": docs.tolist(), "tenant": args.tenant})
+        if status != 200:
+            raise SystemExit(f"seed add failed: {status} {added}")
+        print(f"[seed]   {added['n_added']} docs under {args.tenant!r}")
+    queries = rng.standard_normal((args.requests, d)).astype(np.float32)
+    lat = [None] * args.requests
+    codes = [0] * args.requests
+    shards = np.array_split(np.arange(args.requests),
+                            max(1, min(args.clients, args.requests)))
+    barrier = threading.Barrier(len([s for s in shards if len(s)]) + 1)
+
+    def client(shard):
+        barrier.wait()
+        for i in shard:
+            t0 = time.perf_counter()
+            codes[i], _ = http_json(url, "/v1/search", {
+                "query": queries[i].tolist(), "tenant": args.tenant,
+                "k": args.final_k})
+            lat[i] = time.perf_counter() - t0
+
+    threads = [threading.Thread(target=client, args=(s,), daemon=True)
+               for s in shards if len(s)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    lat_ms = np.asarray([x for x in lat if x is not None]) * 1e3
+    n_ok = sum(1 for c in codes if c == 200)
+    print(f"[client] {args.requests} requests, {len(threads)} threads: "
+          f"qps={args.requests / wall:.1f} "
+          f"p50={np.percentile(lat_ms, 50):.1f}ms "
+          f"p95={np.percentile(lat_ms, 95):.1f}ms "
+          f"ok={n_ok}/{args.requests}")
+    if n_ok != args.requests:
+        raise SystemExit(1)
+
+
+def closed_loop(args) -> None:
+    """The original demo: RAG pipeline + driver under threaded clients."""
     cfg = LMConfig(name="serve-lm", n_layers=4, d_model=128, n_heads=8,
                    n_kv_heads=4, d_head=16, d_ff=256, vocab=2048,
                    param_dtype="float32", compute_dtype="float32",
@@ -124,24 +206,12 @@ def main():
                              jnp.int32)
     embed = mean_pool_embedder(params, cfg)
     db = embed(doc_tokens)
-    buckets = tuple(int(x) for x in args.buckets.split(","))
-    backend_opts = None
-    use_kernel = {"auto": "auto", "true": True,
-                  "false": False}[args.use_kernel]
-    if args.backend == "ivf":
-        backend_opts = {
-            "use_kernel": use_kernel,
-            "stage0_dtype": args.stage0_dtype,
-        }
-        if args.stage0_dtype == "pq" and args.pq_m:
-            backend_opts["pq_m"] = args.pq_m
-    elif args.backend == "quantized":
-        backend_opts = {"codec": args.codec, "use_kernel": use_kernel}
-        if args.codec == "pq" and args.pq_m:
-            backend_opts["pq_m"] = args.pq_m
-    pipe = RAGPipeline(params, cfg, db, doc_tokens, d_start=16, k0=32,
-                       buckets=buckets, backend=args.backend,
-                       backend_opts=backend_opts)
+    econf = EngineConfig.from_flags(args, d_emb=int(db.shape[1]))
+    pipe = RAGPipeline(params, cfg, db, doc_tokens,
+                       d_start=econf.d_start, k0=econf.k0,
+                       buckets=econf.buckets,
+                       backend=econf.backend.name,
+                       backend_opts=econf.backend.opts() or None)
     engine = pipe.engine
     print(f"[engine]   {engine.describe()}")
 
@@ -166,7 +236,7 @@ def main():
     s = engine.stats.summary()
     ds = driver.stats.summary()
     print(f"[retrieve] {args.requests} requests, {n_clients} clients, "
-          f"max_wait={args.max_wait_ms:g}ms, buckets={buckets}: "
+          f"max_wait={args.max_wait_ms:g}ms, buckets={econf.buckets}: "
           f"qps={args.requests / wall:.1f} "
           f"p50={s['latency_ms_p50']:.1f}ms p95={s['latency_ms_p95']:.1f}ms "
           f"batches={s['n_batches']} padded={s['n_padded_slots']} "
@@ -187,6 +257,53 @@ def main():
     print(f"[decode]   batch={args.batch}: "
           f"p50={np.percentile(lat_ms, 50):.1f}ms "
           f"p95={np.percentile(lat_ms, 95):.1f}ms")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=2000)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="LM decode batch (retrieval batches via --buckets)")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent open-loop client threads")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="driver deadline: max wait for batch companions")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="aggregate open-loop submit rate (0 = full speed)")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="driver pending-queue bound (backpressure)")
+    ap.add_argument("--new-tokens", type=int, default=8)
+    # HTTP server mode
+    ap.add_argument("--serve-http", action="store_true",
+                    help="serve the repro.serve HTTP API instead of the "
+                         "closed-loop demo")
+    ap.add_argument("--host", type=str, default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--d-emb", type=int, default=128,
+                    help="embedding dim for --serve-http / --connect")
+    ap.add_argument("--allow-anonymous", action="store_true",
+                    help="accept tenantless requests (admin mode)")
+    ap.add_argument("--max-inflight", type=int, default=64,
+                    help="per-tenant concurrent-search cap (0 = unlimited)")
+    ap.add_argument("--max-docs-per-tenant", type=int, default=0,
+                    help="per-tenant live-document cap (0 = unlimited)")
+    # HTTP client mode
+    ap.add_argument("--connect", type=str, default="",
+                    help="drive a running HTTP server at this URL instead "
+                         "of serving locally")
+    ap.add_argument("--tenant", type=str, default="bench",
+                    help="--connect: tenant to seed and search under")
+    EngineConfig.add_flags(ap)
+    args = ap.parse_args()
+    if args.serve_http and args.connect:
+        raise SystemExit("--serve-http and --connect are mutually exclusive")
+    if args.serve_http:
+        serve_http(args)
+    elif args.connect:
+        connect_client(args)
+    else:
+        closed_loop(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""HTTP serving front-end: multi-tenant, metadata-filtered search over the
+engine driver.
+
+  RetrievalHTTPServer — stdlib asyncio HTTP/1.1 server (health, search,
+                        add/delete docs, stats) mapping the engine's error
+                        taxonomy onto status codes (429 backpressure,
+                        504 deadline, 400 bad filter, 403 cross-tenant)
+  serve_in_thread,
+  ServerHandle        — boot the server on its own event-loop thread;
+                        used by tests, the launcher, and the load bench
+  TenantQuotas,
+  QuotaExceeded       — per-tenant admission control (in-flight + doc
+                        caps) in front of the driver's bounded queue
+
+Tenancy and filtering live in the engine (`repro.engine.SearchRequest`,
+``DocStore`` tenant/metadata columns); this package only speaks HTTP.
+"""
+
+from repro.serve.http import (
+    RetrievalHTTPServer,
+    ServerHandle,
+    serve_in_thread,
+)
+from repro.serve.quota import QuotaExceeded, TenantQuotas
+
+__all__ = [
+    "QuotaExceeded", "RetrievalHTTPServer", "ServerHandle",
+    "TenantQuotas", "serve_in_thread",
+]

@@ -1,0 +1,432 @@
+"""Stdlib asyncio HTTP/1.1 front-end over the engine driver.
+
+One small server, zero new search code: every request path below ends in
+the primitives the engine already exposes.  Tenancy and metadata filters
+ride the ``SearchRequest`` mask-key path (the driver batches same-key
+requests together and the dispatch ANDs one bitmask into the validity
+mask); admission control is `repro.serve.quota.TenantQuotas` in front of
+the driver's bounded queue, so a tenant at its cap gets a fast 429 while
+the queue keeps serving everyone else.
+
+Endpoints (JSON in, JSON out):
+
+  GET  /healthz          liveness: 200 once the driver thread is running
+  GET  /v1/stats         engine + driver counters, tenants, config, quotas
+  POST /v1/search        {"query": [f32...], "k", "tenant", "filter",
+                          "deadline_ms"} -> {"ids", "scores", ...}
+  POST /v1/docs          {"vectors": [[f32...]...], "tenant", "metadata"}
+                          -> {"ids": [...]}
+  POST /v1/docs/delete   {"ids": [...], "tenant"} -> {"n_deleted": ...}
+
+Status mapping — the error taxonomy the engine grew for exactly this:
+
+  400  malformed JSON / bad filter spec (``FilterError``) / bad shapes
+  403  a tenant touching another tenant's documents
+  404  unknown path          405  wrong method          413  body too large
+  429  ``QuotaExceeded`` (per-tenant cap) or ``DriverQueueFull`` (global
+       backpressure) — retryable, with a Retry-After hint
+  503  driver stopped        504  ``DeadlineExceeded`` / result timeout
+
+``require_tenant=True`` (the default) refuses tenantless searches and
+mutations with 400: the tenantless pool is the embedded/admin view, not
+something to expose over a network socket.  Blocking driver calls run in
+the event loop's default executor so slow searches never stall the
+accept loop; ``serve_in_thread`` wraps the whole thing for tests, the
+launcher, and the load benchmark.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.engine import (
+    DeadlineExceeded,
+    DriverQueueFull,
+    DriverStopped,
+    EngineDriver,
+    FilterError,
+    RetrievalEngine,
+    SearchRequest,
+)
+from repro.serve.quota import QuotaExceeded, TenantQuotas
+
+_REASONS = {
+    200: "OK", 400: "Bad Request", 403: "Forbidden", 404: "Not Found",
+    405: "Method Not Allowed", 413: "Payload Too Large",
+    429: "Too Many Requests", 500: "Internal Server Error",
+    503: "Service Unavailable", 504: "Gateway Timeout",
+}
+
+
+class _HTTPError(Exception):
+    """Internal control flow: a handler's early exit with a status code."""
+
+    def __init__(self, status: int, message: str,
+                 headers: Optional[Dict[str, str]] = None):
+        super().__init__(message)
+        self.status = status
+        self.headers = headers or {}
+
+
+def _body_field(body: Dict, field: str) -> Any:
+    try:
+        return body[field]
+    except KeyError:
+        raise _HTTPError(400, f"missing required field {field!r}") from None
+
+
+class RetrievalHTTPServer:
+    """Asyncio HTTP server over one engine + driver pair.
+
+    Args:
+      engine:          the engine (used directly for corpus mutations and
+                       stats; its lock makes quota-check + add atomic).
+      driver:          the running driver that serves searches.
+      quotas:          per-tenant admission limits (default: a permissive
+                       ``TenantQuotas()`` — 64 in-flight, unlimited docs).
+      require_tenant:  refuse tenantless search/add/delete with 400
+                       (default True; turn off for single-tenant or admin
+                       deployments).
+      host/port:       bind address; port 0 picks a free port (read it
+                       back from ``server.port`` after ``start()``).
+      submit_timeout:  seconds a search waits for driver-queue space
+                       before 429 (small on purpose: shed, don't buffer).
+      result_timeout:  hard cap on one search round trip before 504.
+      max_body:        request-body byte limit (413 past it).
+    """
+
+    def __init__(
+        self,
+        engine: RetrievalEngine,
+        driver: EngineDriver,
+        *,
+        quotas: Optional[TenantQuotas] = None,
+        require_tenant: bool = True,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        submit_timeout: float = 0.05,
+        result_timeout: float = 60.0,
+        max_body: int = 64 << 20,
+    ):
+        self.engine = engine
+        self.driver = driver
+        self.quotas = quotas if quotas is not None else TenantQuotas()
+        self.require_tenant = bool(require_tenant)
+        self._host = host
+        self._port = int(port)
+        self.submit_timeout = float(submit_timeout)
+        self.result_timeout = float(result_timeout)
+        self.max_body = int(max_body)
+        self._server: Optional[asyncio.base_events.Server] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    async def start(self) -> None:
+        self._server = await asyncio.start_server(
+            self._handle_conn, self._host, self._port)
+        self._port = self._server.sockets[0].getsockname()[1]
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    @property
+    def host(self) -> str:
+        return self._host
+
+    @property
+    def port(self) -> int:
+        return self._port
+
+    @property
+    def url(self) -> str:
+        return f"http://{self._host}:{self._port}"
+
+    # -- connection handling -------------------------------------------------
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                request = await self._read_request(reader)
+                if request is None:
+                    break
+                method, path, body, keep_alive = request
+                status, payload, headers = await self._route(
+                    method, path, body)
+                await self._write_response(
+                    writer, status, payload, headers, keep_alive)
+                if not keep_alive:
+                    break
+        except (asyncio.IncompleteReadError, ConnectionResetError,
+                BrokenPipeError):
+            pass                               # client went away mid-request
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    async def _read_request(
+        self, reader: asyncio.StreamReader
+    ) -> Optional[Tuple[str, str, bytes, bool]]:
+        line = await reader.readline()
+        if not line:
+            return None
+        parts = line.decode("latin-1").strip().split()
+        if len(parts) != 3:
+            raise asyncio.IncompleteReadError(line, None)
+        method, path, version = parts
+        headers: Dict[str, str] = {}
+        while True:
+            raw = await reader.readline()
+            if raw in (b"\r\n", b"\n", b""):
+                break
+            name, _, value = raw.decode("latin-1").partition(":")
+            headers[name.strip().lower()] = value.strip()
+        length = int(headers.get("content-length", "0") or "0")
+        if length > self.max_body:
+            # don't read the body; the 413 response closes the connection
+            return method, path, b"__too_large__", False
+        body = await reader.readexactly(length) if length else b""
+        keep_alive = (headers.get(
+            "connection",
+            "keep-alive" if version == "HTTP/1.1" else "close",
+        ).lower() != "close")
+        return method, path, body, keep_alive
+
+    async def _write_response(self, writer: asyncio.StreamWriter,
+                              status: int, payload: Dict,
+                              headers: Dict[str, str],
+                              keep_alive: bool) -> None:
+        data = json.dumps(payload).encode()
+        head = [
+            f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}",
+            "Content-Type: application/json",
+            f"Content-Length: {len(data)}",
+            f"Connection: {'keep-alive' if keep_alive else 'close'}",
+        ]
+        head += [f"{k}: {v}" for k, v in headers.items()]
+        writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + data)
+        await writer.drain()
+
+    # -- routing -------------------------------------------------------------
+    async def _route(self, method: str, path: str,
+                     body: bytes) -> Tuple[int, Dict, Dict[str, str]]:
+        if body == b"__too_large__":
+            return 413, {"error": "request body exceeds "
+                                  f"{self.max_body} bytes"}, {}
+        path = path.split("?", 1)[0]
+        routes = {
+            ("GET", "/healthz"): self._do_health,
+            ("GET", "/v1/stats"): self._do_stats,
+            ("POST", "/v1/search"): self._do_search,
+            ("POST", "/v1/docs"): self._do_add,
+            ("POST", "/v1/docs/delete"): self._do_delete,
+        }
+        handler = routes.get((method, path))
+        if handler is None:
+            if any(p == path for (_, p) in routes):
+                return 405, {"error": f"{method} not allowed on {path}"}, {}
+            return 404, {"error": f"no route for {path}"}, {}
+        if method == "POST":
+            try:
+                parsed = json.loads(body.decode() or "null")
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                return 400, {"error": f"malformed JSON body: {e}"}, {}
+            if not isinstance(parsed, dict):
+                return 400, {"error": "request body must be a JSON "
+                                      "object"}, {}
+        else:
+            parsed = {}
+        loop = asyncio.get_event_loop()
+        try:
+            # handlers are blocking (driver futures, device work): run them
+            # on the default executor so the accept loop stays responsive
+            payload = await loop.run_in_executor(None, handler, parsed)
+            return 200, payload, {}
+        except _HTTPError as e:
+            return e.status, {"error": str(e)}, e.headers
+        except (FilterError, ValueError, IndexError, TypeError) as e:
+            return 400, {"error": str(e)}, {}
+        except QuotaExceeded as e:
+            return 429, {"error": str(e), "tenant": e.tenant,
+                         "limit": e.limit}, {"Retry-After": "1"}
+        except DriverQueueFull as e:
+            return 429, {"error": str(e),
+                         "limit": "queue"}, {"Retry-After": "1"}
+        except DriverStopped as e:
+            return 503, {"error": str(e)}, {}
+        except (DeadlineExceeded, TimeoutError) as e:
+            return 504, {"error": str(e)}, {}
+        except Exception as e:                 # pragma: no cover
+            return 500, {"error": f"{type(e).__name__}: {e}"}, {}
+
+    # -- handlers (run on executor threads; blocking is fine) ----------------
+    def _check_tenant(self, body: Dict) -> Optional[str]:
+        tenant = body.get("tenant")
+        if tenant is not None and not isinstance(tenant, str):
+            raise _HTTPError(400, "tenant must be a string")
+        if tenant is None and self.require_tenant:
+            raise _HTTPError(
+                400, "this server requires a tenant on every request "
+                     "(start it with require_tenant=False for the "
+                     "single-tenant/admin mode)")
+        return tenant
+
+    def _do_health(self, body: Dict) -> Dict:
+        if not self.driver.running:
+            raise _HTTPError(503, "engine driver is not running")
+        return {"status": "ok", "n_docs": self.engine.n_docs}
+
+    def _do_stats(self, body: Dict) -> Dict:
+        with self.engine.lock:
+            return {
+                "engine": self.engine.stats.summary(),
+                "driver": self.driver.stats.summary(),
+                "store": dataclasses.asdict(self.engine.store.stats()),
+                "tenants": self.engine.store.tenants(),
+                "quotas": self.quotas.snapshot(),
+                "config": self.engine.config.to_dict(),
+            }
+
+    def _do_search(self, body: Dict) -> Dict:
+        tenant = self._check_tenant(body)
+        query = np.asarray(_body_field(body, "query"), np.float32)
+        request = SearchRequest(
+            query=query,
+            k=body.get("k"),
+            tenant=tenant,
+            filter=body.get("filter"),
+            deadline_ms=body.get("deadline_ms"),
+        )
+        self.quotas.acquire(tenant)
+        try:
+            future = self.driver.submit(request,
+                                        timeout=self.submit_timeout)
+            result = future.result(self.result_timeout)
+        finally:
+            self.quotas.release(tenant)
+        live = result.doc_ids >= 0             # drop padded empty slots
+        return {
+            "ids": result.doc_ids[live].tolist(),
+            "scores": result.scores[live].astype(float).tolist(),
+            "request_id": result.request_id,
+            "store_generation": result.store_generation,
+            "latency_ms": result.stats.latency_ms,
+        }
+
+    def _do_add(self, body: Dict) -> Dict:
+        tenant = self._check_tenant(body)
+        vectors = np.asarray(_body_field(body, "vectors"), np.float32)
+        if vectors.ndim == 1:
+            vectors = vectors[None, :]
+        if vectors.ndim != 2:
+            raise _HTTPError(
+                400, f"vectors must be a (n, d) array, got shape "
+                     f"{vectors.shape}")
+        metadata = body.get("metadata")
+        with self.engine.lock:                 # quota check + add atomically
+            self.quotas.check_docs(
+                tenant,
+                self.engine.store.tenant_doc_count(tenant)
+                if tenant is not None else 0,
+                len(vectors))
+            ids = self.engine.add_docs(vectors, tenant=tenant,
+                                       metadata=metadata)
+        return {"ids": ids.tolist(), "n_added": len(ids)}
+
+    def _do_delete(self, body: Dict) -> Dict:
+        tenant = self._check_tenant(body)
+        ids = np.asarray(_body_field(body, "ids"), np.int64).reshape(-1)
+        with self.engine.lock:                 # ownership check + delete
+            store = self.engine.store
+            if tenant is not None:
+                for doc_id in ids.tolist():
+                    if not 0 <= doc_id < store.size:
+                        raise _HTTPError(
+                            400, f"doc id {doc_id} out of range")
+                    owner = store.tenant_of(doc_id)
+                    if store.is_live(doc_id) and owner != tenant:
+                        raise _HTTPError(
+                            403, f"doc {doc_id} does not belong to "
+                                 f"tenant {tenant!r}")
+            n_deleted = self.engine.delete_docs(ids)
+        return {"n_deleted": n_deleted}
+
+
+@dataclasses.dataclass
+class ServerHandle:
+    """A server running on its own event-loop thread (see
+    ``serve_in_thread``); ``stop()`` is idempotent and joins the thread."""
+
+    server: RetrievalHTTPServer
+    _loop: asyncio.AbstractEventLoop
+    _thread: threading.Thread
+
+    @property
+    def url(self) -> str:
+        return self.server.url
+
+    @property
+    def port(self) -> int:
+        return self.server.port
+
+    def stop(self, timeout: float = 10.0) -> None:
+        if self._thread.is_alive():
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            self._thread.join(timeout)
+            if self._thread.is_alive():        # pragma: no cover
+                raise TimeoutError("server thread did not stop")
+
+    def __enter__(self) -> "ServerHandle":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        return False
+
+
+def serve_in_thread(engine: RetrievalEngine, driver: EngineDriver,
+                    **kwargs) -> ServerHandle:
+    """Boot a ``RetrievalHTTPServer`` on a dedicated event-loop thread.
+
+    Returns once the socket is bound (``handle.url`` is ready to hit).
+    The caller keeps ownership of the driver's lifecycle — stopping the
+    handle closes the listener but leaves engine and driver running.
+    """
+    server = RetrievalHTTPServer(engine, driver, **kwargs)
+    started = threading.Event()
+    boot_error: list = []
+    loop = asyncio.new_event_loop()
+
+    def run() -> None:
+        asyncio.set_event_loop(loop)
+        try:
+            loop.run_until_complete(server.start())
+        except Exception as e:                 # pragma: no cover
+            boot_error.append(e)
+            started.set()
+            loop.close()
+            return
+        started.set()
+        try:
+            loop.run_forever()
+        finally:
+            loop.run_until_complete(server.stop())
+            loop.close()
+
+    thread = threading.Thread(target=run, name="retrieval-http",
+                              daemon=True)
+    thread.start()
+    started.wait()
+    if boot_error:                             # pragma: no cover
+        raise boot_error[0]
+    return ServerHandle(server, loop, thread)

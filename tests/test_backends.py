@@ -701,3 +701,76 @@ class TestDriverCompactionInterleave:
         for ids in polled:
             live = ids[ids >= 0]
             assert (live < eng.store.size).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestTenantIsolation:
+    """A search under tenant A never returns tenant B's (or the tenantless
+    pool's) docs.  The constraint is one bitmask AND in the dispatch path —
+    backend-independent by construction — so every variant must pass the
+    identical contract, including across deletes and compaction remaps."""
+
+    def test_search_scoped_to_own_tenant(self, backend):
+        eng, db = make_engine(backend)            # 200 tenantless docs
+        rng = np.random.default_rng(3)
+        a = rng.normal(size=(40, D)).astype(np.float32)
+        b = rng.normal(size=(40, D)).astype(np.float32)
+        ids_a = set(eng.add_docs(a, tenant="A").tolist())
+        ids_b = set(eng.add_docs(b, tenant="B").tolist())
+        # querying with B's own vectors under tenant A is the adversarial
+        # case: the nearest rows by geometry all belong to B
+        _, idx = eng.search(b[:8], tenant="A")
+        hit = set(int(i) for i in idx.ravel() if i >= 0)
+        assert hit and hit <= ids_a
+        assert not hit & ids_b
+        # exact self-retrieval still works inside the namespace
+        _, idx = eng.search(a[:8], tenant="A")
+        np.testing.assert_array_equal(idx[:, 0], sorted(ids_a)[:8])
+
+    def test_unknown_tenant_matches_nothing(self, backend):
+        eng, db = make_engine(backend)
+        scores, idx = eng.search(db[:4], tenant="never-added")
+        assert (idx == -1).all()
+        assert np.isinf(scores).all()
+
+    def test_metadata_filter_composes_with_tenant(self, backend):
+        eng, _ = make_engine(backend, n_docs=32)
+        rng = np.random.default_rng(4)
+        vecs = rng.normal(size=(30, D)).astype(np.float32)
+        meta = [{"shard": j % 3, "lang": "en" if j % 2 else "de"}
+                for j in range(30)]
+        eng.add_docs(vecs, tenant="A", metadata=meta)
+        eng.add_docs(vecs, tenant="B", metadata=meta)
+        _, idx = eng.search(vecs[:6], tenant="A",
+                            filter={"shard": {"$eq": 1}, "lang": "en"})
+        hit = [int(i) for i in idx.ravel() if i >= 0]
+        assert hit
+        for i in hit:
+            assert eng.store.tenant_of(i) == "A"
+            md = eng.store.metadata_of(i)
+            assert md["shard"] == 1 and md["lang"] == "en"
+
+    def test_isolation_survives_delete_and_compaction(self, backend):
+        eng, db = make_engine(backend, compact_dead_frac=0.3)
+        rng = np.random.default_rng(5)
+        a = rng.normal(size=(30, D)).astype(np.float32)
+        b = rng.normal(size=(30, D)).astype(np.float32)
+        ids_a = eng.add_docs(a, tenant="A")
+        eng.add_docs(b, tenant="B")
+        # kill most of the tenantless pool and half of A, then force the
+        # rebuild safe point — compaction remaps every surviving id
+        eng.delete_docs(np.arange(0, 180))
+        eng.delete_docs(ids_a[:15])
+        eng.maybe_rebuild(force=True)
+        assert eng.stats.n_compactions >= 1
+        _, idx = eng.search(np.concatenate([a[15:19], b[:4]]), tenant="A")
+        hit = [int(i) for i in idx.ravel() if i >= 0]
+        assert hit
+        for i in hit:
+            assert eng.store.tenant_of(i) == "A"
+        # the deleted half of A stays gone: its vectors no longer
+        # self-retrieve exactly
+        _, idx = eng.search(a[:4], tenant="A")
+        for i in idx.ravel():
+            if i >= 0:
+                assert eng.store.tenant_of(int(i)) == "A"

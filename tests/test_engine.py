@@ -139,7 +139,9 @@ class TestEngineParity:
         assert done == 7 and eng.n_pending == 0
         got = np.stack([eng.poll(r).doc_ids for r in rids])
         np.testing.assert_array_equal(got, direct)
-        assert eng.poll(rids[0]) is None       # results pop once
+        from repro.engine import ResultEvicted
+        with pytest.raises(ResultEvicted):     # results pop once; a second
+            eng.poll(rids[0])                  # poll is "gone", not "wait"
 
     def test_each_bucket_shape_compiles_once(self):
         eng, db = make_engine()

@@ -324,3 +324,60 @@ def test_attention_rows_are_convex_combinations(seed, causal):
                                  jnp.asarray(v), causal=causal)
     o = np.asarray(o)
     assert (o >= -1e-5).all() and (o <= 1 + 1e-5).all()
+
+
+# -- tenant isolation under random mutation ---------------------------------
+# One engine shared across examples (module fixture): hypothesis drives
+# random interleavings of tenant-tagged adds, deletes, forced rebuilds
+# (compaction remaps), and searches against it.  The invariant is checked
+# against the live store on every search, so accumulated state across
+# examples only makes the workload more adversarial, never stale.
+
+@pytest.fixture(scope="module")
+def iso_engine():
+    from repro.engine import RetrievalEngine
+
+    eng = RetrievalEngine(16, d_start=8, k0=8, final_k=4, buckets=(2,),
+                          capacity=64, block_n=32, compact_dead_frac=0.5)
+    eng.add_docs(np.random.default_rng(0).normal(
+        size=(20, 16)).astype(np.float32))        # tenantless pool
+    return eng
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_tenant_isolation_under_random_mutation(iso_engine, data):
+    """A search constrained to tenant T returns only rows whose live owner
+    is T (and whose metadata matches the filter), no matter what sequence
+    of adds/deletes/compactions preceded it."""
+    eng = iso_engine
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31 - 1)))
+    for _ in range(data.draw(st.integers(1, 6))):
+        op = data.draw(st.sampled_from(
+            ("add", "add", "delete", "rebuild", "search", "search")))
+        if op == "add":
+            tenant = data.draw(st.sampled_from((None, "A", "B")))
+            n = data.draw(st.integers(1, 3))
+            eng.add_docs(
+                rng.normal(size=(n, 16)).astype(np.float32),
+                tenant=tenant,
+                metadata=[{"g": int(rng.integers(3))} for _ in range(n)])
+        elif op == "delete":
+            live = [i for i in range(eng.store.size) if eng.store.is_live(i)]
+            if len(live) > 8:                     # keep the corpus non-empty
+                eng.delete_docs(rng.choice(live, 2, replace=False))
+        elif op == "rebuild":
+            eng.maybe_rebuild(force=True)         # compacts past dead-frac
+        else:
+            tenant = data.draw(st.sampled_from(("A", "B", "ghost")))
+            filt = (None if data.draw(st.booleans())
+                    else {"g": {"$eq": data.draw(st.integers(0, 2))}})
+            _, idx = eng.search(rng.normal(size=(2, 16)).astype(np.float32),
+                                tenant=tenant, filter=filt)
+            for i in idx.ravel():
+                if i < 0:
+                    continue
+                assert eng.store.tenant_of(int(i)) == tenant
+                if filt is not None:
+                    got = eng.store.metadata_of(int(i)).get("g")
+                    assert got == filt["g"]["$eq"]

@@ -1,0 +1,314 @@
+"""HTTP serving front-end: end-to-end tests over a live socket — routing,
+status mapping, tenancy enforcement, metadata filters, quotas, deadlines,
+and the stats surface."""
+
+import http.client
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.engine import EngineDriver, RetrievalEngine
+from repro.serve import QuotaExceeded, TenantQuotas, serve_in_thread
+
+D = 32
+RNG = np.random.default_rng(21)
+
+
+def request(url, path, body=None, method=None):
+    """One JSON round trip; returns (status, payload)."""
+    data = None if body is None else json.dumps(body).encode()
+    req = urllib.request.Request(
+        url + path, data=data,
+        method=method or ("POST" if body is not None else "GET"))
+    try:
+        with urllib.request.urlopen(req, timeout=30) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One engine + driver + HTTP server shared by the module; tests keep
+    to their own tenant namespaces so they don't interfere."""
+    eng = RetrievalEngine(D, d_start=8, k0=16, final_k=4, buckets=(1, 2, 4),
+                          capacity=64, block_n=64)
+    quotas = TenantQuotas(
+        max_inflight=64,
+        overrides={"throttled": {"max_inflight": 1},
+                   "capped": {"max_docs": 3}})
+    with EngineDriver(eng, max_wait_ms=1.0) as driver:
+        handle = serve_in_thread(eng, driver, quotas=quotas)
+        try:
+            yield handle.url, eng, quotas
+        finally:
+            handle.stop()
+
+
+def seed(url, tenant, n=12, metadata=None):
+    vecs = RNG.normal(size=(n, D)).astype(np.float32)
+    status, payload = request(url, "/v1/docs", {
+        "vectors": vecs.tolist(), "tenant": tenant, "metadata": metadata})
+    assert status == 200, payload
+    return vecs, payload["ids"]
+
+
+class TestRouting:
+    def test_health(self, served):
+        url, _, _ = served
+        status, payload = request(url, "/healthz")
+        assert status == 200 and payload["status"] == "ok"
+
+    def test_unknown_path_404(self, served):
+        url, _, _ = served
+        status, _ = request(url, "/v2/nope")
+        assert status == 404
+
+    def test_wrong_method_405(self, served):
+        url, _, _ = served
+        status, _ = request(url, "/v1/search")          # GET on a POST route
+        assert status == 405
+
+    def test_malformed_json_400(self, served):
+        url, _, _ = served
+        req = urllib.request.Request(url + "/v1/search", data=b"{oops",
+                                     method="POST")
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(req, timeout=10)
+        assert e.value.code == 400
+
+    def test_non_object_body_400(self, served):
+        url, _, _ = served
+        status, _ = request(url, "/v1/search", body=[1, 2, 3])
+        assert status == 400
+
+    def test_keep_alive_two_requests_one_connection(self, served):
+        url, _, _ = served
+        host, port = url.removeprefix("http://").split(":")
+        conn = http.client.HTTPConnection(host, int(port), timeout=30)
+        try:
+            for _ in range(2):
+                conn.request("GET", "/healthz")
+                resp = conn.getresponse()
+                assert resp.status == 200
+                resp.read()
+        finally:
+            conn.close()
+
+
+class TestSearch:
+    def test_self_retrieval_with_per_request_k(self, served):
+        url, _, _ = served
+        vecs, ids = seed(url, "srch")
+        status, payload = request(url, "/v1/search", {
+            "query": vecs[3].tolist(), "tenant": "srch", "k": 2})
+        assert status == 200, payload
+        assert payload["ids"][0] == ids[3]
+        assert len(payload["ids"]) <= 2
+        assert len(payload["scores"]) == len(payload["ids"])
+
+    def test_tenant_required_400(self, served):
+        url, _, _ = served
+        status, payload = request(url, "/v1/search", {
+            "query": [0.0] * D})
+        assert status == 400 and "tenant" in payload["error"]
+
+    def test_tenant_isolation_over_http(self, served):
+        url, _, _ = served
+        vecs_a, ids_a = seed(url, "iso-a")
+        _, ids_b = seed(url, "iso-b")
+        status, payload = request(url, "/v1/search", {
+            "query": vecs_a[0].tolist(), "tenant": "iso-b"})
+        assert status == 200
+        assert not set(payload["ids"]) & set(ids_a)
+        assert set(payload["ids"]) <= set(ids_b)
+
+    def test_metadata_filter(self, served):
+        url, eng, _ = served
+        meta = [{"shard": j % 2} for j in range(12)]
+        vecs, ids = seed(url, "filt", metadata=meta)
+        status, payload = request(url, "/v1/search", {
+            "query": vecs[0].tolist(), "tenant": "filt",
+            "filter": {"shard": {"$eq": 1}}})
+        assert status == 200 and payload["ids"]
+        for i in payload["ids"]:
+            assert eng.store.metadata_of(i) == {"shard": 1}
+
+    def test_bad_filter_400(self, served):
+        url, _, _ = served
+        seed(url, "badf", n=2)
+        status, payload = request(url, "/v1/search", {
+            "query": [0.0] * D, "tenant": "badf",
+            "filter": {"x": {"$regex": "a.*"}}})
+        assert status == 400 and "$regex" in payload["error"]
+
+    def test_oversized_k_400(self, served):
+        url, _, _ = served
+        seed(url, "bigk", n=2)
+        status, _ = request(url, "/v1/search", {
+            "query": [0.0] * D, "tenant": "bigk", "k": 99})
+        assert status == 400
+
+    def test_wrong_dim_400(self, served):
+        url, _, _ = served
+        status, _ = request(url, "/v1/search", {
+            "query": [0.0] * (D + 1), "tenant": "dim"})
+        assert status == 400
+
+    def test_expired_deadline_504(self, served):
+        url, _, _ = served
+        vecs, _ = seed(url, "dead", n=2)
+        status, payload = request(url, "/v1/search", {
+            "query": vecs[0].tolist(), "tenant": "dead",
+            "deadline_ms": 1e-4})
+        assert status == 504, payload
+
+
+class TestDocs:
+    def test_add_returns_ids(self, served):
+        url, eng, _ = served
+        _, ids = seed(url, "add", n=3)
+        assert len(ids) == 3
+        assert all(eng.store.tenant_of(i) == "add" for i in ids)
+
+    def test_add_without_tenant_400(self, served):
+        url, _, _ = served
+        status, _ = request(url, "/v1/docs", {"vectors": [[0.0] * D]})
+        assert status == 400
+
+    def test_bad_metadata_400(self, served):
+        url, _, _ = served
+        status, _ = request(url, "/v1/docs", {
+            "vectors": [[0.0] * D], "tenant": "badm",
+            "metadata": {"blob": [1, 2]}})        # list value: not a scalar
+        assert status == 400
+
+    def test_delete_own_docs(self, served):
+        url, _, _ = served
+        vecs, ids = seed(url, "del", n=4)
+        status, payload = request(url, "/v1/docs/delete", {
+            "ids": ids[:2], "tenant": "del"})
+        assert status == 200 and payload["n_deleted"] == 2
+        status, payload = request(url, "/v1/search", {
+            "query": vecs[0].tolist(), "tenant": "del"})
+        assert status == 200
+        assert not set(payload["ids"]) & set(ids[:2])
+
+    def test_cross_tenant_delete_403(self, served):
+        url, _, _ = served
+        _, ids = seed(url, "owner", n=2)
+        status, payload = request(url, "/v1/docs/delete", {
+            "ids": [ids[0]], "tenant": "thief"})
+        assert status == 403, payload
+
+    def test_out_of_range_delete_400(self, served):
+        url, _, _ = served
+        status, _ = request(url, "/v1/docs/delete", {
+            "ids": [10 ** 9], "tenant": "del"})
+        assert status == 400
+
+
+class TestQuotas:
+    def test_doc_cap_429(self, served):
+        url, _, _ = served
+        seed(url, "capped", n=3)                  # cap is exactly 3
+        status, payload = request(url, "/v1/docs", {
+            "vectors": [[0.0] * D], "tenant": "capped"})
+        assert status == 429 and payload["limit"] == "docs"
+
+    def test_inflight_cap_429_and_release(self, served):
+        url, _, quotas = served
+        vecs, _ = seed(url, "throttled", n=2)
+        # hold the single slot from outside: the next HTTP search must be
+        # rejected up front, not queued behind it
+        quotas.acquire("throttled")
+        try:
+            status, payload = request(url, "/v1/search", {
+                "query": vecs[0].tolist(), "tenant": "throttled"})
+            assert status == 429 and payload["limit"] == "inflight"
+        finally:
+            quotas.release("throttled")
+        status, _ = request(url, "/v1/search", {
+            "query": vecs[0].tolist(), "tenant": "throttled"})
+        assert status == 200                      # slot freed -> serves again
+
+    def test_quota_object_contract(self):
+        q = TenantQuotas(max_inflight=1)
+        q.acquire("t")
+        with pytest.raises(QuotaExceeded):
+            q.acquire("t")
+        q.release("t")
+        q.acquire("t")                            # released slot reusable
+        q.release("t")
+        with pytest.raises(RuntimeError):
+            q.release("t")                        # unbalanced release
+        q.acquire(None)                           # tenantless: never limited
+        q.check_docs("t", current=0, adding=10)   # max_docs=None: unlimited
+        with pytest.raises(QuotaExceeded):
+            TenantQuotas(max_docs=5).check_docs("t", current=4, adding=2)
+
+
+class TestStats:
+    def test_stats_surface(self, served):
+        url, _, _ = served
+        vecs, _ = seed(url, "stats", n=2)
+        request(url, "/v1/search", {"query": vecs[0].tolist(),
+                                    "tenant": "stats"})
+        status, payload = request(url, "/v1/stats")
+        assert status == 200
+        assert payload["engine"]["n_completed"] >= 1
+        assert payload["driver"]["n_submitted"] >= 1
+        assert payload["tenants"]["stats"] == 2
+        assert payload["quotas"]["max_inflight"] == 64
+        assert payload["config"]["d_emb"] == D
+        assert payload["config"]["backend"]["backend"] == "flat"
+        assert payload["store"]["n_active"] >= 2
+
+
+class TestConcurrency:
+    def test_mixed_tenant_concurrent_searches(self, served):
+        """Many tenants racing over one socket pool: every response is 200
+        and scoped to its own namespace (mask-key batching under load)."""
+        url, eng, _ = served
+        tenants = [f"conc-{i}" for i in range(3)]
+        seeded = {t: seed(url, t, n=6) for t in tenants}
+        errors = []
+
+        def worker(t):
+            vecs, ids = seeded[t]
+            try:
+                for j in range(6):
+                    status, payload = request(url, "/v1/search", {
+                        "query": vecs[j % 6].tolist(), "tenant": t})
+                    assert status == 200, payload
+                    assert set(payload["ids"]) <= set(ids), (t, payload)
+            except Exception as e:                # surfaced after join
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+                   for t in tenants for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+            assert not t.is_alive(), "worker hung"
+        assert not errors, errors[:3]
+
+
+class TestLifecycle:
+    def test_stop_is_idempotent_and_socket_closes(self):
+        eng = RetrievalEngine(D, d_start=8, k0=16, buckets=(1,),
+                              capacity=16, block_n=32)
+        with EngineDriver(eng, max_wait_ms=0.0) as driver:
+            handle = serve_in_thread(eng, driver)
+            url = handle.url
+            status, _ = request(url, "/healthz")
+            assert status == 200
+            handle.stop()
+            handle.stop()                         # second stop: no-op
+            with pytest.raises((ConnectionError, urllib.error.URLError)):
+                urllib.request.urlopen(url + "/healthz", timeout=2)
