@@ -44,6 +44,17 @@ def make_engine(db, buckets, *, d_start, k0, capacity):
     return eng
 
 
+def latency_summary(eng):
+    """p50/p95 through the shared ``repro.obs`` histogram buckets — the
+    same resolution a ``/metrics`` scrape of the live engine reports, so
+    BENCH records and online percentiles are directly comparable."""
+    from repro.obs import summarize_latency
+
+    lat = summarize_latency(eng.stats.latency_ms)
+    queue = summarize_latency(eng.stats.queue_ms, pcts=(50.0,))
+    return lat["p50"], lat["p95"], queue["p50"]
+
+
 def run_config(db, queries, buckets, *, d_start, k0, capacity):
     eng = make_engine(db, buckets, d_start=d_start, k0=k0, capacity=capacity)
 
@@ -54,14 +65,15 @@ def run_config(db, queries, buckets, *, d_start, k0, capacity):
     for rid in rids:
         assert eng.poll(rid) is not None
     s = eng.stats.summary()
+    p50, p95, q50 = latency_summary(eng)
     return {
         "buckets": list(buckets),
         "requests": len(queries),
         "qps": len(queries) / wall,
         "wall_s": wall,
-        "latency_ms_p50": s["latency_ms_p50"],
-        "latency_ms_p95": s["latency_ms_p95"],
-        "queue_ms_p50": s["queue_ms_p50"],
+        "latency_ms_p50": p50,
+        "latency_ms_p95": p95,
+        "queue_ms_p50": q50,
         "n_batches": s["n_batches"],
         "n_padded_slots": s["n_padded_slots"],
         "n_compiles_steady": s["n_compiles"],   # 0 expected after warmup
@@ -85,6 +97,7 @@ def run_driver_config(db, queries, buckets, *, max_wait_ms, clients,
 
     s = eng.stats.summary()
     ds = driver.stats.summary()
+    p50, p95, q50 = latency_summary(eng)
     return {
         "max_wait_ms": max_wait_ms,
         "clients": clients,
@@ -92,9 +105,9 @@ def run_driver_config(db, queries, buckets, *, max_wait_ms, clients,
         "requests": len(queries),
         "qps": len(queries) / wall,
         "wall_s": wall,
-        "latency_ms_p50": s["latency_ms_p50"],
-        "latency_ms_p95": s["latency_ms_p95"],
-        "queue_ms_p50": s["queue_ms_p50"],
+        "latency_ms_p50": p50,
+        "latency_ms_p95": p95,
+        "queue_ms_p50": q50,
         "n_batches": s["n_batches"],
         "n_padded_slots": s["n_padded_slots"],
         "n_flush_full": ds["n_flush_full"],

@@ -13,8 +13,14 @@ documents, then drives them concurrently:
 Every returned doc id is checked against the requesting tenant's own
 id universe after the run — cross-tenant leakage is a hard failure, as is
 any response outside {2xx, 429} (429 is the admission-control contract,
-not an error).  Writes per-tenant QPS / p50 / p95 and the global summary
-to ``results/BENCH_http.json`` alongside ``BENCH_driver.json``.
+not an error).  The run also exercises the observability surface:
+``/metrics`` is scraped mid-run (the exposition must parse) and again at
+quiescence (every histogram's ``_count`` must agree with its paired
+counter), and every sampled 200 search response must carry a queue-wait
+span.  Writes per-tenant QPS / p50 / p95 (computed through the shared
+``repro.obs`` histogram buckets, so they are directly comparable to
+``/metrics`` percentiles) and the global summary to
+``results/BENCH_http.json`` alongside ``BENCH_driver.json``.
 
     PYTHONPATH=src python -m benchmarks.http_load --smoke
     PYTHONPATH=src python -m benchmarks.http_load \
@@ -30,14 +36,61 @@ import os
 import sys
 import threading
 import time
+import urllib.request
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
 from repro.launch.serve import http_json
+from repro.obs import parse_prometheus, summarize_latency
 
 N_SHARDS = 4                       # metadata cardinality for filtered queries
+
+
+def scrape_metrics(url, timeout=30.0):
+    """GET /metrics and parse the exposition (raises on malformed text)."""
+    with urllib.request.urlopen(url.rstrip("/") + "/metrics",
+                                timeout=timeout) as resp:
+        text = resp.read().decode()
+    return parse_prometheus(text), text
+
+
+def check_histogram_counter_pairs(metrics):
+    """Every histogram ``_count`` must agree with its paired counter.
+
+    Only meaningful at quiescence: a histogram and its counter are updated
+    under one lock, but a scrape renders families one at a time, so a
+    mid-run snapshot can legally catch them apart.  Returns failure
+    strings (empty = all invariants hold).
+    """
+    problems = []
+    # engine: the latency histogram observes every completed request
+    completed = metrics.get(
+        "repro_engine_requests_completed_total", {}).get((), 0.0)
+    lat_count = metrics.get(
+        "repro_engine_request_latency_ms_count", {}).get((), 0.0)
+    if completed != lat_count:
+        problems.append(
+            f"latency histogram count {lat_count} != "
+            f"requests_completed_total {completed}")
+    # http: per route, the latency histogram count == sum over statuses
+    http_hist = metrics.get("repro_http_request_ms_count", {})
+    http_total = metrics.get("repro_http_requests_total", {})
+    by_route = {}
+    for key, v in http_total.items():
+        route = dict(key).get("route")
+        by_route[route] = by_route.get(route, 0.0) + v
+    for key, v in http_hist.items():
+        route = dict(key).get("route")
+        # the scrape currently being rendered hasn't counted itself yet
+        if route == "/metrics":
+            continue
+        if by_route.get(route, 0.0) != v:
+            problems.append(
+                f"http histogram count {v} != status-counter sum "
+                f"{by_route.get(route, 0.0)} for route {route}")
+    return problems
 
 
 def boot_server(args):
@@ -63,7 +116,7 @@ def boot_server(args):
 
 def run_tenant_searches(url, tenant, queries, n_clients, k, results, qps):
     """Open-loop search threads for one tenant; appends per-request records
-    ``(status, latency_s, ids, filtered_shard)`` to ``results``."""
+    ``(status, latency_s, ids, filtered_shard, spans)`` to ``results``."""
     shards = np.array_split(np.arange(len(queries)), n_clients)
     period = n_clients / qps if qps > 0 else 0.0
     lock = threading.Lock()
@@ -86,8 +139,9 @@ def run_tenant_searches(url, tenant, queries, n_clients, k, results, qps):
             status, payload = http_json(url, "/v1/search", body)
             dt = time.perf_counter() - t0
             ids = payload.get("ids", []) if status == 200 else []
+            spans = payload.get("spans") if status == 200 else None
             with lock:
-                results.append((status, dt, ids, shard_tag))
+                results.append((status, dt, ids, shard_tag, spans))
 
     threads = [threading.Thread(target=client, args=(s,), daemon=True)
                for s in shards if len(s)]
@@ -208,6 +262,16 @@ def main() -> None:
             search_threads += run_tenant_searches(
                 url, t, queries, max(1, min(args.clients, args.requests)),
                 args.final_k, per_tenant_results[t], args.qps)
+        # mid-run observability check: the exposition must parse while the
+        # search/churn traffic is in full flight (parse_prometheus raises
+        # on a malformed line, which lands in failures below)
+        midrun_metric_names = 0
+        try:
+            time.sleep(0.05)
+            midrun, _ = scrape_metrics(url)
+            midrun_metric_names = len(midrun)
+        except Exception as e:
+            failures.append(f"mid-run /metrics scrape failed: {e}")
         for st in search_threads:
             st.join()
         wall = time.perf_counter() - t0
@@ -221,18 +285,24 @@ def main() -> None:
         print("tenant,requests,ok,throttled,bad,qps,p50_ms,p95_ms,leaks")
         for t in tenants:
             rows = per_tenant_results[t]
-            lat_ms = np.asarray(
-                [dt for s, dt, _, _ in rows if s == 200]) * 1e3
-            n_ok = sum(1 for s, _, _, _ in rows if 200 <= s < 300)
-            n_429 = sum(1 for s, _, _, _ in rows if s == 429)
-            bad = [s for s, _, _, _ in rows
+            lat_ms = [dt * 1e3 for s, dt, _, _, _ in rows if s == 200]
+            # shared bucket ladder: same percentile math as /metrics
+            pct = summarize_latency(lat_ms)
+            n_ok = sum(1 for s, _, _, _, _ in rows if 200 <= s < 300)
+            n_429 = sum(1 for s, _, _, _, _ in rows if s == 429)
+            bad = [s for s, _, _, _, _ in rows
                    if not (200 <= s < 300 or s == 429)]
             bad += [s for s in churn_statuses[t]
                     if not (200 <= s < 300 or s == 429)]
             # isolation: every id ever returned to t was added under t
             # (universes only grow, so checking after the join is race-free)
-            leaks = sum(1 for s, _, ids, _ in rows if s == 200
+            leaks = sum(1 for s, _, ids, _, _ in rows if s == 200
                         for i in ids if i not in universe[t])
+            # trace spans: every served response must decompose its
+            # latency, with the queue-wait span always present
+            no_span = sum(
+                1 for s, _, _, _, spans in rows if s == 200
+                and (spans is None or spans.get("queue_ms") is None))
             rec = {
                 "tenant": t,
                 "requests": len(rows),
@@ -240,12 +310,11 @@ def main() -> None:
                 "n_throttled": n_429,
                 "n_bad_status": len(bad),
                 "qps": len(rows) / wall,
-                "latency_ms_p50": (float(np.percentile(lat_ms, 50))
-                                   if lat_ms.size else float("nan")),
-                "latency_ms_p95": (float(np.percentile(lat_ms, 95))
-                                   if lat_ms.size else float("nan")),
+                "latency_ms_p50": pct["p50"],
+                "latency_ms_p95": pct["p95"],
                 "isolation_violations": leaks,
                 "churn_ops": len(churn_statuses[t]),
+                "n_missing_spans": no_span,
             }
             records.append(rec)
             total_ok += n_ok
@@ -258,9 +327,22 @@ def main() -> None:
                     f"(e.g. {bad[:3]})")
             if leaks:
                 failures.append(f"{t}: {leaks} cross-tenant ids returned")
+            if no_span:
+                failures.append(
+                    f"{t}: {no_span} responses missing queue-wait spans")
             print(f"{t},{rec['requests']},{n_ok},{n_429},{len(bad)},"
                   f"{rec['qps']:.1f},{rec['latency_ms_p50']:.2f},"
                   f"{rec['latency_ms_p95']:.2f},{leaks}")
+
+        # quiescent scrape: histogram/_count-vs-counter invariants only
+        # hold once traffic stops (families render one at a time)
+        n_metric_names = 0
+        try:
+            final_metrics, _ = scrape_metrics(url)
+            n_metric_names = len(final_metrics)
+            failures.extend(check_histogram_counter_pairs(final_metrics))
+        except Exception as e:
+            failures.append(f"final /metrics scrape failed: {e}")
 
         out_path = args.out or os.path.join(
             os.path.dirname(__file__), "..", "results", "BENCH_http.json")
@@ -280,6 +362,8 @@ def main() -> None:
                 "n_throttled": total_429,
                 "n_bad_status": total_bad,
                 "isolation_violations": total_leaks,
+                "metric_families_midrun": midrun_metric_names,
+                "metric_families_final": n_metric_names,
                 "records": records,
             }, f, indent=2)
         print(f"# wrote {os.path.normpath(out_path)}")

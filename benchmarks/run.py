@@ -1,11 +1,17 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--docs N] [--dim D]
+    PYTHONPATH=src python -m benchmarks.run --list-bench
 
 Order: Table II (truncated, gte) -> Table III (progressive vs truncated,
 gte) -> Table IV (truncated, openai) -> Table V (progressive, openai) ->
 Fig 3/4 scatter -> kernel micro-validation -> roofline summary (if the
 dry-run sweep has produced results/dryrun/*.json).
+
+``run.py`` itself prints paper tables; the committed ``results/BENCH_*.json``
+perf records are refreshed by the sibling modules listed in
+``BENCH_MANIFEST`` (printed at the end of every run, or alone with
+``--list-bench``).
 """
 
 import os
@@ -16,9 +22,47 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.common import std_args
 
+# Which committed perf record each benchmark module refreshes.  CI's
+# bench-smoke job runs every one of these with --smoke and uploads
+# results/BENCH_*.json as artifacts; committed copies track the perf
+# trajectory in-repo.
+BENCH_MANIFEST = (
+    ("results/BENCH_engine.json",
+     "python -m benchmarks.engine_throughput"),
+    ("results/BENCH_driver.json",
+     "python -m benchmarks.engine_throughput  (same run)"),
+    ("results/BENCH_backends.json",
+     "python -m benchmarks.backend_comparison"),
+    ("results/BENCH_ivf_kernel.json",
+     "python -m benchmarks.backend_comparison --ivf-kernel"),
+    ("results/BENCH_pq.json",
+     "python -m benchmarks.backend_comparison --pq"),
+    ("results/BENCH_http.json",
+     "python -m benchmarks.http_load"),
+    ("results/BENCH_obs.json",
+     "python -m benchmarks.obs_overhead"),
+)
+
+
+def print_bench_manifest() -> None:
+    root = os.path.join(os.path.dirname(__file__), "..")
+    print("# BENCH records refreshed by the benchmark suite "
+          "(all accept --smoke):")
+    for rel, cmd in BENCH_MANIFEST:
+        present = "present" if os.path.exists(os.path.join(root, rel)) \
+            else "MISSING"
+        print(f"#   {rel:<32} <- {cmd}   [{present}]")
+
 
 def main() -> None:
-    args = std_args(__doc__).parse_args()
+    ap = std_args(__doc__)
+    ap.add_argument("--list-bench", action="store_true",
+                    help="list the BENCH_*.json records the suite refreshes "
+                         "(and which module writes each), then exit")
+    args = ap.parse_args()
+    if args.list_bench:
+        print_bench_manifest()
+        return
     t0 = time.time()
 
     from benchmarks import (fig3_scatter, table2_truncated_gte,
@@ -60,6 +104,8 @@ def main() -> None:
         from benchmarks import roofline
         roofline.report(outdir, "single")
 
+    print()
+    print_bench_manifest()
     print(f"\n=== benchmarks done in {time.time() - t0:.1f}s ===")
 
 

@@ -225,7 +225,8 @@ def ivf_progressive_search(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sched", "n_probe", "index_dims", "metric")
+    jax.jit, static_argnames=("sched", "n_probe", "index_dims", "metric",
+                             "stage0_only")
 )
 def ivf_progressive_search_sched(
     q: Array,
@@ -241,6 +242,7 @@ def ivf_progressive_search_sched(
     extra_cand: Optional[Array] = None,
     metric: str = "l2",
     cent_sq: Optional[Array] = None,
+    stage0_only: bool = False,
 ) -> Tuple[Array, Array]:
     """Full progressive schedule with IVF probing replacing the stage-0 scan.
 
@@ -276,6 +278,10 @@ def ivf_progressive_search_sched(
         # top_k needs k <= C; -1 columns score +inf and change nothing
         cand = jnp.pad(cand, ((0, 0), (0, s0.k - cand.shape[1])),
                        constant_values=-1)
+    if stage0_only:
+        # fenced split: probing produced candidates but no scores — the
+        # ladder (ALL schedule stages, scores=None) finishes the search
+        return None, cand
     # the probed members replace the stage-0 full scan; every schedule
     # stage (stage 0 included) is now a rescore over them
     return rescore_ladder(
@@ -298,14 +304,15 @@ def _sq_col(sq_prefix, index_dims, dim: int):
 @functools.partial(
     jax.jit,
     static_argnames=("sched", "n_probe", "index_dims", "metric",
-                     "pack_meta", "merge", "pq_oversample", "interpret"),
+                     "pack_meta", "merge", "pq_oversample", "interpret",
+                     "stage0_only"),
 )
 def _kernel_search_jit(
     q, db, centroids, lists, pack_rows, pack_sq, pack_scale,
     pack_codebooks, pack_cent_sq,
     valid, sq_prefix, extra_cand, cent_sq, sched,
     *, n_probe, index_dims, metric, pack_meta, merge, pq_oversample,
-    interpret,
+    interpret, stage0_only=False,
 ):
     from repro.kernels.ivf_scan import ivf_scan_topk
     from repro.kernels.pq_scan import pq_ivf_scan_topk
@@ -364,6 +371,8 @@ def _kernel_search_jit(
         scores = -neg
         cand = jnp.take_along_axis(cat_i, pos, axis=1)
 
+    if stage0_only:
+        return scores, cand
     return rescore_ladder(
         q, db, cand, sched.stages[1:],
         sq_prefix=sq_prefix, index_dims=index_dims,
@@ -390,6 +399,7 @@ def ivf_progressive_search_kernel(
     block_m: int = 128,
     pq_oversample: int = 1,
     interpret: bool = False,
+    stage0_only: bool = False,
 ) -> Tuple[Array, Array]:
     """`ivf_progressive_search_sched` with the fused Pallas stage-0 kernel.
 
@@ -436,5 +446,5 @@ def ivf_progressive_search_kernel(
         valid, sq_prefix, extra_cand, cent_sq, sched,
         n_probe=n_probe, index_dims=index_dims, metric=metric,
         pack_meta=pack_meta, merge=merge, pq_oversample=pq_oversample,
-        interpret=interpret,
+        interpret=interpret, stage0_only=stage0_only,
     )

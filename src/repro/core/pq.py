@@ -240,11 +240,16 @@ def _stage0_ids(codes, valid, row_limit):
     return jnp.where(keep, ids, -1)
 
 
-def _finish(q, rescore_db, sched, scores, cand, *, valid, extra_cand, metric):
+def _finish(q, rescore_db, sched, scores, cand, *, valid, extra_cand, metric,
+            stage0_only=False):
     """Shared post-stage-0 path: tail injection + the rescore ladder."""
     from repro.core.progressive import rescore_ladder
 
     cand = T.inject_candidates(cand, extra_cand)
+    if stage0_only:
+        # fenced split: the ladder (`quant_rest_stages` +
+        # `rescore_ladder_jit`) scores the injected rows exactly
+        return scores, cand
     rest = sched.stages[1:]
     if not rest and (extra_cand is not None or valid is not None):
         # single-stage schedule: still need one exact pass so injected /
@@ -257,7 +262,8 @@ def _finish(q, rescore_db, sched, scores, cand, *, valid, extra_cand, metric):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sched", "metric", "oversample"))
+    jax.jit, static_argnames=("sched", "metric", "oversample",
+                              "stage0_only"))
 def pq_progressive_search(
     q: Array, idx: Dict[str, Array], sched: ProgressiveSchedule,
     *, metric: str = "l2",
@@ -266,6 +272,7 @@ def pq_progressive_search(
     row_limit: Optional[Array] = None,
     extra_cand: Optional[Array] = None,
     oversample: int = 1,
+    stage0_only: bool = False,
 ) -> Tuple[Array, Array]:
     """Progressive search with a PQ ADC stage-0 scan (XLA reference).
 
@@ -295,13 +302,14 @@ def pq_progressive_search(
     # fully-masked slots must surface the -1 sentinel, not row 0
     cand = jnp.where(jnp.isfinite(-neg), cand.astype(jnp.int32), -1)
     return _finish(q, rescore_db, sched, -neg, cand,
-                   valid=valid, extra_cand=extra_cand, metric=metric)
+                   valid=valid, extra_cand=extra_cand, metric=metric,
+                   stage0_only=stage0_only)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("sched", "metric", "merge", "block_m", "oversample",
-                     "interpret"))
+                     "interpret", "stage0_only"))
 def pq_progressive_search_kernel(
     q: Array, idx: Dict[str, Array], sched: ProgressiveSchedule,
     *, metric: str = "l2",
@@ -313,6 +321,7 @@ def pq_progressive_search_kernel(
     block_m: int = 128,
     oversample: int = 1,
     interpret: bool = False,
+    stage0_only: bool = False,
 ) -> Tuple[Array, Array]:
     """`pq_progressive_search` with the fused Pallas ADC stage-0 kernel.
 
@@ -339,4 +348,5 @@ def pq_progressive_search_kernel(
         lut, codes, ids, k=min(s0.k * oversample, n0), block_m=block_m,
         merge=merge, interpret=interpret)
     return _finish(q, rescore_db, sched, scores, cand,
-                   valid=valid, extra_cand=extra_cand, metric=metric)
+                   valid=valid, extra_cand=extra_cand, metric=metric,
+                   stage0_only=stage0_only)

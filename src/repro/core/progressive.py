@@ -84,7 +84,40 @@ def rescore_ladder(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("sched", "index_dims", "block_n", "metric"),
+    static_argnames=("stages", "index_dims", "metric"),
+)
+def rescore_ladder_jit(
+    q: Array,
+    db: Array,
+    cand: Array,
+    stages,
+    *,
+    sq_prefix: Optional[Array] = None,
+    index_dims: Optional[tuple] = None,
+    valid: Optional[Array] = None,
+    metric: str = "l2",
+    scores: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Jitted ``rescore_ladder`` — the second half of a fenced search.
+
+    The fused entry points (`progressive_search` and the IVF / quantized /
+    PQ variants) jit stage-0 + ladder as one XLA program.  Observability
+    stage fences (``obs.stage_fences``) instead run stage-0 with
+    ``stage0_only=True``, ``block_until_ready`` the candidates to timestamp
+    the stage-0/rescore boundary, then finish through this program.
+    ``stages`` must be a (hashable) tuple of `Stage`.
+    """
+    return rescore_ladder(
+        q, db, cand, stages,
+        sq_prefix=sq_prefix, index_dims=index_dims,
+        valid=valid, metric=metric, scores=scores,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sched", "index_dims", "block_n", "metric",
+                     "stage0_only"),
 )
 def progressive_search(
     q: Array,
@@ -96,6 +129,7 @@ def progressive_search(
     valid: Optional[Array] = None,
     block_n: int = 65536,
     metric: str = "l2",
+    stage0_only: bool = False,
 ) -> Tuple[Array, Array]:
     """Per-query progressive search (static shapes; jit/pjit-native).
 
@@ -110,6 +144,9 @@ def progressive_search(
                   serving: deleted / unpopulated rows are unreturnable).
       block_n:    document tile for the stage-0 full scan.
       metric:     'l2' or 'cosine'.
+      stage0_only: static; return the stage-0 (scores, candidates) without
+                  the rescore ladder — the fenced-observability split point
+                  (finish via ``rescore_ladder_jit`` on ``stages[1:]``).
 
     Returns:
       (scores, indices): ((Q, final_k) float32, (Q, final_k) int32).
@@ -124,6 +161,8 @@ def progressive_search(
         valid=valid,
         block_n=block_n, metric=metric,
     )
+    if stage0_only:
+        return scores, cand
     return rescore_ladder(
         q, db, cand, sched.stages[1:],
         sq_prefix=sq_prefix, index_dims=index_dims,

@@ -168,7 +168,23 @@ def _scaled_space_scores(q: Array, idx: Dict[str, Array]) -> Array:
     return idx["sq0"][None, :] - 2.0 * ip
 
 
-@functools.partial(jax.jit, static_argnames=("sched", "metric"))
+def quant_rest_stages(sched, *, extra_cand=None, valid=None):
+    """Post-stage-0 ladder stages for the quantized / PQ families.
+
+    Mirrors the fused paths' ``rest`` logic so a fenced search
+    (``stage0_only=True`` + `rescore_ladder_jit`) refines through exactly
+    the stages the fused program would: ``stages[1:]``, except a
+    single-stage schedule with injected or masked candidates still needs
+    one exact pass so those candidates carry full-precision scores.
+    """
+    rest = sched.stages[1:]
+    if not rest and (extra_cand is not None or valid is not None):
+        rest = (sched.stages[0],)
+    return rest
+
+
+@functools.partial(jax.jit, static_argnames=("sched", "metric",
+                                             "stage0_only"))
 def quantized_progressive_search(
     q: Array, idx: Dict[str, Array], sched: ProgressiveSchedule,
     *, metric: str = "l2",
@@ -176,6 +192,7 @@ def quantized_progressive_search(
     valid: Optional[Array] = None,
     row_limit: Optional[Array] = None,
     extra_cand: Optional[Array] = None,
+    stage0_only: bool = False,
 ) -> Tuple[Array, Array]:
     """Progressive search with an int8 stage-0 block.
 
@@ -213,6 +230,10 @@ def quantized_progressive_search(
     cand = jnp.where(jnp.isfinite(-neg), cand.astype(jnp.int32), -1)
     scores = -neg
     cand = T.inject_candidates(cand, extra_cand)
+    if stage0_only:
+        # fenced split: injected tail rows ride along unscored — the ladder
+        # (`quant_rest_stages` + `rescore_ladder_jit`) scores them exactly
+        return scores, cand
     rest = sched.stages[1:]
     if not rest and (extra_cand is not None or valid is not None):
         # single-stage schedule: still need one exact pass so injected /

@@ -144,6 +144,10 @@ class PendingRequest:
     k: Optional[int] = None     # result width; None = engine default
     mask_key: Optional[Tuple] = None   # DocStore.compile_mask identity
     deadline: Optional[float] = None   # absolute perf_counter deadline
+    # repro.obs.TraceContext stamped by the engine/driver along the way
+    # (None when observability is disabled); typed loosely so this module
+    # keeps zero obs imports
+    trace: Optional[object] = None
 
 
 class RequestQueue:

@@ -196,6 +196,49 @@ def backend_config(name: str, opts: Optional[Dict] = None) -> BackendConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability section of `EngineConfig` (see `repro.obs`).
+
+    * ``enabled`` — master switch.  ``False`` degrades every metric
+      instrument to a shared no-op and skips trace contexts entirely,
+      restoring the uninstrumented fast path (the overhead benchmark's
+      baseline).
+    * ``slow_query_ms`` — latency threshold for the structured JSON
+      slow-query log (None disables the log).
+    * ``trace_ring`` — capacity of the in-memory ring of recent request
+      traces (0 disables it).
+    * ``stage_fences`` — opt-in ``block_until_ready`` fence between the
+      stage-0 scan and the rescore ladder on the batched (driver) path, so
+      traces carry a real stage-0/rescore split.  Off by default: the
+      fence costs one extra host sync per batch, and the default path
+      stays fused exactly as before.
+    """
+
+    enabled: bool = True
+    slow_query_ms: Optional[float] = None
+    trace_ring: int = 256
+    stage_fences: bool = False
+
+    def __post_init__(self):
+        if self.slow_query_ms is not None and self.slow_query_ms < 0:
+            raise ValueError(
+                f"ObsConfig.slow_query_ms must be >= 0 or None, got "
+                f"{self.slow_query_ms}")
+        if self.trace_ring < 0:
+            raise ValueError(
+                f"ObsConfig.trace_ring must be >= 0, got {self.trace_ring}")
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ObsConfig":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = sorted(set(d) - known)
+        if bad:
+            raise ValueError(f"ObsConfig does not take field(s) {bad}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Full static configuration of a `RetrievalEngine`.
 
@@ -217,10 +260,15 @@ class EngineConfig:
     backend: BackendConfig = dataclasses.field(default_factory=FlatConfig)
     rebuild_mode: str = "sync"
     compact_dead_frac: Optional[float] = 0.3
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
     def __post_init__(self):
         _validate_positive(self, "d_emb", "d_start", "k0", "final_k",
                            "capacity", "block_n", "max_unpolled")
+        if not isinstance(self.obs, ObsConfig):
+            raise ValueError(
+                f"EngineConfig.obs must be an ObsConfig, got "
+                f"{type(self.obs).__name__}")
         if self.d_start > self.d_emb:
             raise ValueError(
                 f"EngineConfig.d_start={self.d_start} exceeds "
@@ -260,6 +308,8 @@ class EngineConfig:
         be = dict(d.pop("backend", {"backend": "flat"}))
         name = be.pop("backend")
         d["backend"] = backend_config(name, be)
+        if "obs" in d:
+            d["obs"] = ObsConfig.from_dict(d["obs"])
         if "buckets" in d:
             d["buckets"] = tuple(d["buckets"])
         known = {f.name for f in dataclasses.fields(cls)}
@@ -298,6 +348,17 @@ class EngineConfig:
                              "subspaces); must divide the stage-0 dim")
         ap.add_argument("--rebuild-mode", type=str, default="sync",
                         choices=("sync", "background", "off"))
+        ap.add_argument("--no-obs", action="store_true",
+                        help="disable metrics/traces (uninstrumented fast "
+                             "path; the overhead-benchmark baseline)")
+        ap.add_argument("--slow-query-ms", type=float, default=0.0,
+                        help="log a structured JSON record for requests "
+                             "slower than this (0 = disabled)")
+        ap.add_argument("--trace-ring", type=int, default=256,
+                        help="recent-request trace ring capacity")
+        ap.add_argument("--stage-fences", action="store_true",
+                        help="fence stage-0 vs rescore on the batched path "
+                             "so traces carry the split (extra host sync)")
 
     @classmethod
     def from_flags(cls, args, *, d_emb: int,
@@ -325,6 +386,12 @@ class EngineConfig:
             capacity=capacity if capacity is not None else 1024,
             backend=be,
             rebuild_mode=args.rebuild_mode,
+            obs=ObsConfig(
+                enabled=not args.no_obs,
+                slow_query_ms=args.slow_query_ms or None,
+                trace_ring=args.trace_ring,
+                stage_fences=args.stage_fences,
+            ),
         )
 
 
@@ -343,6 +410,7 @@ def legacy_config(
     backend_opts: Optional[Dict] = None,
     rebuild_mode: str = "sync",
     compact_dead_frac: Optional[float] = 0.3,
+    obs: Optional[ObsConfig] = None,
 ) -> "EngineConfig":
     """The deprecation shim: old-style engine kwargs -> ``EngineConfig``.
 
@@ -358,4 +426,5 @@ def legacy_config(
         backend=(backend if isinstance(backend, BackendConfig)
                  else backend_config(backend, backend_opts)),
         rebuild_mode=rebuild_mode, compact_dead_frac=compact_dead_frac,
+        obs=obs if obs is not None else ObsConfig(),
     )

@@ -104,22 +104,72 @@ class RetrievalFuture:
         self._event.set()
 
 
-@dataclasses.dataclass
-class DriverStats:
-    """Driver-side counters (the engine keeps the latency distributions)."""
+# driver counter attribute -> registry metric; the three flush counters
+# share one labeled family (repro_driver_flush_total{reason=...}) and
+# queue_peak mirrors to a gauge — attribute surface unchanged either way
+_DRIVER_COUNTERS = {
+    "n_submitted": ("repro_driver_requests_submitted_total",
+                    "Requests accepted into the driver queue"),
+    "n_completed": ("repro_driver_requests_completed_total",
+                    "Requests resolved with a result"),
+    "n_cancelled": ("repro_driver_requests_cancelled_total",
+                    "Requests cancelled at stop(drain=False)"),
+    "n_expired": ("repro_driver_requests_expired_total",
+                  "Requests shed: client deadline passed pre-dispatch"),
+    "n_batch_errors": ("repro_driver_batch_errors_total",
+                       "Batches whose dispatch raised"),
+}
+_FLUSH_REASONS = {"n_flush_full": "full", "n_flush_deadline": "deadline",
+                  "n_flush_drain": "drain"}
 
-    n_submitted: int = 0
-    n_completed: int = 0
-    n_cancelled: int = 0
-    n_expired: int = 0          # dropped: client deadline passed pre-dispatch
-    n_batch_errors: int = 0
-    n_flush_full: int = 0       # batches flushed because the bucket filled
-    n_flush_deadline: int = 0   # batches flushed by max_wait_ms expiry
-    n_flush_drain: int = 0      # batches flushed during stop(drain=True)
-    queue_peak: int = 0         # high-water pending-queue depth
+
+class DriverStats:
+    """Driver-side counters (the engine keeps the latency distributions).
+
+    Plain int attributes with the exact field set of the original
+    dataclass — ``stats.n_completed += 1`` call sites and ``summary()``
+    consumers see no difference.  The ints are the source of truth; a
+    bound `repro.obs.MetricsRegistry` sees them through ``publish()``,
+    which the driver's scrape-time collector calls — zero registry lock
+    traffic on the submit/flush hot path.
+    """
+
+    _FIELDS = ("n_submitted", "n_completed", "n_cancelled", "n_expired",
+               "n_batch_errors", "n_flush_full", "n_flush_deadline",
+               "n_flush_drain", "queue_peak")
+
+    def __init__(self) -> None:
+        for f in self._FIELDS:
+            setattr(self, f, 0)
+        self._mirror: Dict[str, object] = {}
+        self._c_flush = None
+        self._g_peak = None
+
+    def bind(self, registry) -> None:
+        for attr, (metric, help_text) in _DRIVER_COUNTERS.items():
+            self._mirror[attr] = registry.counter(metric, help_text)
+        self._c_flush = registry.counter(
+            "repro_driver_flush_total",
+            "Batches flushed, by trigger (full bucket / deadline / drain)",
+            labels=("reason",))
+        self._g_peak = registry.gauge(
+            "repro_driver_queue_peak",
+            "High-water pending-queue depth")
+        self.publish()
+
+    def publish(self) -> None:
+        """Mirror current totals into the bound registry (collector path:
+        runs at scrape time, never per request)."""
+        for attr, c in self._mirror.items():
+            c.set_total(getattr(self, attr))
+        if self._c_flush is not None:
+            for attr, reason in _FLUSH_REASONS.items():
+                self._c_flush.set_total(getattr(self, attr), reason=reason)
+        if self._g_peak is not None:
+            self._g_peak.set(float(self.queue_peak))
 
     def summary(self) -> Dict:
-        return dataclasses.asdict(self)
+        return {f: getattr(self, f) for f in self._FIELDS}
 
 
 @dataclasses.dataclass
@@ -165,6 +215,14 @@ class EngineDriver:
         self.engine = engine
         self.batcher = DeadlineBatcher(engine.policy, float(max_wait_ms) / 1e3)
         self.stats = DriverStats()
+        self.stats.bind(engine.metrics)
+        self._h_wait = engine.metrics.histogram(
+            "repro_driver_queue_wait_ms",
+            "Driver-queue wait: submit to batch formation")
+        self._g_depth = engine.metrics.gauge(
+            "repro_driver_queue_depth",
+            "Requests pending in the driver queue")
+        engine.metrics.register_collector(self._collect_metrics)
         self._clock = clock
         self._max_queue = int(max_queue)
         self._name = name
@@ -285,6 +343,8 @@ class EngineDriver:
                             f"for {timeout}s")
                     self._cv.wait(remaining)
             self._pending.append(_Pending(req, fut, self._clock()))
+            if req.trace is not None:
+                req.trace.mark("admit")
             self.stats.n_submitted += 1
             if len(self._pending) > self.stats.queue_peak:
                 self.stats.queue_peak = len(self._pending)
@@ -323,7 +383,23 @@ class EngineDriver:
             else:
                 skipped.append(p)
         self._pending.extendleft(reversed(skipped))
+        now = self._clock()
+        self._h_wait.observe_many(
+            [(now - p.t_arrival) * 1e3 for p in taken])
+        # one real-clock read for the whole batch: trace marks live on the
+        # perf_counter timebase (not the injectable policy clock)
+        t_batch = time.perf_counter()
+        for p in taken:
+            if p.req.trace is not None:
+                p.req.trace.marks["batch"] = t_batch
         return taken
+
+    def _collect_metrics(self) -> None:
+        """Scrape-time collector: queue-depth gauge + counter totals
+        (lock order: cv -> registry, same as every hot-path instrument)."""
+        with self._cv:
+            self._g_depth.set(float(len(self._pending)))
+            self.stats.publish()
 
     def _finish_locked(self) -> None:
         """Cancel whatever is left and mark the driver stopped."""

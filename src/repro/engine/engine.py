@@ -66,6 +66,13 @@ from repro.engine.config import EngineConfig, legacy_config
 from repro.engine.request import SearchRequest
 from repro.engine.store import DocStore
 from repro.index_backends import IndexBackend, IndexState, make_backend
+from repro.obs import (
+    NULL_INSTRUMENT,
+    MetricsRegistry,
+    SlowQueryLog,
+    TraceContext,
+    TraceRing,
+)
 
 Array = jax.Array
 
@@ -96,6 +103,14 @@ class RequestStats:
     bucket: int                # static batch size the request rode in
     batch_fill: int            # real requests in that batch (<= bucket)
     compiled: bool             # this dispatch triggered an XLA compile
+    # stage-split timings, present only under ``obs.stage_fences`` (the
+    # fenced dispatch syncs once at the stage-0 boundary; the default fast
+    # path stays fused and reports them as None)
+    stage0_ms: Optional[float] = None     # dispatch -> stage-0 scan done
+    rescore_ms: Optional[float] = None    # stage-0 done -> rescore done
+    # full trace-mark offsets from submit (``TraceContext.spans_ms``);
+    # None when ``obs.enabled=False``
+    spans: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -115,46 +130,133 @@ class RetrievalResult:
     store_generation: int = -1
 
 
+# engine counter attribute -> (registry metric name, help text).  The
+# attributes stay plain ``stats.n_x += 1`` call sites everywhere;
+# ``EngineStats.publish`` mirrors the totals into the bound registry at
+# scrape time (collector path), keeping the increment itself lock-free.
+_ENGINE_COUNTERS = {
+    "n_submitted": ("repro_engine_requests_submitted_total",
+                    "Requests accepted via submit/execute_batch"),
+    "n_completed": ("repro_engine_requests_completed_total",
+                    "Requests completed with a result"),
+    "n_batches": ("repro_engine_batches_total", "Batches dispatched"),
+    "n_compiles": ("repro_engine_compiles_total",
+                   "Dispatches that triggered an XLA compile"),
+    "n_padded_slots": ("repro_engine_padded_slots_total",
+                       "Padding rows dispatched (bucket minus fill)"),
+    "n_docs_added": ("repro_engine_docs_added_total", "Documents appended"),
+    "n_docs_deleted": ("repro_engine_docs_deleted_total",
+                       "Documents tombstoned"),
+    "n_rebuilds": ("repro_engine_rebuilds_total",
+                   "Index (re)builds adopted"),
+    "n_compactions": ("repro_engine_compactions_total",
+                      "Store compactions run"),
+}
+
+
 class EngineStats:
     """Aggregated engine counters + latency distributions.
 
     Distributions are kept in bounded ring buffers (``window`` most recent
     samples) so a long-lived serving loop doesn't grow memory per request;
-    counters are lifetime totals.
+    counters are lifetime totals.  ``bind(registry)`` allocates registry
+    counters/histograms in a `repro.obs.MetricsRegistry`; the plain int
+    attributes stay the source of truth (``summary()`` and every existing
+    test read them unchanged, and they keep counting with observability
+    disabled) — ``publish()`` mirrors them into the registry from the
+    engine's scrape-time collector, so counting costs no registry lock.
     """
 
     def __init__(self, window: int = 16384) -> None:
-        self.n_submitted = 0
-        self.n_completed = 0
-        self.n_batches = 0
-        self.n_compiles = 0
-        self.n_padded_slots = 0
-        self.n_docs_added = 0
-        self.n_docs_deleted = 0
-        self.n_rebuilds = 0
-        self.n_compactions = 0
+        for name in _ENGINE_COUNTERS:
+            setattr(self, name, 0)
+        self._mirror: Dict[str, object] = {}
+        self.h_latency = NULL_INSTRUMENT
+        self.h_queue = NULL_INSTRUMENT
+        self.h_compute = NULL_INSTRUMENT
+        self.h_stage0 = NULL_INSTRUMENT
+        self.h_rescore = NULL_INSTRUMENT
+        self.h_rebuild = NULL_INSTRUMENT
+        self.h_compact = NULL_INSTRUMENT
+        self.c_batch_bucket = NULL_INSTRUMENT
         self.latency_ms: Deque[float] = deque(maxlen=window)
         self.queue_ms: Deque[float] = deque(maxlen=window)
         self.compute_ms: Deque[float] = deque(maxlen=window)
         self.bucket_counts: Dict[int, int] = {}
+
+    def bind(self, registry: MetricsRegistry) -> None:
+        """Mirror counters into ``registry`` and allocate histograms there
+        (no-op instruments when the registry is disabled)."""
+        for attr, (metric, help_text) in _ENGINE_COUNTERS.items():
+            self._mirror[attr] = registry.counter(metric, help_text)
+        self.h_latency = registry.histogram(
+            "repro_engine_request_latency_ms",
+            "Submit-to-result latency; observes every completed request "
+            "(compiles included), so its _count equals "
+            "repro_engine_requests_completed_total")
+        self.h_queue = registry.histogram(
+            "repro_engine_request_queue_ms", "Submit-to-dispatch wait")
+        self.h_compute = registry.histogram(
+            "repro_engine_batch_compute_ms",
+            "Dispatch-to-device-done per batch")
+        self.h_stage0 = registry.histogram(
+            "repro_engine_stage0_ms",
+            "Stage-0 scan span (obs.stage_fences only)")
+        self.h_rescore = registry.histogram(
+            "repro_engine_rescore_ms",
+            "Rescore-ladder span (obs.stage_fences only)")
+        self.h_rebuild = registry.histogram(
+            "repro_engine_rebuild_ms", "Index build duration")
+        self.h_compact = registry.histogram(
+            "repro_engine_compact_ms", "Store compaction duration")
+        self.c_batch_bucket = registry.counter(
+            "repro_engine_batch_bucket_total",
+            "Batches dispatched per static bucket size", labels=("bucket",))
+        self.publish()
+
+    def publish(self) -> None:
+        """Mirror counter totals into the bound registry — called from the
+        engine's scrape-time collector, never on the request path (the
+        plain ints stay the source of truth)."""
+        for attr, c in self._mirror.items():
+            c.set_total(getattr(self, attr))
+        cb = self.c_batch_bucket
+        for bucket, n in self.bucket_counts.items():
+            cb.set_total(n, bucket=bucket)
 
     def record_batch(self, bucket: int, fill: int, compute_ms: float,
                      compiled: bool) -> None:
         self.n_batches += 1
         self.n_padded_slots += bucket - fill
         self.n_compiles += int(compiled)
+        self.h_compute.observe(compute_ms)
         if not compiled:
             self.compute_ms.append(compute_ms)
         self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
 
     def record_request(self, st: RequestStats) -> None:
-        self.n_completed += 1
-        if st.compiled:
-            # compile-inflated latencies would skew steady-state p50/p95;
-            # compile events are tracked separately via n_compiles
-            return
-        self.latency_ms.append(st.latency_ms)
-        self.queue_ms.append(st.queue_ms)
+        self.record_requests((st,))
+
+    def record_requests(self, sts) -> None:
+        """Record a batch's completed requests in one pass — one registry
+        lock round-trip per histogram instead of one per request (the
+        obs-overhead budget is per-batch, not per-request)."""
+        self.n_completed += len(sts)
+        # registry histograms observe EVERY completed request — that keeps
+        # the scrape invariant latency_ms_count == requests_completed_total
+        self.h_latency.observe_many([st.latency_ms for st in sts])
+        self.h_queue.observe_many([st.queue_ms for st in sts])
+        if sts and sts[0].stage0_ms is not None:
+            # batch-uniform: the fence timestamps come from one dispatch
+            self.h_stage0.observe_many([st.stage0_ms for st in sts])
+            self.h_rescore.observe_many([st.rescore_ms for st in sts])
+        for st in sts:
+            if st.compiled:
+                # compile-inflated latencies would skew steady-state
+                # p50/p95; compile events are tracked via n_compiles
+                continue
+            self.latency_ms.append(st.latency_ms)
+            self.queue_ms.append(st.queue_ms)
 
     @staticmethod
     def _pct(xs, p: float) -> float:
@@ -334,6 +436,38 @@ class RetrievalEngine:
         self._pending_rids: set = set()
         self._seen_shapes: set = set()
 
+        # -- observability spine: one registry per engine (the driver and
+        # HTTP server attach their instruments to it), a bounded ring of
+        # recent request traces, and the slow-query log
+        obs = config.obs
+        self.metrics = MetricsRegistry(enabled=obs.enabled)
+        self.stats.bind(self.metrics)
+        self.trace_ring = TraceRing(obs.trace_ring)
+        self.slow_log = SlowQueryLog(obs.slow_query_ms)
+        self._obs_enabled = bool(obs.enabled)
+        self._stage_fences = bool(obs.stage_fences and obs.enabled)
+        self._c_slow = self.metrics.counter(
+            "repro_slow_queries_total",
+            "Requests over obs.slow_query_ms (also emitted to the "
+            "repro.obs.slowquery logger)")
+        self._g_queue_depth = self.metrics.gauge(
+            "repro_engine_queue_depth",
+            "Requests parked in the engine's own queue")
+        self._g_store = self.metrics.gauge(
+            "repro_store_state", "DocStore occupancy snapshot",
+            labels=("key",))
+        self._g_backend = self.metrics.gauge(
+            "repro_backend_state",
+            "Backend-declared index state gauges (IndexBackend.gauges)",
+            labels=("backend", "key"))
+        self._c_mask_hits = self.metrics.counter(
+            "repro_store_mask_cache_hits_total",
+            "Compiled tenant/filter mask cache hits")
+        self._c_mask_misses = self.metrics.counter(
+            "repro_store_mask_cache_misses_total",
+            "Compiled tenant/filter mask cache misses (mask recompiles)")
+        self.metrics.register_collector(self._collect_metrics)
+
         self.backend: IndexBackend = (
             backend_instance if backend_instance is not None
             else make_backend(
@@ -378,10 +512,13 @@ class RetrievalEngine:
     # -- index lifecycle -----------------------------------------------------
     def _build_state(self) -> IndexState:
         store = self.store
-        return self.backend.build(
+        t0 = time.perf_counter()
+        state = self.backend.build(
             store.db, store.valid, sq_prefix=store.sq_prefix,
             stats=store.stats(),
         )
+        self.stats.h_rebuild.observe((time.perf_counter() - t0) * 1e3)
+        return state
 
     def _ensure_index(self) -> IndexState:
         if self._index_state is None:
@@ -391,7 +528,9 @@ class RetrievalEngine:
 
     def _compact(self) -> None:
         """Compact the store and remap every id the engine still holds."""
+        t0 = time.perf_counter()
         id_map = self.store.compact()
+        self.stats.h_compact.observe((time.perf_counter() - t0) * 1e3)
         self.stats.n_compactions += 1
         self._min_state_generation = self.store.generation
         for res in self._results.values():       # unpolled results follow
@@ -483,10 +622,16 @@ class RetrievalEngine:
                 store = self.store
                 db, valid = store.db, store.valid
                 sq, snap = store.sq_prefix, store.stats()
-                self._bg.launch(
-                    lambda: self.backend.build(
+                h_rebuild = self.stats.h_rebuild
+
+                def _bg_build():
+                    t0 = time.perf_counter()
+                    state = self.backend.build(
                         db, valid, sq_prefix=sq, stats=snap)
-                )
+                    h_rebuild.observe((time.perf_counter() - t0) * 1e3)
+                    return state
+
+                self._bg.launch(_bg_build)
                 return True
             return adopted                        # build already in flight
         # sync (or correctness-mandated while a background build lags)
@@ -579,8 +724,9 @@ class RetrievalEngine:
         now = time.perf_counter()
         deadline = (None if request.deadline_ms is None
                     else now + float(request.deadline_ms) / 1e3)
+        trace = TraceContext(now) if self._obs_enabled else None
         return PendingRequest(-1, q, now, k=k, mask_key=mask_key,
-                              deadline=deadline)
+                              deadline=deadline, trace=trace)
 
     def submit(self, request) -> int:
         """Enqueue one request — a raw (D,)/(1, D) query vector or a
@@ -593,6 +739,8 @@ class RetrievalEngine:
             req.request_id = self._next_rid
             self._next_rid += 1
             self._queue.push(req)
+            if req.trace is not None:
+                req.trace.mark("admit")
             self._pending_rids.add(req.request_id)
             self.stats.n_submitted += 1
             return req.request_id
@@ -640,12 +788,43 @@ class RetrievalEngine:
         bucket = self.policy.bucket_for(len(reqs))
         t_dispatch = time.perf_counter()
         qb = pad_batch(np.stack([r.query for r in reqs]), bucket)
-        scores, ids, compiled = self._dispatch(qb, mask=mask)
+        if self._stage_fences:
+            scores, ids, compiled, t_stage0 = self._dispatch_fenced(
+                qb, mask=mask)
+        else:
+            scores, ids, compiled = self._dispatch(qb, mask=mask)
+            t_stage0 = None
         t_done = time.perf_counter()
         compute_ms = (t_done - t_dispatch) * 1e3
+        stage0_ms = (None if t_stage0 is None
+                     else (t_stage0 - t_dispatch) * 1e3)
+        rescore_ms = (None if t_stage0 is None
+                      else (t_done - t_stage0) * 1e3)
         self.stats.record_batch(bucket, len(reqs), compute_ms, compiled)
         out = []
+        sts = []
+        records = []
         for j, r in enumerate(reqs):
+            spans = None
+            if r.trace is not None:
+                # inline span build (pipeline order): this loop runs per
+                # request under engine.lock, so it stays call-free —
+                # dispatch/deliver go straight into the spans dict instead
+                # of through mark()/spans_ms()
+                m = r.trace.marks
+                t0_req = m["submit"]
+                spans = {"submit": 0.0}
+                t = m.get("admit")
+                if t is not None:
+                    spans["admit"] = (t - t0_req) * 1e3
+                t = m.get("batch")
+                if t is not None:
+                    spans["batch"] = (t - t0_req) * 1e3
+                spans["dispatch"] = (t_dispatch - t0_req) * 1e3
+                if t_stage0 is not None:
+                    spans["stage0"] = (t_stage0 - t0_req) * 1e3
+                    spans["rescore"] = (t_done - t0_req) * 1e3
+                spans["deliver"] = (t_done - t0_req) * 1e3
             st = RequestStats(
                 latency_ms=(t_done - r.t_submit) * 1e3,
                 queue_ms=(t_dispatch - r.t_submit) * 1e3,
@@ -653,13 +832,35 @@ class RetrievalEngine:
                 bucket=bucket,
                 batch_fill=len(reqs),
                 compiled=compiled,
+                stage0_ms=stage0_ms,
+                rescore_ms=rescore_ms,
+                spans=spans,
             )
+            sts.append(st)
             k = self.out_k if r.k is None else r.k
             out.append(RetrievalResult(
                 r.request_id, scores[j][:k], ids[j][:k], st,
                 store_generation=self.store.generation,
             ))
-            self.stats.record_request(st)
+            if spans is not None:
+                records.append({
+                    "request_id": r.request_id,
+                    "latency_ms": st.latency_ms,
+                    "queue_ms": st.queue_ms,
+                    "compute_ms": compute_ms,
+                    "bucket": bucket,
+                    "batch_fill": len(reqs),
+                    "compiled": compiled,
+                    "spans": spans,
+                })
+        self.stats.record_requests(sts)
+        if records:
+            self.trace_ring.push_many(records)
+            if self.slow_log.enabled:
+                n_slow = sum(self.slow_log.maybe_log(rec)
+                             for rec in records)
+                if n_slow:
+                    self._c_slow.inc(n_slow)
         return out
 
     def step(self) -> int:
@@ -676,6 +877,11 @@ class RetrievalEngine:
                 return 0
             bucket = self.policy.bucket_for(min(n, self.policy.max_size))
             reqs = self._queue.pop_group(min(n, bucket))
+            if self._obs_enabled:
+                t_batch = time.perf_counter()
+                for r in reqs:
+                    if r.trace is not None:
+                        r.trace.marks["batch"] = t_batch
             for res in self._execute(reqs):
                 self._results[res.request_id] = res
                 self._pending_rids.discard(res.request_id)
@@ -737,7 +943,12 @@ class RetrievalEngine:
             self._maybe_rebuild_locked()
             probe = np.zeros((1, self.store.d_emb), np.float32)
             for b in self.policy.sizes:
-                self._dispatch(np.repeat(probe, b, axis=0))
+                qb = np.repeat(probe, b, axis=0)
+                # warm whichever dispatch path requests will actually take
+                if self._stage_fences:
+                    self._dispatch_fenced(qb)
+                else:
+                    self._dispatch(qb)
 
     # -- synchronous batch API (pipeline / benchmarks) ------------------------
     def search(self, queries, *, k: Optional[int] = None,
@@ -819,7 +1030,71 @@ class RetrievalEngine:
         jax.block_until_ready((s, i))
         return np.asarray(s), np.asarray(i), compiled
 
+    def _dispatch_fenced(self, q_pad: np.ndarray, mask=None):
+        """Dispatch with a ``block_until_ready`` fence at the stage-0
+        boundary (``obs.stage_fences``), so the stage-0 / rescore split is
+        measurable.  Two device round trips instead of one fused program —
+        an opt-in diagnostic path with its own compile-cache entries (the
+        ``"fenced"`` tag keeps its shape keys apart from the fused path's).
+        Returns (scores, ids, compiled, t_stage0)."""
+        store = self.store
+        state = self._ensure_index()
+        shape_key = ("fenced", q_pad.shape[0], store.capacity,
+                     state.shape_key)
+        compiled = shape_key not in self._seen_shapes
+        self._seen_shapes.add(shape_key)
+        valid = (store.valid if mask is None
+                 else jnp.logical_and(store.valid, mask))
+        marks: Dict[str, float] = {}
+
+        def fence(arrays) -> None:
+            jax.block_until_ready(arrays)
+            marks["stage0"] = time.perf_counter()
+
+        s, i = self.backend.search_fenced(
+            jnp.asarray(q_pad), state, store.db, valid,
+            sq_prefix=store.sq_prefix,
+            n_total=store.size,
+            k=self.out_k,
+            fence=fence,
+        )
+        jax.block_until_ready((s, i))
+        return (np.asarray(s), np.asarray(i), compiled,
+                marks.get("stage0"))
+
     # -- observability --------------------------------------------------------
+    def _collect_metrics(self) -> None:
+        """Scrape-time collector: counter totals + point-in-time gauges
+        under ``engine.lock``.
+
+        Registered on ``self.metrics``; runs only when something renders
+        the registry (never per request).  Lock order is engine.lock ->
+        registry lock — the same order every hot-path instrument uses, so
+        a scrape can never deadlock against a dispatch.
+        """
+        with self.lock:
+            store = self.store
+            self.stats.publish()
+            self._g_queue_depth.set(float(len(self._queue)))
+            # the store keeps plain ints under engine.lock; mirror the
+            # lifetime totals instead of double-counting increments
+            self._c_mask_hits.set_total(store.mask_cache_hits)
+            self._c_mask_misses.set_total(store.mask_cache_misses)
+            st = store.stats()
+            for key, val in (
+                ("size", st.size), ("n_active", st.n_active),
+                ("n_dead", st.n_dead), ("capacity", st.capacity),
+                ("generation", st.generation),
+                ("total_added", st.total_added),
+                ("total_deleted", st.total_deleted),
+            ):
+                self._g_store.set(float(val), key=key)
+            state = self._index_state
+            if state is not None:
+                for key, val in self.backend.gauges(state, st).items():
+                    self._g_backend.set(
+                        float(val), backend=self.backend.name, key=key)
+
     def profile_stages(self, queries, *, runs: int = 3) -> List[Dict]:
         """Per-stage wall time for a representative batch (post-warmup).
 

@@ -99,6 +99,10 @@ class DocStore:
         self._mask_cache: "OrderedDict[Tuple, Tuple[int, Array]]" = (
             OrderedDict())
         self._mask_cache_cap = 256
+        # hit/miss counters for the observability collector (mutated under
+        # engine.lock like every other store counter)
+        self.mask_cache_hits = 0
+        self.mask_cache_misses = 0
 
     # -- views the search path consumes ------------------------------------
     @property
@@ -366,8 +370,10 @@ class DocStore:
             return None
         hit = self._mask_cache.get(key)
         if hit is not None and hit[0] == self.mask_epoch:
+            self.mask_cache_hits += 1
             self._mask_cache.move_to_end(key)
             return hit[1]
+        self.mask_cache_misses += 1
         tenant, canon = key
         mask = np.ones((self.size,), bool)
         if tenant is not None:

@@ -180,6 +180,41 @@ class IndexBackend(abc.ABC):
         device arrays; the engine syncs.
         """
 
+    def search_fenced(
+        self,
+        q: Array,
+        state: IndexState,
+        db: Array,
+        valid: Array,
+        *,
+        sq_prefix: Optional[Array] = None,
+        n_total: int,
+        k: int,
+        fence,
+    ) -> Tuple[Array, Array]:
+        """`search` with a host fence at the stage-0/rescore boundary.
+
+        ``fence(arrays)`` is an engine-supplied callback: implementations
+        call it exactly once with the stage-0 outputs; the engine
+        ``block_until_ready``s them there and timestamps the boundary
+        (`repro.obs` trace marks).  This path trades one extra host sync
+        per batch for a real stage-0/rescore latency split — it is only
+        selected under ``obs.stage_fences``; the default serving path keeps
+        the fully fused programs.
+
+        Default: fall back to the fused `search` without calling ``fence``
+        (custom backends degrade to traces without the split).
+        """
+        return self.search(q, state, db, valid, sq_prefix=sq_prefix,
+                           n_total=n_total, k=k)
+
+    def gauges(self, state: IndexState, stats: StoreStats) -> Dict[str, float]:
+        """Point-in-time observability gauges for this state (staleness,
+        tail occupancy, code coverage, ...), published by the engine's
+        metrics collector as ``repro_backend_state{backend=...,key=...}``.
+        Keys are backend-defined; values must be numeric."""
+        return {}
+
     def needs_rebuild(self, state: IndexState, stats: StoreStats) -> bool:
         """Soft staleness: rebuild improves quality/cost but isn't required."""
         return False
@@ -427,6 +462,18 @@ class ChurnRebuildBackend(IndexBackend):
         # correctness bound: un-absorbed appended rows beyond the tail
         # window would be unreachable until the next build
         return self._tail_load(state, stats) > state.data["tail_cap"]
+
+    def gauges(self, state: IndexState, stats: StoreStats) -> Dict[str, float]:
+        tail_cap = int(state.data.get("tail_cap", 0))
+        tail_load = self._tail_load(state, stats)
+        return {
+            "tail_load": float(tail_load),
+            "tail_cap": float(tail_cap),
+            "tail_fill_frac": tail_load / tail_cap if tail_cap else 0.0,
+            "churn_since_build": float(self._churn_since_build(state, stats)),
+            "built_size": float(state.built_size),
+            "staleness_rows": float(stats.size - state.built_size),
+        }
 
 
 # -- registry ---------------------------------------------------------------

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import progressive_search
+from repro.core.progressive import rescore_ladder_jit
 from repro.core.ivf import (
     balanced_assign,
     ivf_progressive_search_kernel,
@@ -507,6 +508,84 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
                 cent_sq=state.data["cent_sq"],
             )
         return scores[:, :k], ids[:, :k]
+
+    def search_fenced(
+        self,
+        q: Array,
+        state: IndexState,
+        db: Array,
+        valid: Array,
+        *,
+        sq_prefix: Optional[Array] = None,
+        n_total: int,
+        k: int,
+        fence,
+    ) -> Tuple[Array, Array]:
+        if state.data.get("flat"):
+            scores, cand = progressive_search(
+                q, db, self.sched,
+                sq_prefix=sq_prefix, index_dims=self.dims,
+                valid=valid, block_n=min(self.block_n, db.shape[0]),
+                metric=self.metric, stage0_only=True,
+            )
+            fence((scores, cand))
+            ladder_stages = self.sched.stages[1:]
+        else:
+            tail = jnp.asarray(self._tail_ids(state, n_total))
+            n_probe = min(self.n_probe, state.data["n_lists"])
+            if state.data["pack"] is not None:
+                scores, cand = ivf_progressive_search_kernel(
+                    q, db, state.data["centroids"], state.data["lists"],
+                    self.sched, n_probe=n_probe,
+                    valid=valid, sq_prefix=sq_prefix, index_dims=self.dims,
+                    extra_cand=tail, metric=self.metric,
+                    cent_sq=state.data["cent_sq"], pack=state.data["pack"],
+                    merge=self.kernel_merge,
+                    pq_oversample=(self.pq_oversample
+                                   if self.stage0_dtype == "pq" else 1),
+                    interpret=self._interpret(),
+                    stage0_only=True,
+                )
+                fence((scores, cand))
+                ladder_stages = self.sched.stages[1:]
+            else:
+                # the sched path has no stage-0 scores: probing only gathers
+                # candidates, and ALL schedule stages rescore them
+                scores, cand = ivf_progressive_search_sched(
+                    q, db, state.data["centroids"], state.data["lists"],
+                    self.sched, n_probe=n_probe,
+                    valid=valid, sq_prefix=sq_prefix, index_dims=self.dims,
+                    extra_cand=tail, metric=self.metric,
+                    cent_sq=state.data["cent_sq"],
+                    stage0_only=True,
+                )
+                fence(cand)
+                ladder_stages = self.sched.stages
+        scores, ids = rescore_ladder_jit(
+            q, db, cand, ladder_stages,
+            sq_prefix=sq_prefix, index_dims=self.dims,
+            valid=valid, metric=self.metric, scores=scores,
+        )
+        return scores[:, :k], ids[:, :k]
+
+    def gauges(self, state: IndexState, stats: StoreStats):
+        out = super().gauges(state, stats)
+        if state.data.get("flat"):
+            return out
+        n_lists = state.data["n_lists"]
+        max_len = state.data["max_len"]
+        fill = state.data["list_fill"]
+        out.update({
+            "n_lists": float(n_lists),
+            "list_fill_frac": (float(fill.sum()) / (n_lists * max_len)
+                               if n_lists * max_len else 0.0),
+            "append_spare_used": float(
+                max(0, int(fill.sum()) - state.built_active)),
+            "tail_pending": float(len(state.data["tail_pending"])),
+            "absorbed_rows": float(
+                state.data["absorb_upto"] - state.built_size),
+        })
+        return out
 
     def describe(self) -> str:
         return (

@@ -8,15 +8,23 @@ mask); admission control is `repro.serve.quota.TenantQuotas` in front of
 the driver's bounded queue, so a tenant at its cap gets a fast 429 while
 the queue keeps serving everyone else.
 
-Endpoints (JSON in, JSON out):
+Endpoints (JSON in, JSON out — except ``/metrics``, which is Prometheus
+text exposition):
 
   GET  /healthz          liveness: 200 once the driver thread is running
+  GET  /metrics          Prometheus text exposition of the engine registry
   GET  /v1/stats         engine + driver counters, tenants, config, quotas
+  GET  /v1/traces        recent request traces + slow-query records
   POST /v1/search        {"query": [f32...], "k", "tenant", "filter",
-                          "deadline_ms"} -> {"ids", "scores", ...}
+                          "deadline_ms"} -> {"ids", "scores", "spans", ...}
   POST /v1/docs          {"vectors": [[f32...]...], "tenant", "metadata"}
                           -> {"ids": [...]}
   POST /v1/docs/delete   {"ids": [...], "tenant"} -> {"n_deleted": ...}
+
+Every response is also counted into the engine's metrics registry
+(``repro_http_requests_total{route,status}`` +
+``repro_http_request_ms{route}``), so the server observes itself through
+the same ``/metrics`` surface it serves.
 
 Status mapping — the error taxonomy the engine grew for exactly this:
 
@@ -41,6 +49,7 @@ import asyncio
 import dataclasses
 import json
 import threading
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -63,6 +72,14 @@ _REASONS = {
     503: "Service Unavailable", 504: "Gateway Timeout",
 }
 
+# (method, path) pairs the server routes — also the bounded label universe
+# for the per-route HTTP metrics
+_ROUTE_PATHS = (
+    ("GET", "/healthz"), ("GET", "/metrics"), ("GET", "/v1/stats"),
+    ("GET", "/v1/traces"), ("POST", "/v1/search"), ("POST", "/v1/docs"),
+    ("POST", "/v1/docs/delete"),
+)
+
 
 class _HTTPError(Exception):
     """Internal control flow: a handler's early exit with a status code."""
@@ -79,6 +96,14 @@ def _body_field(body: Dict, field: str) -> Any:
         return body[field]
     except KeyError:
         raise _HTTPError(400, f"missing required field {field!r}") from None
+
+
+@dataclasses.dataclass
+class _Raw:
+    """A handler's non-JSON response body (e.g. Prometheus exposition)."""
+
+    data: bytes
+    content_type: str = "text/plain; charset=utf-8"
 
 
 class RetrievalHTTPServer:
@@ -124,6 +149,17 @@ class RetrievalHTTPServer:
         self.result_timeout = float(result_timeout)
         self.max_body = int(max_body)
         self._server: Optional[asyncio.base_events.Server] = None
+        # HTTP-layer metrics live in the engine's registry so one /metrics
+        # scrape covers the whole serving spine; quota rejections join it
+        reg = engine.metrics
+        self._c_http = reg.counter(
+            "repro_http_requests_total",
+            "HTTP responses, by route and status code",
+            labels=("route", "status"))
+        self._h_http = reg.histogram(
+            "repro_http_request_ms", "HTTP request handling latency",
+            labels=("route",))
+        self.quotas.bind_registry(reg)
 
     # -- lifecycle -----------------------------------------------------------
     async def start(self) -> None:
@@ -206,10 +242,14 @@ class RetrievalHTTPServer:
                               status: int, payload: Dict,
                               headers: Dict[str, str],
                               keep_alive: bool) -> None:
-        data = json.dumps(payload).encode()
+        if isinstance(payload, _Raw):
+            data, content_type = payload.data, payload.content_type
+        else:
+            data, content_type = json.dumps(payload).encode(), \
+                "application/json"
         head = [
             f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}",
-            "Content-Type: application/json",
+            f"Content-Type: {content_type}",
             f"Content-Length: {len(data)}",
             f"Connection: {'keep-alive' if keep_alive else 'close'}",
         ]
@@ -220,13 +260,31 @@ class RetrievalHTTPServer:
     # -- routing -------------------------------------------------------------
     async def _route(self, method: str, path: str,
                      body: bytes) -> Tuple[int, Dict, Dict[str, str]]:
+        """Instrumented routing: every response lands in the registry's
+        per-route status counter and latency histogram (unknown paths
+        collapse into one ``__other__`` route so scans can't explode the
+        label space past the registry's own series cap)."""
+        t0 = time.perf_counter()
+        status, payload, headers = await self._route_inner(
+            method, path, body)
+        bare = path.split("?", 1)[0]
+        route = bare if any(p == bare for (_, p) in _ROUTE_PATHS) \
+            else "__other__"
+        self._c_http.inc(route=route, status=status)
+        self._h_http.observe((time.perf_counter() - t0) * 1e3, route=route)
+        return status, payload, headers
+
+    async def _route_inner(self, method: str, path: str,
+                           body: bytes) -> Tuple[int, Dict, Dict[str, str]]:
         if body == b"__too_large__":
             return 413, {"error": "request body exceeds "
                                   f"{self.max_body} bytes"}, {}
         path = path.split("?", 1)[0]
         routes = {
             ("GET", "/healthz"): self._do_health,
+            ("GET", "/metrics"): self._do_metrics,
             ("GET", "/v1/stats"): self._do_stats,
+            ("GET", "/v1/traces"): self._do_traces,
             ("POST", "/v1/search"): self._do_search,
             ("POST", "/v1/docs"): self._do_add,
             ("POST", "/v1/docs/delete"): self._do_delete,
@@ -286,6 +344,16 @@ class RetrievalHTTPServer:
             raise _HTTPError(503, "engine driver is not running")
         return {"status": "ok", "n_docs": self.engine.n_docs}
 
+    def _do_metrics(self, body: Dict) -> _Raw:
+        return _Raw(self.engine.metrics.render_prometheus().encode(),
+                    "text/plain; version=0.0.4; charset=utf-8")
+
+    def _do_traces(self, body: Dict) -> Dict:
+        return {
+            "traces": self.engine.trace_ring.snapshot(),
+            "slow_queries": self.engine.slow_log.recent(),
+        }
+
     def _do_stats(self, body: Dict) -> Dict:
         with self.engine.lock:
             return {
@@ -315,12 +383,22 @@ class RetrievalHTTPServer:
         finally:
             self.quotas.release(tenant)
         live = result.doc_ids >= 0             # drop padded empty slots
+        st = result.stats
         return {
             "ids": result.doc_ids[live].tolist(),
             "scores": result.scores[live].astype(float).tolist(),
             "request_id": result.request_id,
             "store_generation": result.store_generation,
-            "latency_ms": result.stats.latency_ms,
+            "latency_ms": st.latency_ms,
+            # latency decomposition: queue_ms + compute_ms ~= latency_ms;
+            # stage0/rescore split the compute only under obs.stage_fences
+            # (null otherwise — the keys are always present)
+            "spans": {
+                "queue_ms": st.queue_ms,
+                "compute_ms": st.compute_ms,
+                "stage0_ms": st.stage0_ms,
+                "rescore_ms": st.rescore_ms,
+            },
         }
 
     def _do_add(self, body: Dict) -> Dict:

@@ -21,6 +21,8 @@ from __future__ import annotations
 import threading
 from typing import Dict, Optional
 
+from repro.obs import NULL_INSTRUMENT
+
 
 class QuotaExceeded(RuntimeError):
     """A tenant hit one of its admission limits (the HTTP layer's 429)."""
@@ -61,6 +63,16 @@ class TenantQuotas:
         self._overrides = {t: dict(o) for t, o in (overrides or {}).items()}
         self._inflight: Dict[str, int] = {}
         self._lock = threading.Lock()
+        self._c_rejections = NULL_INSTRUMENT
+
+    def bind_registry(self, registry) -> None:
+        """Count rejections in a `repro.obs.MetricsRegistry` as
+        ``repro_quota_rejections_total{tenant,limit}`` (the registry's
+        series cap bounds an unruly tenant universe)."""
+        self._c_rejections = registry.counter(
+            "repro_quota_rejections_total",
+            "Per-tenant admission rejections, by limit hit",
+            labels=("tenant", "limit"))
 
     def _limit(self, tenant: str, name: str, default: Optional[int]):
         return self._overrides.get(tenant, {}).get(name, default)
@@ -78,6 +90,7 @@ class TenantQuotas:
             cap = self._limit(tenant, "max_inflight", self._max_inflight)
             held = self._inflight.get(tenant, 0)
             if cap is not None and held >= cap:
+                self._c_rejections.inc(tenant=tenant, limit="inflight")
                 raise QuotaExceeded(
                     tenant, "inflight",
                     f"tenant {tenant!r} already has {held} searches in "
@@ -105,6 +118,7 @@ class TenantQuotas:
             return
         cap = self._limit(tenant, "max_docs", self._max_docs)
         if cap is not None and current + adding > cap:
+            self._c_rejections.inc(tenant=tenant, limit="docs")
             raise QuotaExceeded(
                 tenant, "docs",
                 f"tenant {tenant!r} holds {current} docs; adding {adding} "
