@@ -31,11 +31,19 @@ Public API:
   BucketPolicy                   — static batch-size ladder
   DeadlineBatcher, BatchDecision — pure deadline-flush policy (fake-clock
                                    testable) the driver thread consults
+  AdaptivePolicy, SearchOverrides
+                                 — load-adaptive degradation: queue pressure
+                                   -> per-dispatch search-knob overrides,
+                                   restored hysteretically when idle
+  QueryCache                     — exact + near-duplicate query-result cache
+                                   in front of the driver queue, invalidated
+                                   structurally by store/mask/rebuild bumps
 
 The backend protocol and implementations live in `repro.index_backends`;
 the HTTP serving front-end on top of all this lives in `repro.serve`.
 """
 
+from repro.engine.adaptive import AdaptivePolicy, SearchOverrides
 from repro.engine.batching import (
     BatchDecision,
     BucketPolicy,
@@ -45,7 +53,9 @@ from repro.engine.batching import (
     pad_batch,
 )
 from repro.engine.config import (
+    AdaptiveConfig,
     BackendConfig,
+    CacheConfig,
     EngineConfig,
     FlatConfig,
     IVFConfig,
@@ -68,15 +78,17 @@ from repro.engine.engine import (
     RetrievalResult,
     UnknownRequest,
 )
+from repro.engine.qcache import QueryCache
 from repro.engine.request import FilterError, SearchRequest, canonical_filter
 from repro.engine.store import DocStore
 from repro.index_backends import StoreStats
 
 __all__ = [
+    "AdaptivePolicy", "SearchOverrides", "QueryCache",
     "BatchDecision", "BucketPolicy", "DeadlineBatcher", "PendingRequest",
     "RequestQueue", "pad_batch",
-    "BackendConfig", "EngineConfig", "FlatConfig", "IVFConfig",
-    "QuantizedConfig", "backend_config",
+    "AdaptiveConfig", "BackendConfig", "CacheConfig", "EngineConfig",
+    "FlatConfig", "IVFConfig", "QuantizedConfig", "backend_config",
     "DeadlineExceeded", "DriverQueueFull", "DriverStats", "DriverStopped",
     "EngineDriver", "RetrievalFuture",
     "DocStore", "EngineStats", "FilterError", "RequestStats",

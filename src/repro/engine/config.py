@@ -239,6 +239,103 @@ class ObsConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Load-adaptive search policy section (see `repro.engine.adaptive`).
+
+    Level ``L >= 1`` is entered when driver queue depth reaches
+    ``depth_high * escalate_factor**(L-1)`` (or queue-wait p95 reaches the
+    analogous ``wait_high_ms`` rung); each level scales the per-dispatch
+    knobs by ``n_probe_scale**L`` / ``oversample_scale**L`` and enters the
+    progressive ladder ``d_start_shift * L`` doublings higher (clamped to
+    ``min_d_start``..d_start).  Recovery steps down one level after
+    ``hysteresis_s`` seconds of continuous calm below ``recover_frac`` of
+    the current level's entry thresholds.  ``enabled=False`` (default)
+    keeps the static path byte-identical — no degraded schedules are
+    built and no overrides ever reach a backend.
+    """
+
+    enabled: bool = False
+    levels: int = 2
+    depth_high: int = 32
+    wait_high_ms: Optional[float] = 50.0
+    escalate_factor: float = 2.0
+    recover_frac: float = 0.5
+    hysteresis_s: float = 2.0
+    n_probe_scale: float = 0.5
+    oversample_scale: float = 0.5
+    d_start_shift: int = 1
+    min_d_start: int = 8
+
+    def __post_init__(self):
+        _validate_positive(self, "levels", "depth_high", "min_d_start")
+        if self.wait_high_ms is not None and self.wait_high_ms <= 0:
+            raise ValueError(
+                f"AdaptiveConfig.wait_high_ms must be > 0 or None, got "
+                f"{self.wait_high_ms}")
+        if self.escalate_factor < 1.0:
+            raise ValueError(
+                f"AdaptiveConfig.escalate_factor must be >= 1, got "
+                f"{self.escalate_factor}")
+        if not 0 < self.recover_frac <= 1:
+            raise ValueError(
+                f"AdaptiveConfig.recover_frac must lie in (0, 1], got "
+                f"{self.recover_frac}")
+        if self.hysteresis_s < 0:
+            raise ValueError(
+                f"AdaptiveConfig.hysteresis_s must be >= 0, got "
+                f"{self.hysteresis_s}")
+        for f in ("n_probe_scale", "oversample_scale"):
+            if not 0 < getattr(self, f) <= 1:
+                raise ValueError(
+                    f"AdaptiveConfig.{f} must lie in (0, 1], got "
+                    f"{getattr(self, f)}")
+        if self.d_start_shift < 0:
+            raise ValueError(
+                f"AdaptiveConfig.d_start_shift must be >= 0, got "
+                f"{self.d_start_shift}")
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "AdaptiveConfig":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = sorted(set(d) - known)
+        if bad:
+            raise ValueError(f"AdaptiveConfig does not take field(s) {bad}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Query-result cache section (see `repro.engine.qcache`).
+
+    ``capacity`` bounds live entries (LRU beyond it); ``near_eps > 0``
+    additionally serves near-duplicate queries within that squared-L2
+    distance of a cached query (same tenant/filter mask and degradation
+    level only).  Invalidation is structural — any store generation /
+    mask-epoch / rebuild bump flushes the cache — so no TTL knob exists.
+    """
+
+    enabled: bool = False
+    capacity: int = 1024
+    near_eps: float = 0.0
+
+    def __post_init__(self):
+        _validate_positive(self, "capacity")
+        if self.near_eps < 0:
+            raise ValueError(
+                f"CacheConfig.near_eps must be >= 0, got {self.near_eps}")
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "CacheConfig":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = sorted(set(d) - known)
+        if bad:
+            raise ValueError(f"CacheConfig does not take field(s) {bad}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Full static configuration of a `RetrievalEngine`.
 
@@ -261,6 +358,9 @@ class EngineConfig:
     rebuild_mode: str = "sync"
     compact_dead_frac: Optional[float] = 0.3
     obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
+    adaptive: AdaptiveConfig = dataclasses.field(
+        default_factory=AdaptiveConfig)
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
 
     def __post_init__(self):
         _validate_positive(self, "d_emb", "d_start", "k0", "final_k",
@@ -269,6 +369,14 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.obs must be an ObsConfig, got "
                 f"{type(self.obs).__name__}")
+        if not isinstance(self.adaptive, AdaptiveConfig):
+            raise ValueError(
+                f"EngineConfig.adaptive must be an AdaptiveConfig, got "
+                f"{type(self.adaptive).__name__}")
+        if not isinstance(self.cache, CacheConfig):
+            raise ValueError(
+                f"EngineConfig.cache must be a CacheConfig, got "
+                f"{type(self.cache).__name__}")
         if self.d_start > self.d_emb:
             raise ValueError(
                 f"EngineConfig.d_start={self.d_start} exceeds "
@@ -310,6 +418,10 @@ class EngineConfig:
         d["backend"] = backend_config(name, be)
         if "obs" in d:
             d["obs"] = ObsConfig.from_dict(d["obs"])
+        if "adaptive" in d:
+            d["adaptive"] = AdaptiveConfig.from_dict(d["adaptive"])
+        if "cache" in d:
+            d["cache"] = CacheConfig.from_dict(d["cache"])
         if "buckets" in d:
             d["buckets"] = tuple(d["buckets"])
         known = {f.name for f in dataclasses.fields(cls)}
@@ -359,6 +471,28 @@ class EngineConfig:
         ap.add_argument("--stage-fences", action="store_true",
                         help="fence stage-0 vs rescore on the batched path "
                              "so traces carry the split (extra host sync)")
+        ap.add_argument("--adaptive", action="store_true",
+                        help="enable the load-adaptive search policy "
+                             "(degrade recall instead of availability "
+                             "under queue pressure)")
+        ap.add_argument("--adaptive-levels", type=int, default=2,
+                        help="number of degradation levels")
+        ap.add_argument("--adaptive-depth-high", type=int, default=32,
+                        help="driver queue depth entering level 1")
+        ap.add_argument("--adaptive-wait-high-ms", type=float, default=50.0,
+                        help="queue-wait p95 (ms) entering level 1 "
+                             "(0 = depth-only)")
+        ap.add_argument("--adaptive-hysteresis-s", type=float, default=2.0,
+                        help="continuous calm time before stepping one "
+                             "level back down")
+        ap.add_argument("--qcache", action="store_true",
+                        help="enable the mutation-aware query-result cache "
+                             "in front of the driver queue")
+        ap.add_argument("--qcache-capacity", type=int, default=1024,
+                        help="cached query results (LRU beyond this)")
+        ap.add_argument("--qcache-near-eps", type=float, default=0.0,
+                        help="serve near-duplicate queries within this "
+                             "squared-L2 distance (0 = exact-only)")
 
     @classmethod
     def from_flags(cls, args, *, d_emb: int,
@@ -392,6 +526,18 @@ class EngineConfig:
                 trace_ring=args.trace_ring,
                 stage_fences=args.stage_fences,
             ),
+            adaptive=AdaptiveConfig(
+                enabled=args.adaptive,
+                levels=args.adaptive_levels,
+                depth_high=args.adaptive_depth_high,
+                wait_high_ms=args.adaptive_wait_high_ms or None,
+                hysteresis_s=args.adaptive_hysteresis_s,
+            ),
+            cache=CacheConfig(
+                enabled=args.qcache,
+                capacity=args.qcache_capacity,
+                near_eps=args.qcache_near_eps,
+            ),
         )
 
 
@@ -411,6 +557,8 @@ def legacy_config(
     rebuild_mode: str = "sync",
     compact_dead_frac: Optional[float] = 0.3,
     obs: Optional[ObsConfig] = None,
+    adaptive: Optional[AdaptiveConfig] = None,
+    cache: Optional[CacheConfig] = None,
 ) -> "EngineConfig":
     """The deprecation shim: old-style engine kwargs -> ``EngineConfig``.
 
@@ -427,4 +575,6 @@ def legacy_config(
                  else backend_config(backend, backend_opts)),
         rebuild_mode=rebuild_mode, compact_dead_frac=compact_dead_frac,
         obs=obs if obs is not None else ObsConfig(),
+        adaptive=adaptive if adaptive is not None else AdaptiveConfig(),
+        cache=cache if cache is not None else CacheConfig(),
     )

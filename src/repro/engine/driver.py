@@ -47,8 +47,10 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from repro.engine.adaptive import AdaptivePolicy
 from repro.engine.batching import DeadlineBatcher, PendingRequest
-from repro.engine.engine import RetrievalEngine, RetrievalResult
+from repro.engine.engine import RequestStats, RetrievalEngine, RetrievalResult
+from repro.engine.qcache import QueryCache
 
 
 class DriverStopped(RuntimeError):
@@ -222,6 +224,24 @@ class EngineDriver:
         self._g_depth = engine.metrics.gauge(
             "repro_driver_queue_depth",
             "Requests pending in the driver queue")
+        # -- adaptive policy + query cache, built from the engine's config
+        # sections (both default-off; the driver owns them because the
+        # pressure signals — queue depth / queue-wait p95 — are driver-side)
+        acfg = engine.config.adaptive
+        self.adaptive: Optional[AdaptivePolicy] = (
+            AdaptivePolicy(acfg) if acfg.enabled else None)
+        if self.adaptive is not None:
+            self.adaptive.bind(engine.metrics)
+        ccfg = engine.config.cache
+        self.cache: Optional[QueryCache] = (
+            QueryCache(engine.store.d_emb, capacity=ccfg.capacity,
+                       near_eps=ccfg.near_eps) if ccfg.enabled else None)
+        if self.cache is not None:
+            self.cache.bind(engine.metrics)
+        # recent queue waits (seconds) feeding the policy's p95 signal;
+        # consumed (cleared) at each policy update so recovery sees a
+        # fresh window instead of old overload samples
+        self._wait_samples: Deque[float] = deque(maxlen=128)
         engine.metrics.register_collector(self._collect_metrics)
         self._clock = clock
         self._max_queue = int(max_queue)
@@ -321,6 +341,10 @@ class EngineDriver:
         ``stop(drain=True)``).
         """
         req = self.engine.check_request(request)
+        if self.cache is not None:
+            hit = self._cache_lookup(req)
+            if hit is not None:
+                return hit
         fut = RetrievalFuture()
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
@@ -349,6 +373,35 @@ class EngineDriver:
             if len(self._pending) > self.stats.queue_peak:
                 self.stats.queue_peak = len(self._pending)
             self._cv.notify_all()
+        return fut
+
+    def _cache_lookup(self, req: PendingRequest
+                      ) -> Optional[RetrievalFuture]:
+        """Serve ``req`` from the query cache if possible.
+
+        Runs on the client thread BEFORE the request enters the pending
+        queue, so a hit skips batch formation and dispatch entirely.  The
+        staleness stamp is read under ``engine.lock`` right here — a
+        cached entry from before any store/mask/rebuild bump can never
+        match it (the cache flushes on stamp change), so stale hits are
+        structurally impossible.  Hits bypass the driver's
+        n_submitted/n_completed accounting on purpose: those counters
+        reconcile against engine batches, and no batch ran.
+        """
+        level = self.adaptive.level if self.adaptive is not None else 0
+        stamp = self.engine.cache_stamp()
+        got = self.cache.lookup(req.query, req.k, req.mask_key, level, stamp)
+        if got is None:
+            return None
+        scores, ids, _kind = got
+        now = time.perf_counter()
+        st = RequestStats(
+            latency_ms=(now - req.t_submit) * 1e3, queue_ms=0.0,
+            compute_ms=0.0, bucket=0, batch_fill=0, compiled=False)
+        fut = RetrievalFuture()
+        fut._finish(result=RetrievalResult(
+            -1, scores, ids, st, store_generation=stamp[0], cached=True,
+            degraded_level=level))
         return fut
 
     def retrieve(self, request, *,
@@ -384,8 +437,9 @@ class EngineDriver:
                 skipped.append(p)
         self._pending.extendleft(reversed(skipped))
         now = self._clock()
-        self._h_wait.observe_many(
-            [(now - p.t_arrival) * 1e3 for p in taken])
+        waits = [(now - p.t_arrival) for p in taken]
+        self._h_wait.observe_many([w * 1e3 for w in waits])
+        self._wait_samples.extend(waits)     # adaptive-policy p95 window
         # one real-clock read for the whole batch: trace marks live on the
         # perf_counter timebase (not the injectable policy clock)
         t_batch = time.perf_counter()
@@ -394,12 +448,26 @@ class EngineDriver:
                 p.req.trace.marks["batch"] = t_batch
         return taken
 
+    def _wait_p95_ms(self) -> Optional[float]:
+        """p95 of the queue waits observed since the last policy update
+        (caller holds the cv).  The window is consumed: stale overload
+        samples must not keep blocking recovery once the queue is calm."""
+        if not self._wait_samples:
+            return None
+        xs = sorted(self._wait_samples)
+        self._wait_samples.clear()
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))] * 1e3
+
     def _collect_metrics(self) -> None:
         """Scrape-time collector: queue-depth gauge + counter totals
         (lock order: cv -> registry, same as every hot-path instrument)."""
         with self._cv:
             self._g_depth.set(float(len(self._pending)))
             self.stats.publish()
+            if self.adaptive is not None:
+                self.adaptive.publish()
+        if self.cache is not None:
+            self.cache.publish()
 
     def _finish_locked(self) -> None:
         """Cancel whatever is left and mark the driver stopped."""
@@ -415,6 +483,18 @@ class EngineDriver:
         """Run one flushed chunk through the engine and resolve its futures."""
         if not chunk:
             return
+        # count the flush FIRST: the batcher formed and flushed this batch
+        # under ``reason`` regardless of what the shedding below leaves of
+        # it.  (Counting after the shed dropped the flush entirely for a
+        # group whose members had all expired — the batch then vanished
+        # from the flush accounting while its sheds still landed in
+        # n_expired.)
+        if reason == "full":
+            self.stats.n_flush_full += 1
+        elif reason == "deadline":
+            self.stats.n_flush_deadline += 1
+        else:
+            self.stats.n_flush_drain += 1
         # drop requests whose client deadline already passed: their futures
         # fail with DeadlineExceeded and they never reach the device —
         # under overload this sheds exactly the work nobody waits for
@@ -430,15 +510,19 @@ class EngineDriver:
                 live.append(p)
         chunk = live
         if not chunk:
+            # every member expired: nothing to dispatch — no empty/
+            # degenerate batch may reach the engine
             return
-        if reason == "full":
-            self.stats.n_flush_full += 1
-        elif reason == "deadline":
-            self.stats.n_flush_deadline += 1
-        else:
-            self.stats.n_flush_drain += 1
+        overrides = None
+        if self.adaptive is not None:
+            overrides = self.engine.overrides_for_level(self.adaptive.level)
+        # static path keeps the bare legacy call shape: callers interposing
+        # on execute_batch (tests, tracing wrappers) see no new kwarg
+        # unless the policy actually degrades the dispatch
+        kw = {} if overrides is None or overrides.level == 0 \
+            else {"overrides": overrides}
         try:
-            results = self.engine.execute_batch([p.req for p in chunk])
+            results = self.engine.execute_batch([p.req for p in chunk], **kw)
         except Exception as e:
             # fail this batch's clients, keep serving the next one
             self.stats.n_batch_errors += 1
@@ -448,6 +532,16 @@ class EngineDriver:
         for p, res in zip(chunk, results):
             p.future._finish(result=res)
         self.stats.n_completed += len(chunk)
+        if self.cache is not None:
+            # stamp read AFTER the batch: if a mutation landed mid-window
+            # the delivered results carry the older store_generation and
+            # are skipped — never inserted against the newer stamp
+            stamp = self.engine.cache_stamp()
+            for p, res in zip(chunk, results):
+                if res.store_generation != stamp[0]:
+                    continue
+                self.cache.insert(p.req.query, res.scores, res.doc_ids,
+                                  p.req.mask_key, res.degraded_level, stamp)
 
     def _run(self) -> None:
         try:
@@ -464,6 +558,14 @@ class EngineDriver:
                                 self.engine.policy.max_size)
                             reason = "drain"
                             break
+                        if self.adaptive is not None:
+                            # one controller step per loop iteration: the
+                            # depth/wait signals are already in hand here,
+                            # and single-writer discipline holds (only this
+                            # thread moves the level)
+                            self.adaptive.update(
+                                len(self._pending), self._wait_p95_ms(),
+                                self._clock())
                         d = self.batcher.decide(
                             len(self._pending),
                             self._pending[0].t_arrival
@@ -474,6 +576,13 @@ class EngineDriver:
                             chunk, reason = self._take_locked(d.n), d.reason
                         elif d.action == "wait":
                             self._cv.wait(d.wait_s)
+                        elif (self.adaptive is not None
+                                and self.adaptive.level > 0):
+                            # idle while degraded: wake periodically so the
+                            # hysteretic recovery can tick even with no
+                            # arrivals to prod the loop
+                            self._cv.wait(
+                                max(0.05, self.adaptive.cfg.hysteresis_s / 4))
                         else:                     # idle: block for arrivals
                             self._cv.wait()
                     self._cv.notify_all()         # queue space freed

@@ -61,6 +61,7 @@ from repro.core import (
     stage_dims,
     truncated_search,
 )
+from repro.engine.adaptive import SearchOverrides
 from repro.engine.batching import BucketPolicy, PendingRequest, RequestQueue, pad_batch
 from repro.engine.config import EngineConfig, legacy_config
 from repro.engine.request import SearchRequest
@@ -128,6 +129,10 @@ class RetrievalResult:
     # under ``engine.lock`` to detect that its ids predate a remap it missed
     # (results still parked in ``poll`` are remapped by the engine itself).
     store_generation: int = -1
+    # served straight from the driver's query cache (no dispatch ran)
+    cached: bool = False
+    # adaptive-policy pressure level the search ran at (0 = full quality)
+    degraded_level: int = 0
 
 
 # engine counter attribute -> (registry metric name, help text).  The
@@ -412,6 +417,35 @@ class RetrievalEngine:
         # columns (a single-stage schedule keeps k0); slice to final_k so the
         # engine's documented contract holds for every schedule shape
         self.out_k = min(self.sched.final_k, self.sched.stages[-1].k)
+        # -- adaptive degradation ladder: one SearchOverrides per pressure
+        # level.  A degraded schedule enters the ladder at a LOWER d_start
+        # rung (cheaper full-corpus stage-0, same d_max and final_k — the
+        # result width never moves), so its stage dims are unioned into
+        # self.dims and the store precomputes their sq-prefix columns too
+        # (falling back to on-the-fly norms would negate the savings).
+        # With adaptive disabled this loop never runs: dims, store layout
+        # and every compiled program stay byte-identical to the static path.
+        acfg = config.adaptive
+        self._level_overrides: Dict[int, SearchOverrides] = {}
+        if acfg.enabled:
+            all_dims = set(self.dims)
+            for lvl in range(1, acfg.levels + 1):
+                d_deg = max(acfg.min_d_start,
+                            self.sched.d_start >> (lvl * acfg.d_start_shift))
+                d_deg = min(d_deg, self.sched.d_start)
+                sched_l = None
+                if d_deg < self.sched.d_start:
+                    sched_l = make_schedule(
+                        d_deg, self.sched.d_max, self.sched.k0,
+                        final_k=self.sched.final_k)
+                    all_dims.update(stage_dims(sched_l))
+                self._level_overrides[lvl] = SearchOverrides(
+                    level=lvl,
+                    n_probe_frac=acfg.n_probe_scale ** lvl,
+                    oversample_frac=acfg.oversample_scale ** lvl,
+                    sched=sched_l,
+                )
+            self.dims = tuple(sorted(all_dims))
         self.metric = config.metric
         self.block_n = int(config.block_n)
         self.store = DocStore(config.d_emb, self.dims,
@@ -474,6 +508,12 @@ class RetrievalEngine:
                 config.backend.name, sched=self.sched, metric=config.metric,
                 block_n=self.block_n, **config.backend.opts(),
             ))
+        if self._level_overrides and self.dims != self.backend.dims:
+            # adaptive added degraded-schedule dims: backends look up
+            # sq-prefix columns BY VALUE (dims.index), so handing them the
+            # store's superset tuple keeps every lookup exact while the
+            # degraded stage-0 dims gain precomputed norms too
+            self.backend.dims = self.dims
         self.rebuild_mode = config.rebuild_mode
         self.compact_dead_frac = config.compact_dead_frac
         self.on_remap: List[Callable[[np.ndarray], None]] = []
@@ -774,12 +814,16 @@ class RetrievalEngine:
         with self.lock:
             return len(self._queue)
 
-    def _execute(self, reqs: List[PendingRequest]) -> List[RetrievalResult]:
+    def _execute(self, reqs: List[PendingRequest],
+                 overrides: Optional[SearchOverrides] = None,
+                 ) -> List[RetrievalResult]:
         """Run one bucket-shaped batch (caller holds ``self.lock``).
 
         Every request in the chunk must share one ``mask_key`` — the batch
         dispatches with a single row bitmask AND-ed into the validity mask.
         ``step``/``execute_batch`` group by key before calling here.
+        ``overrides`` (adaptive policy) degrades the whole batch's search
+        knobs; ``None`` is the static full-quality path.
         """
         self._maybe_rebuild_locked()              # safe point between batches
         # compile AFTER the rebuild safe point: appends/compaction already
@@ -790,9 +834,10 @@ class RetrievalEngine:
         qb = pad_batch(np.stack([r.query for r in reqs]), bucket)
         if self._stage_fences:
             scores, ids, compiled, t_stage0 = self._dispatch_fenced(
-                qb, mask=mask)
+                qb, mask=mask, overrides=overrides)
         else:
-            scores, ids, compiled = self._dispatch(qb, mask=mask)
+            scores, ids, compiled = self._dispatch(
+                qb, mask=mask, overrides=overrides)
             t_stage0 = None
         t_done = time.perf_counter()
         compute_ms = (t_done - t_dispatch) * 1e3
@@ -841,6 +886,7 @@ class RetrievalEngine:
             out.append(RetrievalResult(
                 r.request_id, scores[j][:k], ids[j][:k], st,
                 store_generation=self.store.generation,
+                degraded_level=0 if overrides is None else overrides.level,
             ))
             if spans is not None:
                 records.append({
@@ -890,7 +936,8 @@ class RetrievalEngine:
             return len(reqs)
 
     def execute_batch(
-        self, reqs: Sequence[PendingRequest]
+        self, reqs: Sequence[PendingRequest],
+        overrides: Optional[SearchOverrides] = None,
     ) -> List[RetrievalResult]:
         """Dispatch pre-formed requests immediately, bypassing the queue.
 
@@ -921,7 +968,7 @@ class RetrievalEngine:
                        and reqs[off].mask_key == chunk[0].mask_key):
                     chunk.append(reqs[off])
                     off += 1
-                out.extend(self._execute(chunk))
+                out.extend(self._execute(chunk, overrides=overrides))
         return out
 
     def run_until_idle(self) -> int:
@@ -942,13 +989,17 @@ class RetrievalEngine:
         with self.lock:
             self._maybe_rebuild_locked()
             probe = np.zeros((1, self.store.d_emb), np.float32)
-            for b in self.policy.sizes:
-                qb = np.repeat(probe, b, axis=0)
-                # warm whichever dispatch path requests will actually take
-                if self._stage_fences:
-                    self._dispatch_fenced(qb)
-                else:
-                    self._dispatch(qb)
+            # warm the static path AND every adaptive degradation level:
+            # each level is one extra compiled program per bucket (knobs are
+            # static argnames), so pressure transitions never compile
+            for ov in (None, *self._level_overrides.values()):
+                for b in self.policy.sizes:
+                    qb = np.repeat(probe, b, axis=0)
+                    # warm whichever dispatch path requests actually take
+                    if self._stage_fences:
+                        self._dispatch_fenced(qb, overrides=ov)
+                    else:
+                        self._dispatch(qb, overrides=ov)
 
     # -- synchronous batch API (pipeline / benchmarks) ------------------------
     def search(self, queries, *, k: Optional[int] = None,
@@ -999,7 +1050,24 @@ class RetrievalEngine:
         out_i = [np.asarray(i)[:take, :out_k] for _, i, take in pend]
         return np.concatenate(out_s), np.concatenate(out_i)
 
-    def _dispatch_async(self, q_pad: np.ndarray, mask=None):
+    def overrides_for_level(self, level: int) -> Optional[SearchOverrides]:
+        """Degradation knobs for an adaptive pressure level (None for
+        level 0 / adaptive disabled; deeper-than-configured levels clamp
+        to the deepest configured one)."""
+        if level <= 0 or not self._level_overrides:
+            return None
+        return self._level_overrides.get(
+            min(level, max(self._level_overrides)))
+
+    def cache_stamp(self) -> Tuple[int, int, int]:
+        """The query cache's staleness stamp: (store generation, mask
+        epoch, rebuild count) read atomically under ``engine.lock``.  Any
+        component moving invalidates every cached result."""
+        with self.lock:
+            return (self.store.generation, self.store.mask_epoch,
+                    self.stats.n_rebuilds)
+
+    def _dispatch_async(self, q_pad: np.ndarray, mask=None, overrides=None):
         """Hand one padded bucket to the backend; returns device arrays
         without forcing a sync (the caller decides when to block).
 
@@ -1012,25 +1080,31 @@ class RetrievalEngine:
         """
         store = self.store
         state = self._ensure_index()
-        shape_key = (q_pad.shape[0], store.capacity, state.shape_key)
+        shape_key = (q_pad.shape[0], store.capacity, state.shape_key,
+                     overrides)
         compiled = shape_key not in self._seen_shapes
         self._seen_shapes.add(shape_key)
         valid = (store.valid if mask is None
                  else jnp.logical_and(store.valid, mask))
+        # overrides passed only when set: pre-existing custom backends that
+        # never heard of the kwarg keep working on the static path
+        kw = {} if overrides is None else {"overrides": overrides}
         s, i = self.backend.search(
             jnp.asarray(q_pad), state, store.db, valid,
             sq_prefix=store.sq_prefix,
             n_total=store.size,
             k=self.out_k,
+            **kw,
         )
         return s, i, compiled
 
-    def _dispatch(self, q_pad: np.ndarray, mask=None):
-        s, i, compiled = self._dispatch_async(q_pad, mask=mask)
+    def _dispatch(self, q_pad: np.ndarray, mask=None, overrides=None):
+        s, i, compiled = self._dispatch_async(q_pad, mask=mask,
+                                              overrides=overrides)
         jax.block_until_ready((s, i))
         return np.asarray(s), np.asarray(i), compiled
 
-    def _dispatch_fenced(self, q_pad: np.ndarray, mask=None):
+    def _dispatch_fenced(self, q_pad: np.ndarray, mask=None, overrides=None):
         """Dispatch with a ``block_until_ready`` fence at the stage-0
         boundary (``obs.stage_fences``), so the stage-0 / rescore split is
         measurable.  Two device round trips instead of one fused program —
@@ -1040,7 +1114,7 @@ class RetrievalEngine:
         store = self.store
         state = self._ensure_index()
         shape_key = ("fenced", q_pad.shape[0], store.capacity,
-                     state.shape_key)
+                     state.shape_key, overrides)
         compiled = shape_key not in self._seen_shapes
         self._seen_shapes.add(shape_key)
         valid = (store.valid if mask is None
@@ -1051,12 +1125,14 @@ class RetrievalEngine:
             jax.block_until_ready(arrays)
             marks["stage0"] = time.perf_counter()
 
+        kw = {} if overrides is None else {"overrides": overrides}
         s, i = self.backend.search_fenced(
             jnp.asarray(q_pad), state, store.db, valid,
             sq_prefix=store.sq_prefix,
             n_total=store.size,
             k=self.out_k,
             fence=fence,
+            **kw,
         )
         jax.block_until_ready((s, i))
         return (np.asarray(s), np.asarray(i), compiled,

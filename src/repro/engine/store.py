@@ -99,8 +99,13 @@ class DocStore:
         self._mask_cache: "OrderedDict[Tuple, Tuple[int, Array]]" = (
             OrderedDict())
         self._mask_cache_cap = 256
-        # hit/miss counters for the observability collector (mutated under
-        # engine.lock like every other store counter)
+        # hit/miss counters under the EngineStats discipline: plain ints
+        # are the source of truth, mutated ONLY under engine.lock (every
+        # mask_for_key caller — _execute / search — already holds it) and
+        # published into the registry at scrape time by the engine's
+        # collector, which also takes engine.lock.  Readers outside the
+        # lock (e.g. /v1/stats) must go through mask_cache_stats() /
+        # the collector — never the raw attributes
         self.mask_cache_hits = 0
         self.mask_cache_misses = 0
 
@@ -389,6 +394,17 @@ class DocStore:
         while len(self._mask_cache) > self._mask_cache_cap:
             self._mask_cache.popitem(last=False)
         return dev
+
+    def mask_cache_stats(self) -> Dict[str, int]:
+        """Snapshot of the mask-cache counters.  Call under ``engine.lock``
+        (the counters mutate there); the dict itself is then safe to hand
+        to any thread."""
+        return {
+            "hits": self.mask_cache_hits,
+            "misses": self.mask_cache_misses,
+            "entries": len(self._mask_cache),
+            "epoch": self.mask_epoch,
+        }
 
     def _field_mask(self, col: Optional[np.ndarray], op: str,
                     value) -> np.ndarray:

@@ -172,12 +172,22 @@ class IndexBackend(abc.ABC):
         sq_prefix: Optional[Array] = None,
         n_total: int,
         k: int,
+        overrides=None,
     ) -> Tuple[Array, Array]:
         """((Q, k) scores, (Q, k) int32 ids) over the live buffers.
 
         ``n_total`` is the store's current high-water row count (`store.size`
         — a host int, so tail windows never force a retrace).  May return
         device arrays; the engine syncs.
+
+        ``overrides`` is an optional duck-typed degradation bundle (the
+        adaptive policy's `SearchOverrides`: ``n_probe_frac`` /
+        ``oversample_frac`` / ``sched`` attributes, frozen and hashable so
+        it can ride jit static arguments).  Backends honour the knobs they
+        have and ignore the rest; the engine only passes it when the
+        adaptive policy is degrading, so the kwarg's default keeps custom
+        backends working unchanged.  The result width (``k`` columns) must
+        not change with ``overrides``.
         """
 
     def search_fenced(
@@ -191,6 +201,7 @@ class IndexBackend(abc.ABC):
         n_total: int,
         k: int,
         fence,
+        overrides=None,
     ) -> Tuple[Array, Array]:
         """`search` with a host fence at the stage-0/rescore boundary.
 
@@ -205,8 +216,9 @@ class IndexBackend(abc.ABC):
         Default: fall back to the fused `search` without calling ``fence``
         (custom backends degrade to traces without the split).
         """
+        kw = {} if overrides is None else {"overrides": overrides}
         return self.search(q, state, db, valid, sq_prefix=sq_prefix,
-                           n_total=n_total, k=k)
+                           n_total=n_total, k=k, **kw)
 
     def gauges(self, state: IndexState, stats: StoreStats) -> Dict[str, float]:
         """Point-in-time observability gauges for this state (staleness,

@@ -52,9 +52,16 @@ class FlatProgressiveBackend(IndexBackend):
         sq_prefix: Optional[Array] = None,
         n_total: int,
         k: int,
+        overrides=None,
     ) -> Tuple[Array, Array]:
+        # adaptive degradation: swap in the shallower schedule (higher
+        # stage-0 truncation error, same final_k → same result width);
+        # its stage dims are present in self.dims, so sq-prefix lookups
+        # stay precomputed
+        sched = self.sched if overrides is None or overrides.sched is None \
+            else overrides.sched
         scores, ids = progressive_search(
-            q, db, self.sched,
+            q, db, sched,
             sq_prefix=sq_prefix,
             index_dims=self.dims,
             valid=valid,
@@ -76,9 +83,12 @@ class FlatProgressiveBackend(IndexBackend):
         n_total: int,
         k: int,
         fence,
+        overrides=None,
     ) -> Tuple[Array, Array]:
+        sched = self.sched if overrides is None or overrides.sched is None \
+            else overrides.sched
         scores, cand = progressive_search(
-            q, db, self.sched,
+            q, db, sched,
             sq_prefix=sq_prefix,
             index_dims=self.dims,
             valid=valid,
@@ -88,7 +98,7 @@ class FlatProgressiveBackend(IndexBackend):
         )
         fence((scores, cand))
         scores, ids = rescore_ladder_jit(
-            q, db, cand, self.sched.stages[1:],
+            q, db, cand, sched.stages[1:],
             sq_prefix=sq_prefix, index_dims=self.dims,
             valid=valid, metric=self.metric, scores=scores,
         )

@@ -476,17 +476,23 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         sq_prefix: Optional[Array] = None,
         n_total: int,
         k: int,
+        overrides=None,
     ) -> Tuple[Array, Array]:
+        # adaptive degradation knobs, all static per dispatch (one extra
+        # compiled program per level, pre-warmed by engine.warmup): probe
+        # fewer lists, shrink the PQ oversample pool, and — on the paths
+        # whose stage-0 dim isn't baked into packed slabs — enter the
+        # progressive ladder at a lower d_start rung
+        sched, n_probe, pq_os = self._apply_overrides(state, overrides)
         if state.data.get("flat"):
             scores, ids = progressive_search(
-                q, db, self.sched,
+                q, db, sched,
                 sq_prefix=sq_prefix, index_dims=self.dims,
                 valid=valid, block_n=min(self.block_n, db.shape[0]),
                 metric=self.metric,
             )
             return scores[:, :k], ids[:, :k]
         tail = jnp.asarray(self._tail_ids(state, n_total))
-        n_probe = min(self.n_probe, state.data["n_lists"])
         if state.data["pack"] is not None:
             scores, ids = ivf_progressive_search_kernel(
                 q, db, state.data["centroids"], state.data["lists"],
@@ -495,19 +501,42 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
                 extra_cand=tail, metric=self.metric,
                 cent_sq=state.data["cent_sq"], pack=state.data["pack"],
                 merge=self.kernel_merge,
-                pq_oversample=(self.pq_oversample
-                               if self.stage0_dtype == "pq" else 1),
+                pq_oversample=pq_os,
                 interpret=self._interpret(),
             )
         else:
             scores, ids = ivf_progressive_search_sched(
                 q, db, state.data["centroids"], state.data["lists"],
-                self.sched, n_probe=n_probe,
+                sched, n_probe=n_probe,
                 valid=valid, sq_prefix=sq_prefix, index_dims=self.dims,
                 extra_cand=tail, metric=self.metric,
                 cent_sq=state.data["cent_sq"],
             )
         return scores[:, :k], ids[:, :k]
+
+    def _apply_overrides(self, state: IndexState, overrides):
+        """Resolve (sched, n_probe, pq_oversample) for one dispatch.
+
+        ``overrides.sched`` only applies where the stage-0 dim is not
+        frozen into a build artifact (the flat fallback and the XLA sched
+        path); packed int8/PQ member slabs pin their stage-0 dim/codes at
+        build time, so those paths degrade via n_probe/oversample alone.
+        """
+        pq_os = self.pq_oversample if self.stage0_dtype == "pq" else 1
+        if state.data.get("flat"):
+            n_probe = self.n_probe
+        else:
+            n_probe = min(self.n_probe, state.data["n_lists"])
+        if overrides is None:
+            return self.sched, n_probe, pq_os
+        sched = self.sched if overrides.sched is None else overrides.sched
+        if not state.data.get("flat"):
+            n_probe = min(
+                max(1, int(round(self.n_probe * overrides.n_probe_frac))),
+                state.data["n_lists"])
+        if pq_os > 1:
+            pq_os = max(1, int(round(pq_os * overrides.oversample_frac)))
+        return sched, n_probe, pq_os
 
     def search_fenced(
         self,
@@ -520,19 +549,20 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
         n_total: int,
         k: int,
         fence,
+        overrides=None,
     ) -> Tuple[Array, Array]:
+        sched, n_probe, pq_os = self._apply_overrides(state, overrides)
         if state.data.get("flat"):
             scores, cand = progressive_search(
-                q, db, self.sched,
+                q, db, sched,
                 sq_prefix=sq_prefix, index_dims=self.dims,
                 valid=valid, block_n=min(self.block_n, db.shape[0]),
                 metric=self.metric, stage0_only=True,
             )
             fence((scores, cand))
-            ladder_stages = self.sched.stages[1:]
+            ladder_stages = sched.stages[1:]
         else:
             tail = jnp.asarray(self._tail_ids(state, n_total))
-            n_probe = min(self.n_probe, state.data["n_lists"])
             if state.data["pack"] is not None:
                 scores, cand = ivf_progressive_search_kernel(
                     q, db, state.data["centroids"], state.data["lists"],
@@ -541,8 +571,7 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
                     extra_cand=tail, metric=self.metric,
                     cent_sq=state.data["cent_sq"], pack=state.data["pack"],
                     merge=self.kernel_merge,
-                    pq_oversample=(self.pq_oversample
-                                   if self.stage0_dtype == "pq" else 1),
+                    pq_oversample=pq_os,
                     interpret=self._interpret(),
                     stage0_only=True,
                 )
@@ -553,14 +582,14 @@ class IVFProgressiveBackend(ChurnRebuildBackend):
                 # candidates, and ALL schedule stages rescore them
                 scores, cand = ivf_progressive_search_sched(
                     q, db, state.data["centroids"], state.data["lists"],
-                    self.sched, n_probe=n_probe,
+                    sched, n_probe=n_probe,
                     valid=valid, sq_prefix=sq_prefix, index_dims=self.dims,
                     extra_cand=tail, metric=self.metric,
                     cent_sq=state.data["cent_sq"],
                     stage0_only=True,
                 )
                 fence(cand)
-                ladder_stages = self.sched.stages
+                ladder_stages = sched.stages
         scores, ids = rescore_ladder_jit(
             q, db, cand, ladder_stages,
             sq_prefix=sq_prefix, index_dims=self.dims,

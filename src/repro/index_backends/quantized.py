@@ -260,9 +260,14 @@ class QuantizedProgressiveBackend(ChurnRebuildBackend):
         sq_prefix: Optional[Array] = None,
         n_total: int,
         k: int,
+        overrides=None,
     ) -> Tuple[Array, Array]:
         idx = state.data["idx"]
         tail = jnp.asarray(self._tail_ids(state, n_total))
+        # adaptive degradation: the stage-0 codes are built at a fixed dim,
+        # so the only per-dispatch lever here is the PQ oversample pool
+        # (int8 has none — its stage-0 cost is pinned by the code block)
+        pq_os = self._oversample(overrides)
         kw = dict(
             metric=self.metric,
             db=db,                       # rescore against the LIVE buffer
@@ -281,15 +286,21 @@ class QuantizedProgressiveBackend(ChurnRebuildBackend):
                 scores, ids = pq_progressive_search_kernel(
                     q, idx, self.sched, merge=self.kernel_merge,
                     block_m=self.kernel_block_m,
-                    oversample=self.pq_oversample,
+                    oversample=pq_os,
                     interpret=self._interpret(), **kw)
             else:
                 scores, ids = pq_progressive_search(
-                    q, idx, self.sched, oversample=self.pq_oversample, **kw)
+                    q, idx, self.sched, oversample=pq_os, **kw)
         else:
             scores, ids = quantized_progressive_search(
                 q, idx, self.sched, **kw)
         return scores[:, :k], ids[:, :k]
+
+    def _oversample(self, overrides) -> int:
+        if overrides is None:
+            return self.pq_oversample
+        return max(1, int(round(
+            self.pq_oversample * overrides.oversample_frac)))
 
     def search_fenced(
         self,
@@ -302,9 +313,11 @@ class QuantizedProgressiveBackend(ChurnRebuildBackend):
         n_total: int,
         k: int,
         fence,
+        overrides=None,
     ) -> Tuple[Array, Array]:
         idx = state.data["idx"]
         tail = jnp.asarray(self._tail_ids(state, n_total))
+        pq_os = self._oversample(overrides)
         kw = dict(
             metric=self.metric, db=db, valid=valid,
             row_limit=jnp.asarray(state.data["coded_upto"]),
@@ -319,11 +332,11 @@ class QuantizedProgressiveBackend(ChurnRebuildBackend):
                 scores, cand = pq_progressive_search_kernel(
                     q, idx, self.sched, merge=self.kernel_merge,
                     block_m=self.kernel_block_m,
-                    oversample=self.pq_oversample,
+                    oversample=pq_os,
                     interpret=self._interpret(), **kw)
             else:
                 scores, cand = pq_progressive_search(
-                    q, idx, self.sched, oversample=self.pq_oversample, **kw)
+                    q, idx, self.sched, oversample=pq_os, **kw)
         else:
             scores, cand = quantized_progressive_search(
                 q, idx, self.sched, **kw)

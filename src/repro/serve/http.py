@@ -309,6 +309,9 @@ class RetrievalHTTPServer:
             # handlers are blocking (driver futures, device work): run them
             # on the default executor so the accept loop stays responsive
             payload = await loop.run_in_executor(None, handler, parsed)
+            if isinstance(payload, tuple):     # (payload, extra headers)
+                payload, headers = payload
+                return 200, payload, headers
             return 200, payload, {}
         except _HTTPError as e:
             return e.status, {"error": str(e)}, e.headers
@@ -356,17 +359,38 @@ class RetrievalHTTPServer:
 
     def _do_stats(self, body: Dict) -> Dict:
         with self.engine.lock:
-            return {
+            out = {
                 "engine": self.engine.stats.summary(),
                 "driver": self.driver.stats.summary(),
                 "store": dataclasses.asdict(self.engine.store.stats()),
+                # snapshot taken under engine.lock — the counters mutate
+                # there on the driver thread, so this read is never torn
+                "mask_cache": self.engine.store.mask_cache_stats(),
                 "tenants": self.engine.store.tenants(),
                 "quotas": self.quotas.snapshot(),
                 "config": self.engine.config.to_dict(),
             }
+        out["adaptive"] = (self.driver.adaptive.summary()
+                           if self.driver.adaptive is not None
+                           else {"enabled": False})
+        out["cache"] = (self.driver.cache.summary()
+                        if self.driver.cache is not None
+                        else {"enabled": False})
+        return out
 
-    def _do_search(self, body: Dict) -> Dict:
+    def _do_search(self, body: Dict) -> Tuple[Dict, Dict[str, str]]:
         tenant = self._check_tenant(body)
+        # Quota-lifecycle discipline: EVERYTHING that can reject the
+        # request (tenant check, query parsing, SearchRequest validation)
+        # runs BEFORE quotas.acquire, so a rejection never holds a slot;
+        # acquire itself only increments after its cap check passes (no
+        # partial state on QuotaExceeded).  From acquire onward every
+        # path — check_request raising in submit, DriverQueueFull,
+        # DriverStopped racing the submit, result timeout, dispatch
+        # errors — unwinds through the try/finally below, so release()
+        # always runs exactly once and an in-flight slot can never leak
+        # (the regression test hammers these paths and asserts
+        # quotas.inflight returns to zero).
         query = np.asarray(_body_field(body, "query"), np.float32)
         request = SearchRequest(
             query=query,
@@ -384,12 +408,19 @@ class RetrievalHTTPServer:
             self.quotas.release(tenant)
         live = result.doc_ids >= 0             # drop padded empty slots
         st = result.stats
+        headers: Dict[str, str] = {}
+        if self.driver.adaptive is not None:
+            headers["degraded"] = str(result.degraded_level)
+        if self.driver.cache is not None:
+            headers["cache"] = "hit" if result.cached else "miss"
         return {
             "ids": result.doc_ids[live].tolist(),
             "scores": result.scores[live].astype(float).tolist(),
             "request_id": result.request_id,
             "store_generation": result.store_generation,
             "latency_ms": st.latency_ms,
+            "cached": result.cached,
+            "degraded_level": result.degraded_level,
             # latency decomposition: queue_ms + compute_ms ~= latency_ms;
             # stage0/rescore split the compute only under obs.stage_fences
             # (null otherwise — the keys are always present)
@@ -399,7 +430,7 @@ class RetrievalHTTPServer:
                 "stage0_ms": st.stage0_ms,
                 "rescore_ms": st.rescore_ms,
             },
-        }
+        }, headers
 
     def _do_add(self, body: Dict) -> Dict:
         tenant = self._check_tenant(body)

@@ -16,10 +16,12 @@ import pytest
 from repro.engine import (
     BucketPolicy,
     DeadlineBatcher,
+    DeadlineExceeded,
     DriverQueueFull,
     DriverStopped,
     EngineDriver,
     RetrievalEngine,
+    SearchRequest,
 )
 
 RNG = np.random.default_rng(23)
@@ -168,6 +170,47 @@ class TestLifecycle:
         driver.stop(drain=True)
         with pytest.raises(DriverStopped):
             driver.submit(db[1])
+
+
+class TestExpiredShedding:
+    """Regression: a flushed group whose members ALL expired must not
+    dispatch an empty batch, must count each shed exactly once in
+    ``n_expired``, and must still count the flush under its reason."""
+
+    def test_all_expired_group_never_dispatches(self):
+        eng, db = make_engine()
+        driver = EngineDriver(eng, max_wait_ms=60_000)   # unstarted
+        futs = [driver.submit(SearchRequest(db[i], deadline_ms=0.01))
+                for i in range(3)]
+        time.sleep(0.05)                      # every client budget expires
+        batches_before = eng.stats.n_batches
+        driver.stop(drain=True)               # inline drain forms the batch
+        for f in futs:
+            with pytest.raises(DeadlineExceeded):
+                f.result(0)
+        assert driver.stats.n_expired == 3    # each shed counted exactly once
+        assert driver.stats.n_completed == 0
+        assert driver.stats.n_flush_drain == 1   # the flush still happened
+        assert eng.stats.n_batches == batches_before   # no empty dispatch
+
+    def test_mixed_expiry_dispatches_survivors_once(self):
+        eng, db = make_engine()
+        driver = EngineDriver(eng, max_wait_ms=60_000)
+        dead = [driver.submit(SearchRequest(db[i], deadline_ms=0.01))
+                for i in range(2)]
+        live = [driver.submit(SearchRequest(db[i], deadline_ms=600_000.0))
+                for i in range(2, 4)]
+        time.sleep(0.05)
+        batches_before = eng.stats.n_batches
+        driver.stop(drain=True)
+        for f in dead:
+            with pytest.raises(DeadlineExceeded):
+                f.result(0)
+        assert [f.result(0).doc_ids[0] for f in live] == [2, 3]
+        assert driver.stats.n_expired == 2
+        assert driver.stats.n_completed == 2
+        assert driver.stats.n_flush_drain == 1
+        assert eng.stats.n_batches == batches_before + 1
 
 
 class TestServing:

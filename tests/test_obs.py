@@ -14,7 +14,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.engine import EngineDriver, RetrievalEngine
+from repro.engine import EngineDriver, RetrievalEngine, SearchRequest
 from repro.engine.config import ObsConfig
 from repro.index_backends.flat import FlatProgressiveBackend
 from repro.obs import (
@@ -436,8 +436,13 @@ class TestDriverObs:
 
     def test_stats_hammer_reconciles_exactly(self):
         """8 threads hammering submit/result; every total must equal the
-        number of results actually delivered — no lost or double counts."""
+        number of results actually delivered — no lost or double counts.
+        Half the traffic is tenant-filtered so the store's mask-cache
+        counters race the scrapes too (no torn reads: plain ints under
+        engine.lock, mirrored whole at collect time)."""
         eng, db = make_engine(n_docs=64, capacity=256)
+        eng.add_docs(RNG.normal(size=(16, D)).astype(np.float32),
+                     tenant="obs")
         n_threads, per_thread = 8, 16
         delivered = []
         lock = threading.Lock()
@@ -447,8 +452,10 @@ class TestDriverObs:
             try:
                 out = []
                 for i in range(per_thread):
-                    out.append(driver.retrieve(db[(tid * 7 + i) % 64],
-                                               timeout=WAIT))
+                    q = db[(tid * 7 + i) % 64]
+                    req = (SearchRequest(q, tenant="obs") if i % 2
+                           else q)
+                    out.append(driver.retrieve(req, timeout=WAIT))
                 with lock:
                     delivered.extend(out)
             except Exception as e:          # pragma: no cover - diagnostic
@@ -484,3 +491,15 @@ class TestDriverObs:
         assert flushes == s["n_batches"]
         fills = sum(parsed["repro_engine_batch_bucket_total"].values())
         assert fills == s["n_batches"]
+        # mask-cache counters: one key ("obs", no filter) and no epoch
+        # bump mid-hammer => exactly one compile; the prometheus mirror
+        # must equal the plain ints exactly (scrape-time set_total — a
+        # torn read would show partial totals here)
+        with eng.lock:
+            mc = eng.store.mask_cache_stats()
+        assert mc["misses"] == 1
+        assert mc["hits"] >= 1
+        assert mc["entries"] == 1
+        assert parsed["repro_store_mask_cache_hits_total"][()] == mc["hits"]
+        assert (parsed["repro_store_mask_cache_misses_total"][()]
+                == mc["misses"])

@@ -312,3 +312,120 @@ class TestLifecycle:
             handle.stop()                         # second stop: no-op
             with pytest.raises((ConnectionError, urllib.error.URLError)):
                 urllib.request.urlopen(url + "/healthz", timeout=2)
+
+
+class TestQuotaLifecycle:
+    """Regression: no path between ``quotas.acquire`` and future delivery
+    may leak an in-flight slot — invalid requests, rejected submits, and
+    stopped drivers all release exactly once."""
+
+    def test_invalid_request_hammer_never_leaks_inflight(self, served):
+        url, _, quotas = served
+        vecs, _ = seed(url, "leak", n=4)
+        good = vecs[0].tolist()
+        bad_bodies = [
+            {"tenant": "leak"},                               # missing query
+            {"query": [0.0] * (D + 1), "tenant": "leak"},     # bad dim
+            {"query": good, "tenant": "leak", "k": 0},        # bad k
+            {"query": good, "tenant": "leak", "k": 999},      # k too large
+            {"query": good, "tenant": "leak",
+             "filter": {"tag": {"$bogus": 1}}},               # bad filter op
+            {"query": "not-a-vector", "tenant": "leak"},      # unparseable
+            {"query": [[1.0], [2.0, 3.0]], "tenant": "leak"}, # ragged
+        ]
+        for _ in range(5):
+            for body in bad_bodies:
+                status, payload = request(url, "/v1/search", body)
+                assert status != 200, (body, payload)
+                assert quotas.inflight("leak") == 0, body
+        assert quotas.inflight("leak") == 0
+        # the namespace still serves fine afterwards, and returns its slot
+        status, _ = request(url, "/v1/search",
+                            {"query": good, "tenant": "leak"})
+        assert status == 200
+        assert quotas.inflight("leak") == 0
+
+    def test_stopped_driver_rejects_without_leaking(self):
+        eng = RetrievalEngine(D, d_start=8, k0=16, buckets=(1,),
+                              capacity=16, block_n=32)
+        quotas = TenantQuotas(max_inflight=4)
+        driver = EngineDriver(eng, max_wait_ms=0.0).start()
+        handle = serve_in_thread(eng, driver, quotas=quotas)
+        try:
+            vecs, _ = seed(handle.url, "dead", n=2)
+            driver.stop(drain=True)               # submit now raises
+            for _ in range(4):
+                status, _ = request(handle.url, "/v1/search", {
+                    "query": vecs[0].tolist(), "tenant": "dead"})
+                assert status == 503
+            assert quotas.inflight("dead") == 0
+        finally:
+            handle.stop()
+            driver.stop()
+
+
+def raw_search(url, body):
+    """Search via http.client so response headers are observable."""
+    host, port = url.removeprefix("http://").split(":")
+    conn = http.client.HTTPConnection(host, int(port), timeout=30)
+    try:
+        conn.request("POST", "/v1/search", json.dumps(body).encode(),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        payload = json.loads(resp.read())
+        headers = {k.lower(): v for k, v in resp.getheaders()}
+        return resp.status, payload, headers
+    finally:
+        conn.close()
+
+
+@pytest.fixture(scope="module")
+def served_adaptive():
+    """Server with the adaptive policy and query cache enabled."""
+    from repro.engine import AdaptiveConfig, CacheConfig
+    eng = RetrievalEngine(
+        D, d_start=8, k0=16, final_k=4, buckets=(1, 2, 4),
+        capacity=64, block_n=64,
+        adaptive=AdaptiveConfig(enabled=True, levels=2, min_d_start=4),
+        cache=CacheConfig(enabled=True, capacity=32))
+    with EngineDriver(eng, max_wait_ms=1.0) as driver:
+        handle = serve_in_thread(eng, driver)
+        try:
+            yield handle.url, eng, driver
+        finally:
+            handle.stop()
+
+
+class TestAdaptiveSurface:
+    def test_degraded_and_cache_headers(self, served_adaptive):
+        url, _, _ = served_adaptive
+        vecs, _ = seed(url, "hdr", n=6)
+        body = {"query": vecs[2].tolist(), "tenant": "hdr"}
+        status, payload, headers = raw_search(url, body)
+        assert status == 200, payload
+        assert headers["degraded"] == "0"
+        assert headers["cache"] == "miss"
+        assert payload["cached"] is False and payload["degraded_level"] == 0
+        status, payload, headers = raw_search(url, body)
+        assert status == 200
+        assert headers["cache"] == "hit"
+        assert payload["cached"] is True
+
+    def test_stats_expose_adaptive_cache_and_mask_cache(self, served_adaptive):
+        url, _, _ = served_adaptive
+        status, payload = request(url, "/v1/stats")
+        assert status == 200
+        assert payload["adaptive"]["enabled"] is True
+        assert payload["adaptive"]["level"] == 0
+        assert payload["cache"]["enabled"] is True
+        assert payload["cache"]["capacity"] == 32
+        assert set(payload["mask_cache"]) == {"hits", "misses", "entries",
+                                              "epoch"}
+
+    def test_plain_server_reports_sections_disabled(self, served):
+        url, _, _ = served
+        status, payload = request(url, "/v1/stats")
+        assert status == 200
+        assert payload["adaptive"] == {"enabled": False}
+        assert payload["cache"] == {"enabled": False}
+        assert "mask_cache" in payload
