@@ -1,5 +1,7 @@
 from repro.checkpoint.ckpt import (
     CheckpointManager,
+    CorruptCheckpoint,
+    all_steps,
     latest_step,
     load_arrays,
     restore_checkpoint,
@@ -7,5 +9,6 @@ from repro.checkpoint.ckpt import (
     save_checkpoint,
 )
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
-           "save_arrays", "load_arrays", "latest_step"]
+__all__ = ["CheckpointManager", "CorruptCheckpoint", "save_checkpoint",
+           "restore_checkpoint", "save_arrays", "load_arrays",
+           "all_steps", "latest_step"]

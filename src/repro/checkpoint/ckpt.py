@@ -26,6 +26,7 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import msgpack
@@ -33,6 +34,31 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+
+class CorruptCheckpoint(RuntimeError):
+    """The checkpoint on disk fails verification: unreadable manifest/npz,
+    an array checksum mismatch, or a missing member.  Typed so recovery
+    code can fall back to an older step instead of dying on a cold numpy/
+    zipfile error."""
+
+
+def _array_crc(a: np.ndarray) -> int:
+    """Content checksum of one array (dtype-stable via the encoded bytes)."""
+    enc = _encode(np.ascontiguousarray(a))
+    return zlib.crc32(enc.tobytes())
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a rename within it is durable (POSIX)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                           # pragma: no cover (platform)
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _encode(a: np.ndarray) -> np.ndarray:
@@ -72,8 +98,13 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = N
     os.makedirs(tmp)
 
     arrs, treedef = _flatten(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"),
-             **{k: _encode(v) for k, v in arrs.items()})
+    # npz through an explicit handle so it can be fsync'd: np.savez(path)
+    # alone leaves the array bytes in the page cache, and a crash after the
+    # rename could surface a "complete" checkpoint with torn arrays
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, **{k: _encode(v) for k, v in arrs.items()})
+        f.flush()
+        os.fsync(f.fileno())
     manifest = {
         "step": step,
         "n_arrays": len(arrs),
@@ -81,6 +112,10 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = N
         "time": time.time(),
         "extra": extra or {},
         "dtypes": {k: str(v.dtype) for k, v in arrs.items()},
+        # per-array content CRCs: load verifies them, so silent on-disk
+        # corruption becomes a typed CorruptCheckpoint (recovery falls back
+        # to the previous step) instead of wrong search results
+        "checksums": {k: _array_crc(v) for k, v in arrs.items()},
     }
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
@@ -89,6 +124,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = N
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(ckpt_dir)                  # make the rename itself durable
 
     steps = sorted(all_steps(ckpt_dir))
     for s in steps[:-keep]:
@@ -111,19 +147,52 @@ def save_arrays(ckpt_dir: str, step: int, arrays: Dict[str, np.ndarray], *,
     return save_checkpoint(ckpt_dir, step, named, extra=extra, keep=keep)
 
 
+def _read_step(path: str) -> Tuple[Dict, Dict[str, np.ndarray]]:
+    """Read + verify one checkpoint dir; returns (manifest, raw arrays).
+
+    Every failure mode — unreadable manifest, bad zip, missing member,
+    checksum mismatch — raises ``CorruptCheckpoint``, so callers can treat
+    "this step is unusable" uniformly and fall back to an older one.
+    """
+    try:
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrs = {k: z[k] for k in z.files}
+    except CorruptCheckpoint:
+        raise
+    except Exception as e:                 # zipfile/msgpack/OSError/KeyError
+        raise CorruptCheckpoint(f"{path}: unreadable checkpoint: {e}") from e
+    n = manifest.get("n_arrays")
+    if n is not None and n != len(arrs):
+        raise CorruptCheckpoint(
+            f"{path}: manifest promises {n} arrays, npz holds {len(arrs)}")
+    checksums = manifest.get("checksums")
+    if checksums:                          # absent on pre-checksum ckpts
+        for key, want in checksums.items():
+            got = arrs.get(key)
+            if got is None:
+                raise CorruptCheckpoint(f"{path}: missing array {key!r}")
+            if _array_crc(got) != want:
+                raise CorruptCheckpoint(
+                    f"{path}: checksum mismatch on {key!r} — the array "
+                    f"bytes on disk are corrupt")
+    return manifest, arrs
+
+
 def load_arrays(ckpt_dir: str, *, step: Optional[int] = None):
     """Restore a `save_arrays` checkpoint without a target tree.
 
     Returns (name->array dict, manifest ``extra`` dict, step), or
-    (None, None, None) when no checkpoint exists.
+    (None, None, None) when no checkpoint exists.  Raises
+    ``CorruptCheckpoint`` when the step exists but fails verification.
     """
     if step is None:
         step = latest_step(ckpt_dir)
     if step is None:
         return None, None, None
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    manifest, arrs = _read_step(path)
     extra = manifest.get("extra", {})
     names = extra.get("array_names")
     if names is None:
@@ -131,14 +200,13 @@ def load_arrays(ckpt_dir: str, *, step: Optional[int] = None):
             f"{path} was not written by save_arrays (no array_names); "
             f"use restore_checkpoint with a target tree")
     dtypes = manifest.get("dtypes", {})
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        # flatten order of a dict is sorted-key order — the order
-        # save_arrays fixed by sorting the names
-        arrays = {
-            name: _decode(z[f"arr_{i}"], dtypes.get(f"arr_{i}",
-                                                    str(z[f"arr_{i}"].dtype)))
-            for i, name in enumerate(names)
-        }
+    # flatten order of a dict is sorted-key order — the order save_arrays
+    # fixed by sorting the names
+    arrays = {
+        name: _decode(arrs[f"arr_{i}"], dtypes.get(f"arr_{i}",
+                                                   str(arrs[f"arr_{i}"].dtype)))
+        for i, name in enumerate(names)
+    }
     return arrays, extra, step
 
 
@@ -171,12 +239,10 @@ def restore_checkpoint(ckpt_dir: str, target_tree, *, step: Optional[int] = None
     if step is None:
         return None, None
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    manifest, raw = _read_step(path)
     dtypes = manifest.get("dtypes", {})
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        arrs = {k: _decode(z[k], dtypes.get(k, str(z[k].dtype)))
-                for k in z.files}
+    arrs = {k: _decode(v, dtypes.get(k, str(v.dtype)))
+            for k, v in raw.items()}
     leaves, treedef = jax.tree.flatten(target_tree)
     assert len(leaves) == len(arrs), (
         f"checkpoint has {len(arrs)} arrays, target expects {len(leaves)}")

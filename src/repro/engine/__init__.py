@@ -38,6 +38,19 @@ Public API:
   QueryCache                     — exact + near-duplicate query-result cache
                                    in front of the driver queue, invalidated
                                    structurally by store/mask/rebuild bumps
+  MutationWAL, WALError          — fsync'd mutation write-ahead log behind
+                                   ``enable_durability``/``recover``
+  FaultToleranceConfig           — WAL/supervision/injection knobs on
+                                   ``EngineConfig.fault``
+  FaultPlan, InjectedFault,
+  InjectedCrash, PoisonError     — deterministic fault-injection harness
+  Supervisor, SupervisorGaveUp   — driver watchdog: heartbeat detection,
+                                   capped-backoff restarts
+  RequestFailed                  — request isolated by poison-batch bisection
+                                   (HTTP 503, fails alone)
+  IndexMismatch                  — loaded index incompatible with live config
+  CorruptCheckpoint              — checksum/parse failure in a saved step
+                                   (``recover`` falls back a step)
 
 The backend protocol and implementations live in `repro.index_backends`;
 the HTTP serving front-end on top of all this lives in `repro.serve`.
@@ -57,6 +70,7 @@ from repro.engine.config import (
     BackendConfig,
     CacheConfig,
     EngineConfig,
+    FaultToleranceConfig,
     FlatConfig,
     IVFConfig,
     QuantizedConfig,
@@ -68,16 +82,27 @@ from repro.engine.driver import (
     DriverStats,
     DriverStopped,
     EngineDriver,
+    RequestFailed,
     RetrievalFuture,
 )
 from repro.engine.engine import (
     EngineStats,
+    IndexMismatch,
     RequestStats,
     ResultEvicted,
     RetrievalEngine,
     RetrievalResult,
     UnknownRequest,
 )
+from repro.engine.faults import (
+    FaultPlan,
+    InjectedCrash,
+    InjectedFault,
+    PoisonError,
+)
+from repro.engine.supervise import Supervisor, SupervisorGaveUp
+from repro.engine.wal import MutationWAL, WALError
+from repro.checkpoint import CorruptCheckpoint
 from repro.engine.qcache import QueryCache
 from repro.engine.request import FilterError, SearchRequest, canonical_filter
 from repro.engine.store import DocStore
@@ -88,10 +113,15 @@ __all__ = [
     "BatchDecision", "BucketPolicy", "DeadlineBatcher", "PendingRequest",
     "RequestQueue", "pad_batch",
     "AdaptiveConfig", "BackendConfig", "CacheConfig", "EngineConfig",
-    "FlatConfig", "IVFConfig", "QuantizedConfig", "backend_config",
+    "FaultToleranceConfig", "FlatConfig", "IVFConfig", "QuantizedConfig",
+    "backend_config",
     "DeadlineExceeded", "DriverQueueFull", "DriverStats", "DriverStopped",
-    "EngineDriver", "RetrievalFuture",
-    "DocStore", "EngineStats", "FilterError", "RequestStats",
+    "EngineDriver", "RequestFailed", "RetrievalFuture",
+    "DocStore", "EngineStats", "FilterError", "IndexMismatch",
+    "RequestStats",
     "ResultEvicted", "RetrievalEngine", "RetrievalResult", "SearchRequest",
     "StoreStats", "UnknownRequest", "canonical_filter",
+    "CorruptCheckpoint", "FaultPlan", "InjectedCrash", "InjectedFault",
+    "MutationWAL", "PoisonError", "Supervisor", "SupervisorGaveUp",
+    "WALError",
 ]

@@ -336,6 +336,70 @@ class CacheConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultToleranceConfig:
+    """Fault-tolerance section (see `repro.engine.wal` / ``.supervise`` /
+    ``.faults``).
+
+    * ``wal_fsync`` — fsync every WAL append before acknowledging the
+      mutation (the durability guarantee; turn off only for benchmarks).
+    * ``snapshot_keep`` — snapshots retained by ``save_snapshot``; WAL
+      segments covered by the oldest retained snapshot are pruned, so a
+      torn-newest fallback can still replay.
+    * ``heartbeat_timeout_s`` — driver heartbeat age AND oldest-pending
+      wait beyond which the supervisor declares the thread hung.
+    * ``max_restarts`` — consecutive restarts before the supervisor gives
+      up and fails pending requests (the crash loop is then fatal).
+    * ``backoff_initial_s`` / ``backoff_max_s`` — capped exponential
+      restart backoff.
+    * ``rebuild_retries`` — consecutive background-rebuild failures
+      tolerated (relaunched at the next safe point) before the error
+      escalates to the dispatch path.
+    * ``poison_bisect`` — isolate a failing batch by bisection so only the
+      offending request fails (``RequestFailed`` / HTTP 503).
+    * ``inject`` / ``inject_seed`` — deterministic fault-injection spec
+      (see `repro.engine.faults.FaultPlan.parse`); empty = inert.
+    """
+
+    wal_fsync: bool = True
+    snapshot_keep: int = 3
+    heartbeat_timeout_s: float = 5.0
+    max_restarts: int = 5
+    backoff_initial_s: float = 0.05
+    backoff_max_s: float = 2.0
+    rebuild_retries: int = 3
+    poison_bisect: bool = True
+    inject: str = ""
+    inject_seed: int = 0
+
+    def __post_init__(self):
+        _validate_positive(self, "snapshot_keep")
+        for f in ("heartbeat_timeout_s", "backoff_initial_s",
+                  "backoff_max_s"):
+            if getattr(self, f) <= 0:
+                raise ValueError(
+                    f"FaultToleranceConfig.{f} must be > 0, got "
+                    f"{getattr(self, f)}")
+        if self.max_restarts < 0 or self.rebuild_retries < 0:
+            raise ValueError(
+                f"FaultToleranceConfig.max_restarts/rebuild_retries must "
+                f"be >= 0, got {self.max_restarts}/{self.rebuild_retries}")
+        # parse eagerly so a typo'd spec fails at config time, not at the
+        # first fault-site check deep inside a dispatch
+        from repro.engine.faults import FaultPlan
+        FaultPlan.parse(self.inject, seed=self.inject_seed)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FaultToleranceConfig":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = sorted(set(d) - known)
+        if bad:
+            raise ValueError(
+                f"FaultToleranceConfig does not take field(s) {bad}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Full static configuration of a `RetrievalEngine`.
 
@@ -361,6 +425,8 @@ class EngineConfig:
     adaptive: AdaptiveConfig = dataclasses.field(
         default_factory=AdaptiveConfig)
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    fault: FaultToleranceConfig = dataclasses.field(
+        default_factory=FaultToleranceConfig)
 
     def __post_init__(self):
         _validate_positive(self, "d_emb", "d_start", "k0", "final_k",
@@ -377,6 +443,10 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.cache must be a CacheConfig, got "
                 f"{type(self.cache).__name__}")
+        if not isinstance(self.fault, FaultToleranceConfig):
+            raise ValueError(
+                f"EngineConfig.fault must be a FaultToleranceConfig, got "
+                f"{type(self.fault).__name__}")
         if self.d_start > self.d_emb:
             raise ValueError(
                 f"EngineConfig.d_start={self.d_start} exceeds "
@@ -422,6 +492,8 @@ class EngineConfig:
             d["adaptive"] = AdaptiveConfig.from_dict(d["adaptive"])
         if "cache" in d:
             d["cache"] = CacheConfig.from_dict(d["cache"])
+        if "fault" in d:
+            d["fault"] = FaultToleranceConfig.from_dict(d["fault"])
         if "buckets" in d:
             d["buckets"] = tuple(d["buckets"])
         known = {f.name for f in dataclasses.fields(cls)}
@@ -493,6 +565,35 @@ class EngineConfig:
         ap.add_argument("--qcache-near-eps", type=float, default=0.0,
                         help="serve near-duplicate queries within this "
                              "squared-L2 distance (0 = exact-only)")
+        ap.add_argument("--ft-heartbeat-timeout-s", type=float, default=5.0,
+                        help="driver heartbeat age declaring the thread "
+                             "hung (supervisor restart trigger)")
+        ap.add_argument("--ft-max-restarts", type=int, default=5,
+                        help="consecutive driver restarts before the "
+                             "supervisor gives up")
+        ap.add_argument("--ft-backoff-initial-s", type=float, default=0.05,
+                        help="initial restart backoff (doubles per "
+                             "consecutive restart)")
+        ap.add_argument("--ft-backoff-max-s", type=float, default=2.0,
+                        help="restart backoff cap")
+        ap.add_argument("--ft-rebuild-retries", type=int, default=3,
+                        help="consecutive background-rebuild failures "
+                             "retried before escalating")
+        ap.add_argument("--ft-snapshot-keep", type=int, default=3,
+                        help="snapshots retained (older WAL segments "
+                             "pruned past the oldest)")
+        ap.add_argument("--no-poison-bisect", action="store_true",
+                        help="fail a whole batch on dispatch error instead "
+                             "of bisecting to isolate the poison request")
+        ap.add_argument("--wal-no-fsync", action="store_true",
+                        help="skip the per-append WAL fsync (benchmarks "
+                             "only: acked mutations may be lost on crash)")
+        ap.add_argument("--inject", type=str, default="",
+                        help="deterministic fault-injection spec, e.g. "
+                             "'dispatch:crash@once=3;rebuild:error@first=2' "
+                             "(chaos testing; empty = inert)")
+        ap.add_argument("--inject-seed", type=int, default=0,
+                        help="seed for probabilistic (p=) fault rules")
 
     @classmethod
     def from_flags(cls, args, *, d_emb: int,
@@ -538,6 +639,18 @@ class EngineConfig:
                 capacity=args.qcache_capacity,
                 near_eps=args.qcache_near_eps,
             ),
+            fault=FaultToleranceConfig(
+                wal_fsync=not args.wal_no_fsync,
+                snapshot_keep=args.ft_snapshot_keep,
+                heartbeat_timeout_s=args.ft_heartbeat_timeout_s,
+                max_restarts=args.ft_max_restarts,
+                backoff_initial_s=args.ft_backoff_initial_s,
+                backoff_max_s=args.ft_backoff_max_s,
+                rebuild_retries=args.ft_rebuild_retries,
+                poison_bisect=not args.no_poison_bisect,
+                inject=args.inject,
+                inject_seed=args.inject_seed,
+            ),
         )
 
 
@@ -559,6 +672,7 @@ def legacy_config(
     obs: Optional[ObsConfig] = None,
     adaptive: Optional[AdaptiveConfig] = None,
     cache: Optional[CacheConfig] = None,
+    fault: Optional[FaultToleranceConfig] = None,
 ) -> "EngineConfig":
     """The deprecation shim: old-style engine kwargs -> ``EngineConfig``.
 
@@ -577,4 +691,5 @@ def legacy_config(
         obs=obs if obs is not None else ObsConfig(),
         adaptive=adaptive if adaptive is not None else AdaptiveConfig(),
         cache=cache if cache is not None else CacheConfig(),
+        fault=fault if fault is not None else FaultToleranceConfig(),
     )

@@ -57,6 +57,13 @@ class DriverStopped(RuntimeError):
     """The driver is stopping/stopped/dead — the request was not served."""
 
 
+class RequestFailed(RuntimeError):
+    """This specific request failed while its co-batched neighbours
+    succeeded: batch bisection isolated it as the poison request (its
+    dispatch raised on every subset containing it).  The HTTP layer maps
+    this to 503 for the offender alone."""
+
+
 class DriverQueueFull(TimeoutError):
     """``submit`` timed out waiting for space in the bounded pending queue."""
 
@@ -120,6 +127,17 @@ _DRIVER_COUNTERS = {
                   "Requests shed: client deadline passed pre-dispatch"),
     "n_batch_errors": ("repro_driver_batch_errors_total",
                        "Batches whose dispatch raised"),
+    "n_quarantined": ("repro_driver_quarantined_total",
+                      "Requests isolated by batch bisection and failed "
+                      "alone (RequestFailed/503)"),
+    "n_bisections": ("repro_driver_bisect_splits_total",
+                     "Failing-batch splits performed while isolating "
+                     "poison requests"),
+    "n_driver_crashes": ("repro_driver_crashes_total",
+                         "Driver-thread deaths absorbed in supervised "
+                         "mode"),
+    "n_restarts": ("repro_driver_restarts_total",
+                   "Driver-thread restarts (supervisor or manual)"),
 }
 _FLUSH_REASONS = {"n_flush_full": "full", "n_flush_deadline": "deadline",
                   "n_flush_drain": "drain"}
@@ -137,8 +155,9 @@ class DriverStats:
     """
 
     _FIELDS = ("n_submitted", "n_completed", "n_cancelled", "n_expired",
-               "n_batch_errors", "n_flush_full", "n_flush_deadline",
-               "n_flush_drain", "queue_peak")
+               "n_batch_errors", "n_quarantined", "n_bisections",
+               "n_driver_crashes", "n_restarts", "n_flush_full",
+               "n_flush_deadline", "n_flush_drain", "queue_peak")
 
     def __init__(self) -> None:
         for f in self._FIELDS:
@@ -251,19 +270,90 @@ class EngineDriver:
         self._thread: Optional[threading.Thread] = None
         self._state = _NEW
         self._drain = True
+        self._join_timed_out = False
         self._fatal: Optional[BaseException] = None
+        # -- fault tolerance: heartbeat stamped per loop iteration (the
+        # supervisor's hang detector), an epoch that lets restart() abandon
+        # a wedged thread (it exits at its next safe point), and the
+        # supervised-crash slot (thread died, state stays _RUNNING so a
+        # restart can resume the pending queue)
+        self._bisect = bool(engine.config.fault.poison_bisect)
+        self._supervised = False
+        self._epoch = 0
+        self._hb = 0.0
+        self._crash: Optional[BaseException] = None
+        self.supervisor = None            # attached by Supervisor.__init__
 
     # -- lifecycle -----------------------------------------------------------
-    def start(self) -> "EngineDriver":
-        """Spawn the batching thread; returns self for chaining."""
+    def start(self, *, supervised: bool = False) -> "EngineDriver":
+        """Spawn the batching thread; returns self for chaining.
+
+        ``supervised=True`` changes what a driver-loop crash does: instead
+        of failing every pending request and going fatal, the thread
+        records the crash and dies with the queue INTACT — a supervisor (or
+        a manual ``restart()``) then resumes service.  Unsupervised, a
+        crash stays fatal exactly as before.
+        """
         with self._cv:
             if self._state != _NEW:
                 raise RuntimeError(f"driver already {self._state}")
+            self._supervised = bool(supervised)
             self._state = _RUNNING
+            self._hb = self._clock()
             self._thread = threading.Thread(
-                target=self._run, name=self._name, daemon=True)
+                target=self._run, args=(self._epoch,), name=self._name,
+                daemon=True)
             self._thread.start()
         return self
+
+    def restart(self) -> bool:
+        """Replace a dead or hung driver thread; pending requests survive.
+
+        Bumps the thread epoch — a hung-but-alive old thread notices the
+        stale epoch at its next safe point and exits without touching
+        shared state (its in-flight dispatch, if any, still resolves its
+        own futures).  Returns False when the driver isn't running (there
+        is nothing to revive).
+        """
+        with self._cv:
+            if self._state != _RUNNING:
+                return False
+            self._crash = None
+            self._epoch += 1
+            self._hb = self._clock()
+            self.stats.n_restarts += 1
+            self._thread = threading.Thread(
+                target=self._run, args=(self._epoch,),
+                name=f"{self._name}-r{self._epoch}", daemon=True)
+            self._thread.start()
+            self._cv.notify_all()
+        return True
+
+    def health(self) -> Dict:
+        """Liveness snapshot the supervisor (and deep health) polls."""
+        with self._cv:
+            now = self._clock()
+            alive = self._thread is not None and self._thread.is_alive()
+            oldest = (now - self._pending[0].t_arrival
+                      if self._pending else 0.0)
+            return {
+                "state": self._state,
+                "thread_alive": alive,
+                "heartbeat_age_s": max(0.0, now - self._hb),
+                "oldest_wait_s": oldest,
+                "n_pending": len(self._pending),
+                "n_restarts": self.stats.n_restarts,
+                "crashed": self._crash is not None,
+            }
+
+    def kill(self, error: BaseException) -> None:
+        """Supervisor gave up: fail everything pending and go fatal."""
+        with self._cv:
+            if self._state == _STOPPED:
+                return
+            self._fatal = error
+            self._epoch += 1             # any surviving thread stands down
+            self._finish_locked()
 
     def stop(self, *, drain: bool = True,
              timeout: Optional[float] = None) -> None:
@@ -292,13 +382,29 @@ class EngineDriver:
                 self._state = _STOPPING
                 self._drain = drain
                 self._cv.notify_all()
-            # already _STOPPING: a concurrent stop() owns the drain policy —
-            # overriding it here could cancel requests that call promised to
-            # serve; just wait for the thread alongside it
+            elif not drain and self._drain and self._join_timed_out:
+                # already _STOPPING.  A concurrent stop(drain=True) owns the
+                # drain policy — an abort racing a healthy drain must not
+                # revoke the promise to serve accepted requests.  But once a
+                # drain stop() has TIMED OUT the thread is presumed wedged,
+                # and a retry with drain=False may DOWNGRADE the policy to
+                # reclaim it instead of leaving the driver stuck in
+                # _STOPPING forever.
+                self._drain = False
+                self._cv.notify_all()
         assert self._thread is not None
         self._thread.join(timeout)
-        if self._thread.is_alive():
-            raise TimeoutError(f"driver thread did not stop within {timeout}s")
+        with self._cv:
+            if self._thread.is_alive():
+                self._join_timed_out = True
+                raise TimeoutError(
+                    f"driver thread did not stop within {timeout}s")
+            if self._state != _STOPPED:
+                # the thread is gone but never reached _finish_locked (it
+                # crashed in supervised mode, or died uncleanly): complete
+                # the shutdown on its behalf so stop() leaves no zombie
+                # state behind
+                self._finish_locked()
         if self._fatal is not None:
             raise self._fatal
 
@@ -524,11 +630,52 @@ class EngineDriver:
         try:
             results = self.engine.execute_batch([p.req for p in chunk], **kw)
         except Exception as e:
-            # fail this batch's clients, keep serving the next one
+            # fail this batch's clients — or, with bisection enabled,
+            # isolate the offender so its co-batched neighbours still get
+            # answers — and keep serving the next batch either way
             self.stats.n_batch_errors += 1
-            for p in chunk:
-                p.future._finish(error=e)
+            if self._bisect and len(chunk) > 1:
+                self.stats.n_bisections += 1
+                self._bisect_failed(chunk, kw)
+            else:
+                for p in chunk:
+                    p.future._finish(error=e)
             return
+        self._resolve(chunk, results)
+
+    def _bisect_failed(self, chunk: List[_Pending], kw: Dict) -> None:
+        """Isolate the poison request(s) in a failing batch by bisection.
+
+        Re-dispatches each half independently; halves that succeed resolve
+        normally, halves that keep failing split again.  A failing
+        singleton is the offender: its future gets ``RequestFailed`` (the
+        HTTP layer's 503) and it is counted quarantined.  Deterministic
+        per-request failures (the realistic poison shape: a query that
+        trips a device/input bug on every dispatch) are isolated exactly;
+        a transient batch-level error simply retries and succeeds.  Cost
+        is O(log batch) extra dispatches per poison, paid only on batches
+        that already failed.
+        """
+        mid = len(chunk) // 2
+        for half in (chunk[:mid], chunk[mid:]):
+            if not half:
+                continue
+            try:
+                results = self.engine.execute_batch(
+                    [p.req for p in half], **kw)
+            except Exception as e:
+                if len(half) == 1:
+                    self.stats.n_quarantined += 1
+                    half[0].future._finish(error=RequestFailed(
+                        f"request isolated by batch bisection: {e}"))
+                else:
+                    self.stats.n_bisections += 1
+                    self._bisect_failed(half, kw)
+            else:
+                self._resolve(half, results)
+
+    def _resolve(self, chunk: List[_Pending], results) -> None:
+        """Resolve a successfully dispatched chunk's futures + cache."""
         for p, res in zip(chunk, results):
             p.future._finish(result=res)
         self.stats.n_completed += len(chunk)
@@ -543,13 +690,19 @@ class EngineDriver:
                 self.cache.insert(p.req.query, res.scores, res.doc_ids,
                                   p.req.mask_key, res.degraded_level, stamp)
 
-    def _run(self) -> None:
+    def _run(self, epoch: int = 0) -> None:
         try:
             while True:
                 chunk: Optional[List[_Pending]] = None
                 reason = ""
                 with self._cv:
                     while chunk is None:
+                        if self._epoch != epoch:
+                            # a restart() replaced this thread while it was
+                            # wedged: stand down without touching shared
+                            # state — the replacement owns the queue now
+                            return
+                        self._hb = self._clock()
                         if self._state == _STOPPING:
                             if not self._drain or not self._pending:
                                 self._finish_locked()
@@ -575,7 +728,15 @@ class EngineDriver:
                         if d.action == "flush":
                             chunk, reason = self._take_locked(d.n), d.reason
                         elif d.action == "wait":
-                            self._cv.wait(d.wait_s)
+                            # supervised: cap the batching wait so the loop
+                            # wakes to re-stamp the heartbeat — a thread
+                            # waiting out a long max_wait_ms with requests
+                            # pending is healthy, and must not look hung
+                            w = d.wait_s
+                            if self._supervised:
+                                w = min(w, self.engine.config.fault
+                                        .heartbeat_timeout_s / 2)
+                            self._cv.wait(w)
                         elif (self.adaptive is not None
                                 and self.adaptive.level > 0):
                             # idle while degraded: wake periodically so the
@@ -589,9 +750,31 @@ class EngineDriver:
                 # dispatch outside the cv so producers keep submitting while
                 # the device computes (engine.lock still serializes engine
                 # access)
-                self._dispatch(chunk, reason)
-        except BaseException as e:                # pragma: no cover
+                try:
+                    self._dispatch(chunk, reason)
+                except BaseException:
+                    # a dispatch-path error past _dispatch's own handler is
+                    # about to kill this thread: fail the chunk's unresolved
+                    # futures first so no client blocks forever on a future
+                    # nobody owns anymore
+                    for p in chunk:
+                        if not p.future.done():
+                            p.future._finish(error=DriverStopped(
+                                "driver thread died mid-dispatch"))
+                    raise
+                with self._cv:
+                    self._hb = self._clock()
+        except BaseException as e:
             with self._cv:
+                if self._epoch != epoch:
+                    return                        # superseded: stay silent
+                if self._supervised and self._state == _RUNNING:
+                    # supervised crash: record it and die with the pending
+                    # queue INTACT — the supervisor restarts a fresh thread
+                    # that picks the backlog right back up
+                    self._crash = e
+                    self.stats.n_driver_crashes += 1
+                    return
                 self._fatal = e
                 self._finish_locked()
 

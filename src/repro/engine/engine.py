@@ -64,8 +64,10 @@ from repro.core import (
 from repro.engine.adaptive import SearchOverrides
 from repro.engine.batching import BucketPolicy, PendingRequest, RequestQueue, pad_batch
 from repro.engine.config import EngineConfig, legacy_config
+from repro.engine.faults import FaultPlan
 from repro.engine.request import SearchRequest
 from repro.engine.store import DocStore
+from repro.engine.wal import MutationWAL, WALError
 from repro.index_backends import IndexBackend, IndexState, make_backend
 from repro.obs import (
     NULL_INSTRUMENT,
@@ -80,6 +82,12 @@ Array = jax.Array
 
 class UnknownRequest(KeyError):
     """``poll`` was handed a request id the engine never issued."""
+
+
+class IndexMismatch(ValueError):
+    """A `load_index` / `recover` checkpoint disagrees with the live
+    engine configuration (backend kind, embedding dim, metric, capacity) —
+    raised eagerly instead of a downstream shape failure mid-search."""
 
 
 class ResultEvicted(KeyError):
@@ -156,6 +164,14 @@ _ENGINE_COUNTERS = {
                    "Index (re)builds adopted"),
     "n_compactions": ("repro_engine_compactions_total",
                       "Store compactions run"),
+    "n_rebuild_failures": ("repro_engine_rebuild_failures_total",
+                           "Background index builds that raised (retried "
+                           "at the next safe point)"),
+    "n_recoveries": ("repro_engine_recoveries_total",
+                     "Successful recover() runs (snapshot restore + WAL "
+                     "replay)"),
+    "n_replayed": ("repro_engine_wal_replayed_total",
+                   "WAL records replayed across all recoveries"),
 }
 
 
@@ -278,6 +294,9 @@ class EngineStats:
             "n_docs_deleted": self.n_docs_deleted,
             "n_rebuilds": self.n_rebuilds,
             "n_compactions": self.n_compactions,
+            "n_rebuild_failures": self.n_rebuild_failures,
+            "n_recoveries": self.n_recoveries,
+            "n_replayed": self.n_replayed,
             "latency_ms_p50": self._pct(self.latency_ms, 50),
             "latency_ms_p95": self._pct(self.latency_ms, 95),
             "queue_ms_p50": self._pct(self.queue_ms, 50),
@@ -523,6 +542,20 @@ class RetrievalEngine:
         # any state older than this store generation must never be adopted
         self._min_state_generation = 0
 
+        # -- fault tolerance: injection plan (inert unless configured), the
+        # mutation WAL (None until enable_durability/recover), and the last
+        # recovery report for /healthz?deep=1
+        fcfg = config.fault
+        self.faults = FaultPlan.parse(fcfg.inject, seed=fcfg.inject_seed)
+        self.wal: Optional[MutationWAL] = None
+        self.ckpt_dir: Optional[str] = None
+        self.last_recovery: Optional[Dict] = None
+        self._rebuild_fail_streak = 0
+        self._g_wal = self.metrics.gauge(
+            "repro_wal_state",
+            "Mutation-WAL state (last_seq / lag_records / n_segments)",
+            labels=("key",))
+
     # -- corpus mutation -----------------------------------------------------
     def add_docs(self, vectors, *, tenant: Optional[str] = None,
                  metadata=None) -> np.ndarray:
@@ -531,15 +564,50 @@ class RetrievalEngine:
         ``tenant`` namespaces the rows (searches with ``tenant=`` see only
         their own namespace); ``metadata`` — one dict or a per-row sequence
         of dicts — feeds the per-request filter masks.
+
+        With durability enabled the mutation is WAL-logged (fsync'd) BEFORE
+        it is applied or acknowledged: a crash after return can never lose
+        it, and a crash before the append means the caller never saw an ack.
         """
         with self.lock:
+            if self.wal is not None:
+                vec = np.asarray(vectors, np.float32)
+                if vec.ndim == 1:
+                    vec = vec[None, :]
+                if vec.ndim != 2 or vec.shape[1] != self.store.d_emb:
+                    raise ValueError(
+                        f"expected (B, {self.store.d_emb}) vectors, got "
+                        f"shape {vec.shape}")
+                # validate metadata BEFORE logging: a record that would be
+                # rejected by the store must never enter the log (replay
+                # would diverge on it)
+                meta_rows = DocStore._check_metadata(metadata, vec.shape[0])
+                self.faults.check("wal_write")
+                self.wal.append("add", {
+                    "start": self.store.size,
+                    "v": vec.tobytes(),
+                    "shape": list(vec.shape),
+                    "tenant": tenant,
+                    "metadata": meta_rows,
+                })
             ids = self.store.add(vectors, tenant=tenant, metadata=metadata)
             self.stats.n_docs_added += len(ids)
             return ids
 
     def delete_docs(self, ids) -> int:
-        """Tombstone docs by id; they become unreturnable immediately."""
+        """Tombstone docs by id; they become unreturnable immediately.
+
+        WAL-logged before application, like ``add_docs``."""
         with self.lock:
+            if self.wal is not None:
+                id_arr = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
+                if id_arr.size and (id_arr.min() < 0
+                                    or id_arr.max() >= self.store.size):
+                    raise IndexError(
+                        f"doc ids must be in [0, {self.store.size}), got "
+                        f"[{id_arr.min()}, {id_arr.max()}]")
+                self.faults.check("wal_write")
+                self.wal.append("delete", {"ids": id_arr.tolist()})
             n = self.store.delete(ids)
             self.stats.n_docs_deleted += n
             return n
@@ -552,6 +620,7 @@ class RetrievalEngine:
     # -- index lifecycle -----------------------------------------------------
     def _build_state(self) -> IndexState:
         store = self.store
+        self.faults.check("rebuild")
         t0 = time.perf_counter()
         state = self.backend.build(
             store.db, store.valid, sq_prefix=store.sq_prefix,
@@ -568,6 +637,11 @@ class RetrievalEngine:
 
     def _compact(self) -> None:
         """Compact the store and remap every id the engine still holds."""
+        if self.wal is not None:
+            # compaction is deterministic given the buffers, so the record
+            # carries no payload: replay just re-runs store.compact() at
+            # the same point in the mutation sequence
+            self.wal.append("compact", {})
         t0 = time.perf_counter()
         id_map = self.store.compact()
         self.stats.h_compact.observe((time.perf_counter() - t0) * 1e3)
@@ -599,7 +673,25 @@ class RetrievalEngine:
         # satisfy the staleness check below
         adopted = False
         if self._bg.ready:
-            new = self._bg.take()
+            try:
+                new = self._bg.take()
+            except Exception as e:
+                # a failed background build must not fail the innocent
+                # batch that happened to hit this safe point: count it,
+                # leave the old state serving, and let the staleness check
+                # below relaunch.  Only a persistent crash loop escalates.
+                self.stats.n_rebuild_failures += 1
+                self._rebuild_fail_streak += 1
+                if (self._rebuild_fail_streak
+                        > self.config.fault.rebuild_retries):
+                    raise RuntimeError(
+                        f"background index rebuild failed "
+                        f"{self._rebuild_fail_streak} times in a row"
+                    ) from e
+                new = None
+            else:
+                if new is not None:
+                    self._rebuild_fail_streak = 0
             # never adopt a state older than what is already serving: a
             # must/forced sync rebuild may have landed while the thread ran
             # (and compaction bumps the floor: pre-compaction ids are dead)
@@ -665,6 +757,7 @@ class RetrievalEngine:
                 h_rebuild = self.stats.h_rebuild
 
                 def _bg_build():
+                    self.faults.check("rebuild")
                     t0 = time.perf_counter()
                     state = self.backend.build(
                         db, valid, sq_prefix=sq, stats=snap)
@@ -699,9 +792,45 @@ class RetrievalEngine:
         with self.lock:
             state = self._ensure_index()
             payload = self.backend.state_dict(state)
+            extra = dict(payload["meta"])
+            extra["engine_meta"] = self._index_meta()
             return save_arrays(
                 ckpt_dir, state.generation, payload["arrays"],
-                extra=payload["meta"], keep=keep)
+                extra=extra, keep=keep)
+
+    def _index_meta(self) -> Dict:
+        """The engine-identity fingerprint recorded next to persisted index
+        state, so a restart with a different configuration fails loudly."""
+        return {
+            "backend": self.backend.name,
+            "d_emb": self.store.d_emb,
+            "capacity": self.store.capacity,
+            "metric": self.metric,
+        }
+
+    def _check_index_meta(self, saved: Optional[Dict], where: str,
+                          keys: Tuple[str, ...] = ("backend", "d_emb",
+                                                   "metric"),
+                          ) -> None:
+        """Raise ``IndexMismatch`` when ``saved`` (an ``engine_meta`` dict)
+        disagrees with the live engine.  Only identity keys are compared —
+        ``capacity`` rides along in the meta for diagnostics but is a
+        dynamic buffer size (it doubles with corpus growth; restore adopts
+        the snapshot's), not identity.  Pre-``engine_meta`` checkpoints
+        (saved is None) skip the check for back-compat."""
+        if not saved:
+            return
+        live = self._index_meta()
+        diffs = [
+            f"{key}: checkpoint has {saved[key]!r}, engine has "
+            f"{live[key]!r}"
+            for key in keys
+            if key in saved and saved[key] != live[key]
+        ]
+        if diffs:
+            raise IndexMismatch(
+                f"{where} does not match the live EngineConfig — "
+                + "; ".join(diffs))
 
     def load_index(self, ckpt_dir: str, *, step: Optional[int] = None) -> bool:
         """Adopt a `save_index` checkpoint as the live index state.
@@ -711,8 +840,10 @@ class RetrievalEngine:
         serving restart re-adds the identical corpus before loading).
         Rows added beyond that ride the tail window exactly like rows
         appended after a build; staleness counters restart clean.  Returns
-        False when ``ckpt_dir`` holds no checkpoint; raises on a
-        backend/corpus mismatch.
+        False when ``ckpt_dir`` holds no checkpoint; raises
+        ``IndexMismatch`` when the checkpoint was saved under a different
+        backend kind / embedding dim / capacity / metric, and
+        ``CorruptCheckpoint`` when the newest step fails verification.
         """
         from repro.checkpoint import load_arrays
 
@@ -720,6 +851,8 @@ class RetrievalEngine:
         if arrays is None:
             return False
         with self.lock:
+            self._check_index_meta(meta.get("engine_meta"),
+                                   f"index checkpoint in {ckpt_dir}")
             store = self.store
             state = self.backend.load_state(
                 {"meta": meta, "arrays": arrays},
@@ -728,6 +861,170 @@ class RetrievalEngine:
             )
             self._index_state = state
             return True
+
+    # -- durability: WAL + snapshots + crash recovery ------------------------
+    def enable_durability(self, ckpt_dir: str) -> None:
+        """Open (or create) the mutation WAL under ``ckpt_dir/wal``.
+
+        From this point every ``add_docs`` / ``delete_docs`` / compaction
+        is logged-then-applied, so ``recover(ckpt_dir)`` in a fresh process
+        reconstructs the acknowledged corpus exactly.  ``recover`` calls
+        this implicitly; call it directly on a brand-new deployment.
+        """
+        import os
+
+        with self.lock:
+            if self.wal is not None:
+                return
+            os.makedirs(ckpt_dir, exist_ok=True)
+            self.ckpt_dir = ckpt_dir
+            self.wal = MutationWAL(
+                os.path.join(ckpt_dir, "wal"),
+                fsync=self.config.fault.wal_fsync)
+
+    def save_snapshot(self, *, keep: Optional[int] = None) -> str:
+        """Durably snapshot store + index state; rotate and prune the WAL.
+
+        The snapshot captures the corpus at WAL seq S (its step number IS
+        S, so steps are unique and monotonic across restarts); recovery
+        restores the newest valid snapshot and replays records with
+        ``seq > S``.  Old WAL segments are pruned only past the *oldest
+        retained* snapshot, so a torn-newest fallback still replays.
+        """
+        from repro.checkpoint import all_steps, save_arrays
+
+        with self.lock:
+            if self.wal is None or self.ckpt_dir is None:
+                raise RuntimeError(
+                    "durability is not enabled — call "
+                    "enable_durability(ckpt_dir) or recover(ckpt_dir) first")
+            self.faults.check("ckpt_save")
+            keep = self.config.fault.snapshot_keep if keep is None else keep
+            wal_seq = self.wal.last_seq
+            store_arrays, store_meta = self.store.snapshot_state()
+            arrays = {f"store/{k}": v for k, v in store_arrays.items()}
+            extra: Dict = {
+                "wal_seq": wal_seq,
+                "store_meta": store_meta,
+                "engine_meta": self._index_meta(),
+            }
+            state = self._index_state
+            if state is not None:
+                payload = self.backend.state_dict(state)
+                arrays.update(
+                    {f"index/{k}": v for k, v in payload["arrays"].items()})
+                extra["index_meta"] = payload["meta"]
+            # step number = wal seq + 1 so the empty-log snapshot (seq -1)
+            # still gets a valid step 0
+            path = save_arrays(self.ckpt_dir, wal_seq + 1, arrays,
+                               extra=extra, keep=keep)
+            self.wal.rotate()
+            steps = all_steps(self.ckpt_dir)
+            if steps:
+                self.wal.prune(min(steps) - 1)
+            return path
+
+    def recover(self, ckpt_dir: str) -> Dict:
+        """Restore state from ``ckpt_dir``: newest valid snapshot + WAL tail.
+
+        Walks snapshots newest-to-oldest, skipping any that fail checksum
+        verification (``CorruptCheckpoint``); restores the store and index
+        from the first valid one; then replays every WAL record past that
+        snapshot's sequence number.  A torn WAL tail (crash mid-append)
+        truncates cleanly — the lost suffix was never acknowledged.  Leaves
+        durability enabled and returns a report dict (also kept as
+        ``engine.last_recovery`` for ``/healthz?deep=1``).
+        """
+        import os
+
+        from repro.checkpoint import CorruptCheckpoint, all_steps, load_arrays
+
+        t0 = time.perf_counter()
+        with self.lock:
+            self.faults.check("ckpt_load")
+            report: Dict = {
+                "status": "ok", "snapshot_step": None, "fallbacks": 0,
+                "replayed": 0, "wal_truncated": False, "duration_ms": 0.0,
+            }
+            loaded = None
+            for step in sorted(all_steps(ckpt_dir), reverse=True):
+                try:
+                    arrays, extra, _ = load_arrays(ckpt_dir, step=step)
+                except CorruptCheckpoint:
+                    report["fallbacks"] += 1
+                    continue
+                loaded = (step, arrays, extra)
+                break
+            wal_seq = -1
+            if loaded is not None:
+                step, arrays, extra = loaded
+                # capacity is NOT checked here: restore_state adopts the
+                # snapshot's buffer capacity, so only identity keys matter
+                self._check_index_meta(extra.get("engine_meta"),
+                                       f"snapshot step {step} in {ckpt_dir}",
+                                       keys=("backend", "d_emb", "metric"))
+                store_arrays = {
+                    k[len("store/"):]: v for k, v in arrays.items()
+                    if k.startswith("store/")}
+                self.store.restore_state(store_arrays, extra["store_meta"])
+                self._index_state = None
+                self._min_state_generation = 0
+                index_arrays = {
+                    k[len("index/"):]: v for k, v in arrays.items()
+                    if k.startswith("index/")}
+                if index_arrays and "index_meta" in extra:
+                    self._index_state = self.backend.load_state(
+                        {"meta": extra["index_meta"],
+                         "arrays": index_arrays},
+                        db=self.store.db, valid=self.store.valid,
+                        sq_prefix=self.store.sq_prefix,
+                        stats=self.store.stats(),
+                    )
+                wal_seq = int(extra["wal_seq"])
+                report["snapshot_step"] = step
+            # open the WAL (truncating any torn tail) and replay the rest
+            os.makedirs(ckpt_dir, exist_ok=True)
+            self.ckpt_dir = ckpt_dir
+            self.wal = MutationWAL(
+                os.path.join(ckpt_dir, "wal"),
+                fsync=self.config.fault.wal_fsync)
+            for rec in self.wal.replay(after_seq=wal_seq):
+                self._apply_record(rec)
+                report["replayed"] += 1
+            report["wal_truncated"] = self.wal.torn_tail
+            report["duration_ms"] = (time.perf_counter() - t0) * 1e3
+            self.stats.n_recoveries += 1
+            self.stats.n_replayed += report["replayed"]
+            self.last_recovery = report
+            return report
+
+    def _apply_record(self, rec) -> None:
+        """Re-apply one WAL record during recovery (never re-logged)."""
+        store = self.store
+        if rec.kind == "add":
+            p = rec.payload
+            if int(p["start"]) != store.size:
+                raise WALError(
+                    f"WAL replay divergence at seq {rec.seq}: record "
+                    f"expects start id {p['start']}, store is at "
+                    f"{store.size}")
+            vec = np.frombuffer(p["v"], np.float32).reshape(p["shape"])
+            meta_rows = p.get("metadata")
+            store.add(vec, tenant=p.get("tenant"), metadata=meta_rows)
+            self.stats.n_docs_added += int(p["shape"][0])
+        elif rec.kind == "delete":
+            n = store.delete(np.asarray(rec.payload["ids"], np.int64))
+            self.stats.n_docs_deleted += n
+        elif rec.kind == "compact":
+            # a replayed compaction invalidates any snapshot-loaded index
+            # state (its ids predate the remap); the next dispatch rebuilds
+            store.compact()
+            self.stats.n_compactions += 1
+            self._index_state = None
+            self._min_state_generation = store.generation
+        else:
+            raise WALError(
+                f"unknown WAL record kind {rec.kind!r} at seq {rec.seq}")
 
     # -- request path --------------------------------------------------------
     def check_query(self, query) -> np.ndarray:
@@ -952,13 +1249,20 @@ class RetrievalEngine:
         ``max_unpolled`` eviction can't drop them.  Requests with a negative
         ``request_id`` are assigned the next engine id.
         """
+        # fault site OUTSIDE the lock: an injected hang here wedges only
+        # this thread, so a supervised replacement driver can still dispatch
+        self.faults.check("dispatch", queries=[r.query for r in reqs])
         out: List[RetrievalResult] = []
         with self.lock:
+            fresh = sum(1 for r in reqs if r.request_id < 0)
             for r in reqs:
                 if r.request_id < 0:
                     r.request_id = self._next_rid
                     self._next_rid += 1
-            self.stats.n_submitted += len(reqs)
+            # count only first-time requests: a bisection retry re-enters
+            # with its engine id already assigned and must not inflate the
+            # submitted/completed reconciliation
+            self.stats.n_submitted += fresh
             off = 0
             while off < len(reqs):
                 chunk = [reqs[off]]
@@ -1170,6 +1474,10 @@ class RetrievalEngine:
                 for key, val in self.backend.gauges(state, st).items():
                     self._g_backend.set(
                         float(val), backend=self.backend.name, key=key)
+            if self.wal is not None:
+                w = self.wal.summary()
+                for key in ("last_seq", "lag_records", "n_segments"):
+                    self._g_wal.set(float(w[key]), key=key)
 
     def profile_stages(self, queries, *, runs: int = 3) -> List[Dict]:
         """Per-stage wall time for a representative batch (post-warmup).

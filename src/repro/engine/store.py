@@ -268,6 +268,100 @@ class DocStore:
             return False
         return bool(self._valid[doc_id])
 
+    # -- snapshot / restore (crash recovery) --------------------------------
+    def snapshot_state(self) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Host-side snapshot of the full store state: (arrays, meta).
+
+        ``arrays`` is npz-friendly (db/valid/tenant rows up to ``size``);
+        ``meta`` is msgpack-friendly (counters, tenant names, metadata
+        columns as plain lists).  Prefix norms are NOT saved — they are a
+        pure function of db and are recomputed on restore, which also
+        makes a snapshot portable across engines whose ``dims`` differ.
+        """
+        arrays = {
+            "db": np.asarray(self._db[: self.size]),
+            "valid": np.asarray(self._valid[: self.size]),
+            "tenant_col": np.asarray(self._tenant_col[: self.size]),
+        }
+        meta = {
+            "d_emb": self.d_emb,
+            "capacity": self.capacity,
+            "size": self.size,
+            "n_active": self.n_active,
+            "generation": self.generation,
+            "total_added": self.total_added,
+            "total_deleted": self.total_deleted,
+            "n_compactions": self.n_compactions,
+            "tenant_names": list(self._tenant_names),
+            "meta_cols": {
+                field: list(col[: self.size])
+                for field, col in self._meta_cols.items()
+            },
+        }
+        return arrays, meta
+
+    def restore_state(self, arrays: Dict[str, np.ndarray],
+                      meta: Dict) -> None:
+        """Replace the store's contents with a ``snapshot_state`` capture.
+
+        Buffers are rebuilt at the smallest power-of-two capacity >= the
+        snapshot size (never below the configured capacity), prefix norms
+        are recomputed, and the mask cache is invalidated.
+        """
+        if int(meta["d_emb"]) != self.d_emb:
+            raise ValueError(
+                f"snapshot holds d_emb={meta['d_emb']}, store expects "
+                f"{self.d_emb}")
+        db = np.asarray(arrays["db"])
+        valid = np.asarray(arrays["valid"], bool)
+        tenant_col = np.asarray(arrays["tenant_col"], np.int32)
+        size = int(meta["size"])
+        if db.shape != (size, self.d_emb) or valid.shape != (size,) \
+                or tenant_col.shape != (size,):
+            raise ValueError(
+                f"snapshot arrays inconsistent with size={size}: "
+                f"db {db.shape}, valid {valid.shape}, "
+                f"tenant_col {tenant_col.shape}")
+        # adopt the snapshot's capacity when it fits (keeps compiled-shape
+        # reuse and saved index states consistent across the restart);
+        # otherwise grow a doubling at a time as add() would
+        new_cap = max(self.capacity, int(meta.get("capacity", 0)))
+        while new_cap < max(size, 1):
+            new_cap *= 2
+        pad = new_cap - size
+        self._db = jnp.pad(jnp.asarray(db, self._db.dtype),
+                           ((0, pad), (0, 0)))
+        self._sq = prefix_squared_norms(self._db, self.dims)
+        self._valid = jnp.pad(jnp.asarray(valid), (0, pad))
+        self.capacity = new_cap
+        self.size = size
+        self.n_active = int(valid.sum())
+        if self.n_active != int(meta["n_active"]):
+            raise ValueError(
+                f"snapshot n_active={meta['n_active']} disagrees with its "
+                f"validity mask ({self.n_active} live rows)")
+        self.generation = int(meta["generation"])
+        self.total_added = int(meta["total_added"])
+        self.total_deleted = int(meta["total_deleted"])
+        self.n_compactions = int(meta.get("n_compactions", 0))
+        col = np.full((new_cap,), NO_TENANT, np.int32)
+        col[:size] = tenant_col
+        self._tenant_col = col
+        self._tenant_names = [str(t) for t in meta.get("tenant_names", [])]
+        self._tenant_ids = {t: i for i, t in enumerate(self._tenant_names)}
+        self._tenant_active = {}
+        live_tids = tenant_col[valid]
+        for tid, cnt in zip(*np.unique(live_tids, return_counts=True)):
+            if tid != NO_TENANT:
+                self._tenant_active[self._tenant_names[tid]] = int(cnt)
+        self._meta_cols = {}
+        for field, values in meta.get("meta_cols", {}).items():
+            packed = np.full((new_cap,), None, object)
+            packed[:size] = values
+            self._meta_cols[field] = packed
+        self.mask_epoch += 1
+        self._mask_cache.clear()
+
     # -- tenancy + metadata --------------------------------------------------
     @staticmethod
     def _check_metadata(metadata, batch: int):

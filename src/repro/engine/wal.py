@@ -1,0 +1,254 @@
+"""Mutation write-ahead log: the durability half of crash recovery.
+
+Every corpus mutation (``add_docs`` / ``delete_docs`` / compaction) appends
+one framed record here *before* the engine acknowledges it, so an
+acknowledged mutation survives a process crash: recovery restores the newest
+valid snapshot and replays the WAL tail on top (see
+``RetrievalEngine.recover``).
+
+Format — append-only segment files ``wal-<firstseq>.log``:
+
+    [8B magic "RWAL0001"]                      (once per segment)
+    [u32 payload len][u32 crc32(payload)][msgpack payload] ...
+
+Each payload carries a monotonic ``seq`` plus the mutation (add payloads
+store the raw vector bytes + dtype/shape so replay is bit-exact).  A crash
+mid-write leaves a *torn tail*: the length/CRC framing detects it, replay
+stops at the last intact record, and ``open`` truncates the torn bytes so
+new appends never land after garbage.
+
+Lifecycle: ``rotate()`` at each snapshot starts a fresh segment (records up
+to the snapshot's ``wal_seq`` live in older segments); ``prune(upto_seq)``
+deletes segments entirely covered by the *oldest retained* snapshot — a
+torn-newest-snapshot fallback can therefore still replay the older
+snapshot's tail.  Thread safety is the engine's job: every append happens
+under ``engine.lock``.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import msgpack
+
+_MAGIC = b"RWAL0001"
+_HEADER = struct.Struct("<II")        # payload length, crc32(payload)
+_MAX_RECORD = 1 << 30                 # sanity bound against garbage lengths
+
+
+class WALError(RuntimeError):
+    """The WAL is unusable (replay divergence, bad directory, ...) —
+    distinct from a torn tail, which is an expected crash artifact and is
+    truncated silently."""
+
+
+class WALRecord:
+    """One replayable mutation."""
+
+    __slots__ = ("seq", "kind", "payload")
+
+    def __init__(self, seq: int, kind: str, payload: Dict):
+        self.seq = seq
+        self.kind = kind
+        self.payload = payload
+
+    def __repr__(self) -> str:
+        return f"WALRecord(seq={self.seq}, kind={self.kind!r})"
+
+
+def _segment_name(first_seq: int) -> str:
+    return f"wal-{first_seq:012d}.log"
+
+
+def _scan_segment(path: str) -> Tuple[List[WALRecord], int, bool]:
+    """Read one segment; returns (records, clean_byte_length, torn).
+
+    ``clean_byte_length`` is the offset just past the last intact record —
+    the truncation point for a torn tail.  ``torn`` is True when trailing
+    bytes had to be discarded (partial frame, short payload, CRC mismatch).
+    """
+    records: List[WALRecord] = []
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[: len(_MAGIC)] != _MAGIC:
+        # unreadable header: treat the whole segment as torn
+        return records, 0, True
+    off = len(_MAGIC)
+    clean = off
+    while off + _HEADER.size <= len(blob):
+        length, crc = _HEADER.unpack_from(blob, off)
+        start = off + _HEADER.size
+        end = start + length
+        if length > _MAX_RECORD or end > len(blob):
+            return records, clean, True           # partial frame
+        payload = blob[start:end]
+        if zlib.crc32(payload) != crc:
+            return records, clean, True           # corrupt record
+        rec = msgpack.unpackb(payload)
+        records.append(WALRecord(int(rec["seq"]), rec["kind"], rec))
+        off = end
+        clean = off
+    return records, clean, off != len(blob)
+
+
+class MutationWAL:
+    """Framed, CRC-checked, fsync'd mutation log under ``wal_dir``."""
+
+    def __init__(self, wal_dir: str, *, fsync: bool = True):
+        self.wal_dir = wal_dir
+        self.fsync = bool(fsync)
+        os.makedirs(wal_dir, exist_ok=True)
+        self.last_seq = -1                 # highest durable seq
+        self.torn_tail = False             # open/replay found torn bytes
+        self.n_appended = 0                # records appended this process
+        self._since_rotate = 0             # records in the active segment
+        self._fh = None
+        segs = self._segments()
+        if segs:
+            # recover the active (newest) segment: find the clean length,
+            # truncate any torn tail so appends go after intact records
+            for first_seq, path in segs:
+                recs, clean, torn = _scan_segment(path)
+                if recs:
+                    self.last_seq = max(self.last_seq, recs[-1].seq)
+                elif not torn:
+                    self.last_seq = max(self.last_seq, first_seq - 1)
+                if path == segs[-1][1]:
+                    self._since_rotate = len(recs)
+                    if torn:
+                        self.torn_tail = True
+                        with open(path, "r+b") as f:
+                            f.truncate(max(clean, len(_MAGIC)))
+                            f.flush()
+                            os.fsync(f.fileno())
+            self._open_segment(segs[-1][1], fresh=False)
+        else:
+            self._start_segment(0)
+
+    # -- segment plumbing ---------------------------------------------------
+    def _segments(self) -> List[Tuple[int, str]]:
+        out = []
+        for name in os.listdir(self.wal_dir):
+            if name.startswith("wal-") and name.endswith(".log"):
+                try:
+                    first = int(name[4:-4])
+                except ValueError:
+                    continue
+                out.append((first, os.path.join(self.wal_dir, name)))
+        return sorted(out)
+
+    def _open_segment(self, path: str, *, fresh: bool) -> None:
+        self._fh = open(path, "ab")
+        if fresh:
+            self._fh.write(_MAGIC)
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+
+    def _start_segment(self, first_seq: int) -> None:
+        path = os.path.join(self.wal_dir, _segment_name(first_seq))
+        self._open_segment(path, fresh=not os.path.exists(path)
+                           or os.path.getsize(path) == 0)
+
+    # -- client surface -----------------------------------------------------
+    def append(self, kind: str, payload: Dict) -> int:
+        """Durably append one record; returns its seq number.
+
+        The record is on disk (fsync'd when ``fsync=True``) before this
+        returns — the engine acknowledges the mutation only after that, so
+        "acked" implies "replayable".
+        """
+        if self._fh is None:
+            raise WALError("WAL is closed")
+        seq = self.last_seq + 1
+        body = dict(payload)
+        body["seq"] = seq
+        body["kind"] = kind
+        blob = msgpack.packb(body)
+        self._fh.write(_HEADER.pack(len(blob), zlib.crc32(blob)))
+        self._fh.write(blob)
+        self._fh.flush()
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+        self.last_seq = seq
+        self.n_appended += 1
+        self._since_rotate += 1
+        return seq
+
+    def replay(self, after_seq: int = -1) -> Iterator[WALRecord]:
+        """Yield intact records with ``seq > after_seq`` in order.
+
+        Stops at the first torn/corrupt record (sets ``torn_tail``) —
+        everything after a tear is untrustworthy by construction.
+        """
+        for _first, path in self._segments():
+            recs, _clean, torn = _scan_segment(path)
+            for rec in recs:
+                if rec.seq > after_seq:
+                    yield rec
+            if torn:
+                self.torn_tail = True
+                return
+
+    def rotate(self) -> None:
+        """Start a fresh segment (called at snapshot points): records up to
+        ``last_seq`` stay in older segments, prunable once no retained
+        snapshot needs them."""
+        if self._fh is not None:
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+            self._fh.close()
+            self._fh = None
+        self._start_segment(self.last_seq + 1)
+        self._since_rotate = 0
+
+    def prune(self, upto_seq: int) -> int:
+        """Delete segments whose every record has ``seq <= upto_seq``;
+        returns how many were removed.  The active segment is never
+        pruned."""
+        segs = self._segments()
+        removed = 0
+        for i, (first, path) in enumerate(segs):
+            nxt = segs[i + 1][0] if i + 1 < len(segs) else None
+            if nxt is None:                       # active segment
+                break
+            if nxt - 1 <= upto_seq:               # fully covered
+                os.remove(path)
+                removed += 1
+            else:
+                break
+        return removed
+
+    @property
+    def lag(self) -> int:
+        """Records appended since the last rotate (≈ replay length if the
+        process died right now)."""
+        return self._since_rotate
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._segments())
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+            self._fh.close()
+            self._fh = None
+
+    def summary(self) -> Dict:
+        return {
+            "last_seq": self.last_seq,
+            "lag_records": self.lag,
+            "n_segments": self.n_segments,
+            "torn_tail": self.torn_tail,
+            "fsync": self.fsync,
+        }
+
+    def describe(self) -> str:
+        return (f"MutationWAL(dir={self.wal_dir!r}, last_seq={self.last_seq}, "
+                f"lag={self.lag}, segments={self.n_segments})")

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
 import threading
 import time
 import urllib.error
@@ -119,8 +120,23 @@ def serve_http(args) -> None:
     config = EngineConfig.from_flags(args, d_emb=args.d_emb,
                                      capacity=max(args.docs, 1024))
     engine = RetrievalEngine(config=config)
+    if args.state_dir:
+        report = engine.recover(args.state_dir)
+        print(f"[state]  {args.state_dir}: {report['status']} "
+              f"(snapshot={report['snapshot_step']} "
+              f"replayed={report['replayed']} "
+              f"fallbacks={report['fallbacks']} "
+              f"in {report['duration_ms']:.1f}ms)")
     driver = EngineDriver(engine, max_wait_ms=args.max_wait_ms,
-                          max_queue=args.max_queue).start()
+                          max_queue=args.max_queue)
+    driver.start(supervised=args.supervise)
+    supervisor = None
+    if args.supervise:
+        from repro.engine import Supervisor
+        supervisor = Supervisor(driver).start()
+        print(f"[watch]  supervisor on (heartbeat timeout "
+              f"{config.fault.heartbeat_timeout_s:g}s, max "
+              f"{config.fault.max_restarts} restarts)")
     quotas = TenantQuotas(
         max_inflight=args.max_inflight if args.max_inflight > 0 else None,
         max_docs=(args.max_docs_per_tenant
@@ -133,14 +149,28 @@ def serve_http(args) -> None:
     print(f"[driver] {driver.describe()}")
     print(f"[http]   serving on {handle.url} "
           f"(tenancy {'optional' if args.allow_anonymous else 'required'})")
+    # SIGTERM (kill, container stop) must take the same graceful path as
+    # ^C: drain the driver and cut a final snapshot before exiting
+    def _sigterm(signum, frame):
+        raise KeyboardInterrupt
+
+    signal.signal(signal.SIGTERM, _sigterm)
     try:
         while True:
-            time.sleep(3600)
+            time.sleep(max(args.snapshot_every_s, 0) or 3600)
+            if args.state_dir and args.snapshot_every_s > 0:
+                step = engine.save_snapshot()
+                print(f"[state]  snapshot step {step}")
     except KeyboardInterrupt:
         print("\n[http]   shutting down")
     finally:
         handle.stop()
+        if supervisor is not None:
+            supervisor.stop()
         driver.stop()
+        if args.state_dir:
+            engine.save_snapshot()
+            engine.wal.close()
 
 
 def connect_client(args) -> None:
@@ -288,6 +318,16 @@ def main():
                     help="per-tenant concurrent-search cap (0 = unlimited)")
     ap.add_argument("--max-docs-per-tenant", type=int, default=0,
                     help="per-tenant live-document cap (0 = unlimited)")
+    ap.add_argument("--state-dir", type=str, default="",
+                    help="durable state directory: recover from the latest "
+                         "valid snapshot + WAL tail on boot, log every "
+                         "mutation, snapshot on shutdown")
+    ap.add_argument("--snapshot-every-s", type=float, default=0.0,
+                    help="with --state-dir: also snapshot every N seconds "
+                         "(0 = only on shutdown)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="watchdog the driver thread: restart it with "
+                         "capped backoff if it dies or hangs")
     # HTTP client mode
     ap.add_argument("--connect", type=str, default="",
                     help="drive a running HTTP server at this URL instead "

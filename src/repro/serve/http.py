@@ -11,7 +11,9 @@ the queue keeps serving everyone else.
 Endpoints (JSON in, JSON out — except ``/metrics``, which is Prometheus
 text exposition):
 
-  GET  /healthz          liveness: 200 once the driver thread is running
+  GET  /healthz          liveness: 200 once the driver thread is running;
+                         ``?deep=1`` adds driver heartbeat age, supervisor
+                         state, WAL lag and the last recovery report
   GET  /metrics          Prometheus text exposition of the engine registry
   GET  /v1/stats         engine + driver counters, tenants, config, quotas
   GET  /v1/traces        recent request traces + slow-query records
@@ -33,7 +35,9 @@ Status mapping — the error taxonomy the engine grew for exactly this:
   404  unknown path          405  wrong method          413  body too large
   429  ``QuotaExceeded`` (per-tenant cap) or ``DriverQueueFull`` (global
        backpressure) — retryable, with a Retry-After hint
-  503  driver stopped        504  ``DeadlineExceeded`` / result timeout
+  503  driver stopped, or the request was isolated as the poison member
+       of a failing batch (``RequestFailed``)
+  504  ``DeadlineExceeded`` / result timeout
 
 ``require_tenant=True`` (the default) refuses tenantless searches and
 mutations with 400: the tenantless pool is the embedded/admin view, not
@@ -50,6 +54,7 @@ import dataclasses
 import json
 import threading
 import time
+import urllib.parse
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -60,6 +65,7 @@ from repro.engine import (
     DriverStopped,
     EngineDriver,
     FilterError,
+    RequestFailed,
     RetrievalEngine,
     SearchRequest,
 )
@@ -279,7 +285,8 @@ class RetrievalHTTPServer:
         if body == b"__too_large__":
             return 413, {"error": "request body exceeds "
                                   f"{self.max_body} bytes"}, {}
-        path = path.split("?", 1)[0]
+        path, _, qs = path.partition("?")
+        params = dict(urllib.parse.parse_qsl(qs)) if qs else {}
         routes = {
             ("GET", "/healthz"): self._do_health,
             ("GET", "/metrics"): self._do_metrics,
@@ -304,6 +311,8 @@ class RetrievalHTTPServer:
                                       "object"}, {}
         else:
             parsed = {}
+        for key, value in params.items():      # body keys win over the qs
+            parsed.setdefault(key, value)
         loop = asyncio.get_event_loop()
         try:
             # handlers are blocking (driver futures, device work): run them
@@ -323,6 +332,8 @@ class RetrievalHTTPServer:
         except DriverQueueFull as e:
             return 429, {"error": str(e),
                          "limit": "queue"}, {"Retry-After": "1"}
+        except RequestFailed as e:
+            return 503, {"error": str(e), "isolated": True}, {}
         except DriverStopped as e:
             return 503, {"error": str(e)}, {}
         except (DeadlineExceeded, TimeoutError) as e:
@@ -345,7 +356,23 @@ class RetrievalHTTPServer:
     def _do_health(self, body: Dict) -> Dict:
         if not self.driver.running:
             raise _HTTPError(503, "engine driver is not running")
-        return {"status": "ok", "n_docs": self.engine.n_docs}
+        out: Dict[str, Any] = {"status": "ok", "n_docs": self.engine.n_docs}
+        if str(body.get("deep", "")).lower() in ("1", "true", "yes"):
+            sup = self.driver.supervisor
+            with self.engine.lock:
+                stats = self.engine.stats
+                out["deep"] = {
+                    "driver": self.driver.health(),
+                    "supervisor": (sup.summary() if sup is not None
+                                   else {"attached": False}),
+                    "wal": (self.engine.wal.summary()
+                            if self.engine.wal is not None else None),
+                    "last_recovery": self.engine.last_recovery,
+                    "n_quarantined": self.driver.stats.n_quarantined,
+                    "n_recoveries": stats.n_recoveries,
+                    "n_rebuild_failures": stats.n_rebuild_failures,
+                }
+        return out
 
     def _do_metrics(self, body: Dict) -> _Raw:
         return _Raw(self.engine.metrics.render_prometheus().encode(),

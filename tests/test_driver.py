@@ -20,6 +20,7 @@ from repro.engine import (
     DriverQueueFull,
     DriverStopped,
     EngineDriver,
+    FaultToleranceConfig,
     RetrievalEngine,
     SearchRequest,
 )
@@ -162,6 +163,28 @@ class TestLifecycle:
         ids = [f.result(WAIT).doc_ids[0] for f in futures]
         assert ids == list(range(9))
         assert driver.stats.n_cancelled == 0
+
+    def test_stop_retry_after_timeout_can_abort(self):
+        """Regression: a drain stop() whose join timed out left the driver
+        wedged in the stopping state forever — a later stop(drain=False)
+        could not downgrade the drain policy and reclaim the thread."""
+        eng, db = make_engine(fault=FaultToleranceConfig(
+            inject="dispatch:hang@every=1,s=0.4"))
+        driver = EngineDriver(eng, max_wait_ms=0.0).start()
+        futs = [driver.submit(db[i]) for i in range(4)]
+        # every dispatch wedges 0.4s, so a short drain timeout must fire
+        with pytest.raises(TimeoutError):
+            driver.stop(drain=True, timeout=0.05)
+        # the retry downgrades drain -> abort and reclaims the thread
+        driver.stop(drain=False, timeout=WAIT)
+        assert not driver.running
+        for f in futs:                # served by the wedged dispatch, or
+            try:                      # cancelled by the abort — never stuck
+                f.result(WAIT)
+            except DriverStopped:
+                pass
+        with pytest.raises(DriverStopped):
+            driver.submit(db[0])
 
     def test_submit_during_drain_is_rejected(self):
         eng, db = make_engine()

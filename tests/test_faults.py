@@ -1,0 +1,825 @@
+"""Fault-tolerance layer: WAL durability, checksummed snapshots with
+corruption fallback, crash recovery (including a SIGKILL'd subprocess),
+driver supervision (dead + hung threads, capped backoff, give-up), rebuild
+retries, poison-batch bisection, and the config/index compatibility gate.
+
+Everything here is deterministic: failures come from the seeded
+`repro.engine.faults.FaultPlan` harness or from explicit file surgery, never
+from racing real hardware faults.  Every blocking wait carries a timeout so
+a broken recovery path fails the test instead of hanging the suite.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.engine import (
+    DriverStopped,
+    EngineDriver,
+    FaultPlan,
+    FaultToleranceConfig,
+    IndexMismatch,
+    InjectedFault,
+    MutationWAL,
+    PoisonError,
+    RequestFailed,
+    RetrievalEngine,
+    Supervisor,
+    SupervisorGaveUp,
+    WALError,
+)
+from repro.checkpoint import CorruptCheckpoint
+
+RNG = np.random.default_rng(41)
+D = 16
+WAIT = 30.0
+
+# tight supervision knobs so watchdog tests converge in milliseconds
+FAST_FT = dict(heartbeat_timeout_s=0.15, backoff_initial_s=0.01,
+               backoff_max_s=0.05)
+
+
+def make_engine(n_docs=48, fault=None, **kw):
+    kw.setdefault("d_start", 4)
+    kw.setdefault("k0", 8)
+    kw.setdefault("buckets", (1, 2, 4))
+    kw.setdefault("capacity", 64)
+    kw.setdefault("block_n", 32)
+    eng = RetrievalEngine(D, fault=fault, **kw)
+    db = RNG.normal(size=(n_docs, D)).astype(np.float32)
+    if n_docs:
+        eng.add_docs(db)
+    return eng, db
+
+
+def wait_until(pred, timeout=WAIT, msg="condition"):
+    deadline = time.perf_counter() + timeout
+    while not pred():
+        assert time.perf_counter() < deadline, f"timed out waiting: {msg}"
+        time.sleep(0.005)
+
+
+# ---------------------------------------------------------------------------
+# fault-plan parsing + firing
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_empty_spec_is_inert(self):
+        plan = FaultPlan.parse("")
+        assert plan.empty
+        for _ in range(3):
+            plan.check("dispatch")
+        assert plan.summary() == {"calls": {}, "fired": {}}
+
+    def test_once_fires_exactly_on_kth_call(self):
+        plan = FaultPlan.parse("rebuild:error@once=2")
+        plan.check("rebuild")
+        with pytest.raises(InjectedFault):
+            plan.check("rebuild")
+        plan.check("rebuild")                     # 3rd call: quiet again
+        assert plan.summary()["fired"] == {"rebuild:error": 1}
+
+    def test_first_and_every_qualifiers(self):
+        plan = FaultPlan.parse("wal_write:error@first=2")
+        for _ in range(2):
+            with pytest.raises(InjectedFault):
+                plan.check("wal_write")
+        plan.check("wal_write")
+        plan = FaultPlan.parse("wal_write:error@every=2")
+        plan.check("wal_write")
+        with pytest.raises(InjectedFault):
+            plan.check("wal_write")
+
+    def test_probabilistic_rule_replays_identically(self):
+        def draw():
+            plan = FaultPlan.parse("dispatch:error@p=0.5", seed=9)
+            out = []
+            for _ in range(32):
+                try:
+                    plan.check("dispatch")
+                    out.append(0)
+                except InjectedFault:
+                    out.append(1)
+            return out
+
+        assert draw() == draw()
+        assert 0 < sum(draw()) < 32
+
+    def test_poison_fires_only_on_marker_query(self):
+        plan = FaultPlan.parse("dispatch:poison@v=123.0")
+        clean = np.zeros(4, np.float32)
+        bad = clean.copy()
+        bad[0] = 123.0
+        plan.check("dispatch", queries=[clean, clean])
+        with pytest.raises(PoisonError):
+            plan.check("dispatch", queries=[clean, bad])
+
+    def test_bad_specs_rejected(self):
+        for spec in ("nowhere:error@once=1",       # unknown site
+                     "dispatch:melt@once=1",       # unknown action
+                     "dispatch:error",             # never fires
+                     "rebuild:poison@v=1.0",       # poison off-dispatch
+                     "dispatch:poison",            # poison without marker
+                     "dispatch:error@zap=1"):      # unknown qualifier
+            with pytest.raises(ValueError):
+                FaultPlan.parse(spec)
+
+    def test_config_parses_spec_eagerly(self):
+        with pytest.raises(ValueError):
+            FaultToleranceConfig(inject="dispatch:bogus@once=1")
+
+
+# ---------------------------------------------------------------------------
+# WAL unit behavior
+# ---------------------------------------------------------------------------
+class TestMutationWAL:
+    def test_append_replay_round_trip(self, tmp_path):
+        wal = MutationWAL(str(tmp_path))
+        assert wal.append("add", {"start": 0, "n": 2}) == 0
+        assert wal.append("delete", {"ids": [1]}) == 1
+        wal.close()
+        wal2 = MutationWAL(str(tmp_path))
+        recs = list(wal2.replay())
+        assert [(r.seq, r.kind) for r in recs] == [(0, "add"), (1, "delete")]
+        assert recs[1].payload["ids"] == [1]
+        assert wal2.last_seq == 1 and not wal2.torn_tail
+
+    def test_replay_after_seq_skips_prefix(self, tmp_path):
+        wal = MutationWAL(str(tmp_path))
+        for i in range(5):
+            wal.append("add", {"i": i})
+        assert [r.seq for r in wal.replay(after_seq=2)] == [3, 4]
+
+    def test_torn_tail_truncated_and_appendable(self, tmp_path):
+        wal = MutationWAL(str(tmp_path))
+        wal.append("add", {"i": 0})
+        wal.append("add", {"i": 1})
+        wal.close()
+        [log] = [p for p in os.listdir(tmp_path) if p.endswith(".log")]
+        path = os.path.join(tmp_path, log)
+        # crash mid-append: chop the last record in half
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size - 7)
+        wal2 = MutationWAL(str(tmp_path))
+        assert wal2.torn_tail
+        assert wal2.last_seq == 0                 # seq 1 was torn away
+        assert wal2.append("add", {"i": "next"}) == 1
+        assert [r.seq for r in wal2.replay()] == [0, 1]
+
+    def test_corrupt_record_stops_replay(self, tmp_path):
+        wal = MutationWAL(str(tmp_path))
+        wal.append("add", {"i": 0})
+        off_ok = os.path.getsize(
+            os.path.join(tmp_path, "wal-000000000000.log"))
+        wal.append("add", {"i": 1})
+        wal.close()
+        path = os.path.join(tmp_path, "wal-000000000000.log")
+        with open(path, "r+b") as f:             # flip a payload byte
+            f.seek(off_ok + 9)
+            byte = f.read(1)
+            f.seek(off_ok + 9)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        wal2 = MutationWAL(str(tmp_path))
+        assert [r.seq for r in wal2.replay()] == [0]
+        assert wal2.torn_tail
+
+    def test_rotate_and_prune(self, tmp_path):
+        wal = MutationWAL(str(tmp_path))
+        for i in range(3):
+            wal.append("add", {"i": i})
+        wal.rotate()
+        assert wal.lag == 0 and wal.n_segments == 2
+        wal.append("add", {"i": 3})
+        assert wal.lag == 1
+        # seqs 0..2 are covered: the old segment goes, the active one stays
+        assert wal.prune(2) == 1
+        assert wal.n_segments == 1
+        assert [r.seq for r in wal.replay()] == [3]
+        wal.close()
+
+    def test_closed_wal_refuses_appends(self, tmp_path):
+        wal = MutationWAL(str(tmp_path))
+        wal.close()
+        with pytest.raises(WALError, match="closed"):
+            wal.append("add", {})
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption detection
+# ---------------------------------------------------------------------------
+class TestCorruptCheckpoint:
+    def test_flipped_array_byte_detected(self, tmp_path):
+        from repro.checkpoint import load_arrays, save_arrays
+
+        save_arrays(str(tmp_path), 1, {"w": np.arange(32, dtype=np.float32)})
+        step_dir = os.path.join(tmp_path, "step_00000001")
+        npz = os.path.join(step_dir, "arrays.npz")
+        blob = bytearray(open(npz, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF
+        open(npz, "wb").write(bytes(blob))
+        with pytest.raises(CorruptCheckpoint):
+            load_arrays(str(tmp_path), step=1)
+
+    def test_manifest_garbage_detected(self, tmp_path):
+        from repro.checkpoint import load_arrays, save_arrays
+
+        save_arrays(str(tmp_path), 1, {"w": np.zeros(4, np.float32)})
+        manifest = os.path.join(tmp_path, "step_00000001",
+                                "manifest.msgpack")
+        open(manifest, "wb").write(b"\xc1 not msgpack")
+        with pytest.raises(CorruptCheckpoint):
+            load_arrays(str(tmp_path), step=1)
+
+
+# ---------------------------------------------------------------------------
+# engine durability: WAL + snapshots + recover()
+# ---------------------------------------------------------------------------
+def durable_engine(tmp_path, n_docs=48, **kw):
+    # durability first, THEN the seed corpus: every row is WAL-covered
+    eng, _ = make_engine(n_docs=0, **kw)
+    eng.enable_durability(str(tmp_path))
+    db = RNG.normal(size=(n_docs, D)).astype(np.float32)
+    if n_docs:
+        eng.add_docs(db)
+    return eng, db
+
+
+class TestRecovery:
+    def test_wal_only_recovery_no_snapshot(self, tmp_path):
+        eng, db = durable_engine(tmp_path)
+        extra = RNG.normal(size=(4, D)).astype(np.float32)
+        ids = eng.add_docs(extra)
+        eng.delete_docs(ids[:1])
+        eng.wal.close()
+
+        eng2, _ = make_engine(n_docs=0)
+        report = eng2.recover(str(tmp_path))
+        assert report["status"] == "ok"
+        assert report["snapshot_step"] is None
+        assert report["replayed"] == 3            # seed add + add + delete
+        assert eng2.n_docs == eng.n_docs
+        np.testing.assert_array_equal(
+            eng2.search(db[:4])[1], eng.search(db[:4])[1])
+
+    def test_snapshot_plus_tail_replay(self, tmp_path):
+        eng, db = durable_engine(tmp_path)
+        eng.search(db[:2])                        # build index state
+        eng.save_snapshot()
+        post = RNG.normal(size=(3, D)).astype(np.float32)
+        ids = eng.add_docs(post)                  # lands in the WAL tail
+        eng.delete_docs([0])
+        eng.wal.close()
+
+        eng2, _ = make_engine(n_docs=0)
+        report = eng2.recover(str(tmp_path))
+        assert report["snapshot_step"] is not None
+        assert report["replayed"] == 2
+        assert report["fallbacks"] == 0
+        assert eng2.n_docs == eng.n_docs
+        # tail-added docs retrievable; deleted doc stays deleted
+        _, idx = eng2.search(post)
+        np.testing.assert_array_equal(idx[:, 0], ids)
+        assert 0 not in eng2.search(db[:1])[1][0]
+
+    def test_recovered_engine_keeps_logging(self, tmp_path):
+        eng, db = durable_engine(tmp_path)
+        eng.wal.close()
+        eng2, _ = make_engine(n_docs=0)
+        eng2.recover(str(tmp_path))
+        more = RNG.normal(size=(2, D)).astype(np.float32)
+        ids = eng2.add_docs(more)
+        eng2.wal.close()
+        eng3, _ = make_engine(n_docs=0)
+        eng3.recover(str(tmp_path))
+        _, idx = eng3.search(more)
+        np.testing.assert_array_equal(idx[:, 0], ids)
+
+    def test_corrupt_newest_snapshot_falls_back(self, tmp_path):
+        eng, db = durable_engine(tmp_path)
+        eng.save_snapshot()
+        eng.add_docs(RNG.normal(size=(2, D)).astype(np.float32))
+        path2 = eng.save_snapshot()
+        # corrupt the NEWEST snapshot's arrays
+        npz = os.path.join(path2, "arrays.npz")
+        blob = bytearray(open(npz, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF
+        open(npz, "wb").write(bytes(blob))
+        eng.wal.close()
+
+        eng2, _ = make_engine(n_docs=0)
+        report = eng2.recover(str(tmp_path))
+        assert report["fallbacks"] == 1
+        # the older snapshot + the 'add' WAL record reconstruct everything
+        assert report["replayed"] >= 1
+        assert eng2.n_docs == eng.n_docs
+
+    def test_torn_wal_tail_reported(self, tmp_path):
+        eng, _ = durable_engine(tmp_path)
+        eng.wal.close()
+        wal_dir = os.path.join(tmp_path, "wal")
+        [log] = sorted(p for p in os.listdir(wal_dir) if p.endswith(".log"))
+        path = os.path.join(wal_dir, log)
+        with open(path, "r+b") as f:
+            f.truncate(os.path.getsize(path) - 3)
+        eng2, _ = make_engine(n_docs=0)
+        report = eng2.recover(str(tmp_path))
+        assert report["wal_truncated"]
+        assert eng2.n_docs == 0                   # seed add record was torn
+
+    def test_recover_rejects_mismatched_config(self, tmp_path):
+        eng, _ = durable_engine(tmp_path)
+        eng.save_snapshot()
+        eng.wal.close()
+        other = RetrievalEngine(D, d_start=4, k0=8, buckets=(1,),
+                                capacity=64, backend="quantized",
+                                backend_opts={"min_rebuild_rows": 16})
+        with pytest.raises(IndexMismatch, match="backend"):
+            other.recover(str(tmp_path))
+
+    def test_wal_validation_precedes_logging(self, tmp_path):
+        """A rejected mutation must not leave a WAL record behind (it
+        would diverge on replay)."""
+        eng, _ = durable_engine(tmp_path)
+        seq_before = eng.wal.last_seq
+        with pytest.raises(ValueError):
+            eng.add_docs(np.zeros((2, D + 3), np.float32))
+        with pytest.raises(IndexError):
+            eng.delete_docs([10_000])
+        assert eng.wal.last_seq == seq_before
+
+    def test_snapshot_requires_durability(self):
+        eng, _ = make_engine()
+        with pytest.raises(RuntimeError, match="durability"):
+            eng.save_snapshot()
+
+    def test_snapshot_prunes_wal_segments(self, tmp_path):
+        eng, _ = durable_engine(tmp_path, fault=FaultToleranceConfig(
+            snapshot_keep=1))
+        for _ in range(3):
+            eng.add_docs(RNG.normal(size=(2, D)).astype(np.float32))
+            eng.save_snapshot()
+        assert eng.wal.lag == 0
+        # keep=1: only the newest snapshot's tail segment (+ active) remain
+        assert eng.wal.n_segments <= 2
+
+    def test_tenant_and_metadata_survive_recovery(self, tmp_path):
+        eng, _ = make_engine(n_docs=0)
+        eng.enable_durability(str(tmp_path))
+        a = RNG.normal(size=(3, D)).astype(np.float32)
+        b = RNG.normal(size=(3, D)).astype(np.float32)
+        ids_a = eng.add_docs(a, tenant="alice",
+                             metadata=[{"lang": "en"}] * 3)
+        eng.add_docs(b, tenant="bob", metadata=[{"lang": "fr"}] * 3)
+        eng.save_snapshot()
+        c = RNG.normal(size=(2, D)).astype(np.float32)
+        ids_c = eng.add_docs(c, tenant="alice",
+                             metadata=[{"lang": "de"}] * 2)
+        eng.wal.close()
+
+        eng2, _ = make_engine(n_docs=0)
+        eng2.recover(str(tmp_path))
+        assert sorted(eng2.store.tenants()) == ["alice", "bob"]
+        assert eng2.store.tenant_doc_count("alice") == 5
+        _, idx = eng2.search(c[:1], tenant="alice", filter={"lang": "de"})
+        assert idx[0, 0] == ids_c[0]
+        # snapshot-covered rows kept their tenant column too
+        _, idx = eng2.search(a[:1], tenant="alice")
+        assert idx[0, 0] == ids_a[0]
+
+
+class TestSubprocessCrash:
+    """The durability contract against real process death: a child engine
+    acknowledges mutations (fsync'd WAL), gets SIGKILLed mid-churn, and the
+    parent must recover every acknowledged doc — no lost acks, no tombstone
+    resurrection."""
+
+    CHILD = r"""
+import os, sys, numpy as np
+sys.path.insert(0, {src!r})
+from repro.engine import RetrievalEngine
+
+eng = RetrievalEngine({d}, d_start=4, k0=8, buckets=(1,), capacity=64,
+                      block_n=32)
+eng.enable_durability({state!r})
+rng = np.random.default_rng(5)
+ack = open(os.path.join({state!r}, "acked.log"), "a")
+os.write(1, b"ready\n")
+i = 0
+while True:
+    vecs = rng.normal(size=(2, {d})).astype(np.float32) + i
+    ids = eng.add_docs(vecs)
+    if i % 5 == 4:
+        eng.delete_docs(ids[:1])
+        note = f"del {{ids[0]}}\n"
+    else:
+        note = ""
+    # ack AFTER the engine returned: the WAL record is already fsync'd
+    ack.write(f"add {{ids[0]}} {{ids[1]}}\n" + note)
+    ack.flush(); os.fsync(ack.fileno())
+    i += 1
+"""
+
+    @pytest.mark.slow
+    def test_sigkill_loses_no_acked_mutation(self, tmp_path):
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        state = str(tmp_path)
+        code = self.CHILD.format(src=os.path.abspath(src), d=D, state=state)
+        proc = subprocess.Popen([sys.executable, "-c", code],
+                                stdout=subprocess.PIPE)
+        try:
+            assert proc.stdout.readline().strip() == b"ready"
+            # let it churn, then kill it mid-flight — no warning, no flush
+            time.sleep(0.6)
+            os.kill(proc.pid, signal.SIGKILL)
+            proc.wait(timeout=WAIT)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+
+        acked_adds, acked_dels = set(), set()
+        with open(os.path.join(state, "acked.log")) as f:
+            for line in f:
+                kind, *ids = line.split()
+                if kind == "add":
+                    acked_adds.update(int(x) for x in ids)
+                else:
+                    acked_dels.add(int(ids[0]))
+        assert len(acked_adds) > 4, "child died before doing real work"
+
+        eng, _ = make_engine(n_docs=0)
+        report = eng.recover(state)
+        assert report["status"] == "ok"
+        live = acked_adds - acked_dels
+        for doc_id in sorted(live):
+            assert eng.store.is_live(doc_id), \
+                f"acked doc {doc_id} lost by recovery"
+        for doc_id in sorted(acked_dels):
+            assert not eng.store.is_live(doc_id), \
+                f"tombstoned doc {doc_id} resurrected"
+        # recovered corpus actually serves: every live doc is retrievable
+        some = sorted(live)[:4]
+        q = np.stack([np.asarray(eng.store.db[i]) for i in some])
+        _, idx = eng.search(q)
+        np.testing.assert_array_equal(idx[:, 0], some)
+
+
+# ---------------------------------------------------------------------------
+# driver supervision
+# ---------------------------------------------------------------------------
+class TestSupervision:
+    def test_supervised_crash_restarts_and_serves(self, tmp_path):
+        eng, db = make_engine(fault=FaultToleranceConfig(
+            inject="dispatch:crash@once=1", **FAST_FT))
+        driver = EngineDriver(eng, max_wait_ms=0.0)
+        driver.start(supervised=True)
+        sup = Supervisor(driver).start()
+        try:
+            bad = driver.submit(db[0])
+            # the crashed dispatch fails its own chunk...
+            with pytest.raises(DriverStopped):
+                bad.result(WAIT)
+            # ...the supervisor revives the thread and service resumes
+            wait_until(lambda: driver.stats.n_restarts >= 1,
+                       msg="supervisor restart")
+            res = driver.retrieve(db[1], timeout=WAIT)
+            assert res.doc_ids[0] == 1
+            assert driver.stats.n_driver_crashes == 1
+            assert driver.supervisor is sup
+        finally:
+            sup.stop()
+            driver.stop()
+
+    def test_pending_queue_survives_crash(self, tmp_path):
+        """Requests queued BEHIND the crashing batch are served by the
+        replacement thread — nobody but the crashed chunk pays."""
+        eng, db = make_engine(fault=FaultToleranceConfig(
+            inject="dispatch:crash@once=1", **FAST_FT))
+        # short batching window so queued requests dispatch promptly once
+        # the replacement thread takes over
+        driver = EngineDriver(eng, max_wait_ms=5.0, max_queue=64)
+        futs = [driver.submit(db[i]) for i in range(5)]
+        driver.start(supervised=True)
+        sup = Supervisor(driver).start()
+        try:
+            survivors = [f.result(WAIT).doc_ids[0] for f in futs
+                         if f.exception(WAIT) is None]
+            assert len(survivors) >= 1            # replacement served them
+            assert driver.stats.n_driver_crashes == 1
+        finally:
+            sup.stop()
+            driver.stop()
+
+    def test_hung_thread_detected_and_replaced(self):
+        eng, db = make_engine(fault=FaultToleranceConfig(
+            inject="dispatch:hang@once=1,s=1.5", **FAST_FT))
+        driver = EngineDriver(eng, max_wait_ms=0.0)
+        driver.start(supervised=True)
+        sup = Supervisor(driver).start()
+        try:
+            slow = driver.submit(db[0])          # dispatch wedges 1.5s
+            time.sleep(0.05)
+            quick = driver.submit(db[1])         # queues behind the hang
+            res = quick.result(WAIT)             # replacement must serve it
+            assert res.doc_ids[0] == 1
+            assert driver.stats.n_restarts >= 1
+            assert sup.last_cause == "hung"
+            # the wedged thread eventually finishes its own dispatch and
+            # stands down; its client still gets the (late) answer
+            assert slow.result(WAIT).doc_ids[0] == 0
+        finally:
+            sup.stop()
+            driver.stop()
+
+    def test_crash_storm_gives_up_after_max_restarts(self):
+        eng, db = make_engine(fault=FaultToleranceConfig(
+            inject="dispatch:crash@every=1", max_restarts=2, **FAST_FT))
+        driver = EngineDriver(eng, max_wait_ms=0.0, max_queue=64)
+        driver.start(supervised=True)
+        sup = Supervisor(driver).start()
+        try:
+            futs = [driver.submit(db[i % len(db)]) for i in range(12)]
+            wait_until(lambda: sup.gave_up, msg="supervisor give-up")
+            for f in futs:
+                with pytest.raises(DriverStopped):
+                    f.result(WAIT)
+            with pytest.raises(DriverStopped):
+                driver.submit(db[0])
+            assert driver.stats.n_restarts == 2
+            with pytest.raises(SupervisorGaveUp):
+                driver.stop()
+        finally:
+            sup.stop()
+
+    def test_unsupervised_crash_stays_fatal(self):
+        eng, db = make_engine(fault=FaultToleranceConfig(
+            inject="dispatch:crash@once=1"))
+        driver = EngineDriver(eng, max_wait_ms=0.0).start()
+        fut = driver.submit(db[0])
+        with pytest.raises(DriverStopped):
+            fut.result(WAIT)
+        wait_until(lambda: not driver.running, msg="driver going fatal")
+        with pytest.raises(DriverStopped):
+            driver.submit(db[1])
+        with pytest.raises(BaseException, match="injected crash"):
+            driver.stop()
+
+    def test_manual_restart_without_supervisor(self):
+        eng, db = make_engine(fault=FaultToleranceConfig(
+            inject="dispatch:crash@once=1"))
+        driver = EngineDriver(eng, max_wait_ms=0.0)
+        driver.start(supervised=True)
+        try:
+            bad = driver.submit(db[0])
+            with pytest.raises(DriverStopped):
+                bad.result(WAIT)
+            wait_until(lambda: driver.health()["crashed"],
+                       msg="crash recorded")
+            assert driver.restart()
+            assert driver.retrieve(db[2], timeout=WAIT).doc_ids[0] == 2
+            assert driver.stats.n_restarts == 1
+        finally:
+            driver.stop()
+
+    def test_restart_refuses_non_running_driver(self):
+        eng, _ = make_engine()
+        driver = EngineDriver(eng)
+        assert not driver.restart()               # never started
+        driver.start()
+        driver.stop()
+        assert not driver.restart()               # already stopped
+
+    def test_health_snapshot_fields(self):
+        eng, db = make_engine()
+        with EngineDriver(eng, max_wait_ms=0.0) as driver:
+            driver.retrieve(db[0], timeout=WAIT)
+            h = driver.health()
+        assert h["state"] in ("running", "stopped")
+        assert h["thread_alive"] in (True, False)
+        assert h["n_pending"] == 0
+        assert h["heartbeat_age_s"] >= 0.0
+        assert not h["crashed"]
+
+
+# ---------------------------------------------------------------------------
+# rebuild retries
+# ---------------------------------------------------------------------------
+class TestRebuildRetry:
+    def make_bg_engine(self, inject, retries=3):
+        # warm the initial (sync) build with an inert plan, THEN arm the
+        # faults and grow the corpus: only background rebuilds fail
+        eng = RetrievalEngine(
+            D, d_start=4, k0=8, buckets=(1, 2), capacity=256, block_n=32,
+            backend="quantized", backend_opts={"min_rebuild_rows": 8},
+            rebuild_mode="background",
+            fault=FaultToleranceConfig(rebuild_retries=retries))
+        db = RNG.normal(size=(48, D)).astype(np.float32)
+        eng.add_docs(db)
+        eng.search(db[:1])
+        assert eng.stats.n_rebuilds == 1
+        eng.faults = FaultPlan.parse(inject)
+        eng.add_docs(RNG.normal(size=(48, D)).astype(np.float32))
+        return eng, db
+
+    def test_transient_failures_retried_to_success(self):
+        eng, db = self.make_bg_engine("rebuild:error@first=2")
+        deadline = time.perf_counter() + WAIT
+        while eng.stats.n_rebuilds < 2:          # beyond the warm build
+            eng.maybe_rebuild()
+            assert time.perf_counter() < deadline, "rebuild never adopted"
+            time.sleep(0.01)
+        assert eng.stats.n_rebuild_failures == 2
+        _, idx = eng.search(db[:4])
+        np.testing.assert_array_equal(idx[:, 0], np.arange(4))
+
+    def test_persistent_failure_escalates_past_budget(self):
+        eng, _ = self.make_bg_engine("rebuild:error@first=50", retries=2)
+        deadline = time.perf_counter() + WAIT
+        with pytest.raises(RuntimeError, match="failed .* times in a row"):
+            while time.perf_counter() < deadline:
+                eng.maybe_rebuild()
+                time.sleep(0.01)
+        assert eng.stats.n_rebuild_failures == 3  # budget 2 + the last straw
+
+
+# ---------------------------------------------------------------------------
+# poison isolation by batch bisection
+# ---------------------------------------------------------------------------
+class TestPoisonBisection:
+    def test_poison_request_fails_alone(self):
+        eng, db = make_engine(buckets=(1, 2, 4), fault=FaultToleranceConfig(
+            inject="dispatch:poison@v=777.0"))
+        poison = db[1].copy()
+        poison[0] = 777.0
+        driver = EngineDriver(eng, max_wait_ms=60_000)   # unstarted: inline
+        futs = [driver.submit(db[0]), driver.submit(poison),
+                driver.submit(db[2]), driver.submit(db[3])]
+        driver.stop(drain=True)
+        with pytest.raises(RequestFailed, match="bisection"):
+            futs[1].result(0)
+        for i in (0, 2, 3):
+            assert futs[i].result(0).doc_ids[0] == i
+        assert driver.stats.n_quarantined == 1
+        assert driver.stats.n_bisections >= 1
+        assert driver.stats.n_completed == 3
+
+    def test_bisect_disabled_fails_whole_batch(self):
+        eng, db = make_engine(buckets=(1, 2, 4), fault=FaultToleranceConfig(
+            inject="dispatch:poison@v=777.0", poison_bisect=False))
+        poison = db[1].copy()
+        poison[0] = 777.0
+        driver = EngineDriver(eng, max_wait_ms=60_000)
+        futs = [driver.submit(db[0]), driver.submit(poison),
+                driver.submit(db[2]), driver.submit(db[3])]
+        driver.stop(drain=True)
+        for f in futs:
+            with pytest.raises(PoisonError):
+                f.result(0)
+        assert driver.stats.n_quarantined == 0
+
+    def test_two_poisons_both_isolated(self):
+        eng, db = make_engine(buckets=(1, 2, 4), fault=FaultToleranceConfig(
+            inject="dispatch:poison@v=777.0"))
+        p1, p2 = db[0].copy(), db[3].copy()
+        p1[0] = p2[0] = 777.0
+        driver = EngineDriver(eng, max_wait_ms=60_000)
+        futs = [driver.submit(p1), driver.submit(db[1]),
+                driver.submit(db[2]), driver.submit(p2)]
+        driver.stop(drain=True)
+        for i in (0, 3):
+            with pytest.raises(RequestFailed):
+                futs[i].result(0)
+        for i in (1, 2):
+            assert futs[i].result(0).doc_ids[0] == i
+        assert driver.stats.n_quarantined == 2
+
+    def test_singleton_failure_propagates_raw(self):
+        """A failing batch of ONE is not 'isolated' — the client sees the
+        real exception (same contract as before bisection existed)."""
+        eng, db = make_engine(buckets=(1,), fault=FaultToleranceConfig(
+            inject="dispatch:poison@v=777.0"))
+        poison = db[0].copy()
+        poison[0] = 777.0
+        driver = EngineDriver(eng, max_wait_ms=60_000)
+        fut = driver.submit(poison)
+        driver.stop(drain=True)
+        with pytest.raises(PoisonError):
+            fut.result(0)
+        assert driver.stats.n_quarantined == 0
+
+
+# ---------------------------------------------------------------------------
+# index/config compatibility gate
+# ---------------------------------------------------------------------------
+def _backend_variants():
+    # mirror tests/test_backends.py's six variants without importing it
+    # (pytest collects test modules standalone)
+    return [
+        ("flat", "flat", {}),
+        ("ivf", "ivf", dict(n_lists=6, n_probe=3, min_index_rows=16,
+                            min_rebuild_rows=8)),
+        ("ivf_kernel", "ivf", dict(n_lists=6, n_probe=3, min_index_rows=16,
+                                   min_rebuild_rows=8, use_kernel=True,
+                                   kernel_block_m=16)),
+        ("ivf_pq", "ivf", dict(n_lists=6, n_probe=3, min_index_rows=16,
+                               min_rebuild_rows=8, use_kernel=True,
+                               kernel_block_m=16, stage0_dtype="pq")),
+        ("quantized", "quantized", dict(min_rebuild_rows=8)),
+        ("quantized_pq", "quantized", dict(min_rebuild_rows=8, codec="pq")),
+    ]
+
+
+class TestIndexCompatibility:
+    @pytest.mark.parametrize("variant,backend,opts", _backend_variants())
+    def test_load_rejects_wrong_dim(self, tmp_path, variant, backend, opts):
+        eng = RetrievalEngine(D, d_start=4, k0=8, buckets=(1,), capacity=64,
+                              block_n=32, backend=backend, backend_opts=opts)
+        eng.add_docs(RNG.normal(size=(40, D)).astype(np.float32))
+        eng.search(RNG.normal(size=(1, D)).astype(np.float32))
+        assert eng.save_index(str(tmp_path)) is not None
+
+        wrong = RetrievalEngine(D * 2, d_start=4, k0=8, buckets=(1,),
+                                capacity=64, block_n=32, backend=backend,
+                                backend_opts=opts)
+        wrong.add_docs(RNG.normal(size=(40, D * 2)).astype(np.float32))
+        with pytest.raises(IndexMismatch, match="d_emb"):
+            wrong.load_index(str(tmp_path))
+
+    @pytest.mark.parametrize("variant,backend,opts", _backend_variants())
+    def test_load_rejects_wrong_backend_kind(self, tmp_path, variant,
+                                             backend, opts):
+        eng = RetrievalEngine(D, d_start=4, k0=8, buckets=(1,), capacity=64,
+                              block_n=32, backend=backend, backend_opts=opts)
+        eng.add_docs(RNG.normal(size=(40, D)).astype(np.float32))
+        eng.search(RNG.normal(size=(1, D)).astype(np.float32))
+        eng.save_index(str(tmp_path))
+
+        other_kind = "quantized" if backend != "quantized" else "ivf"
+        other_opts = (dict(min_rebuild_rows=8) if other_kind == "quantized"
+                      else dict(n_lists=6, n_probe=3, min_index_rows=16,
+                                min_rebuild_rows=8))
+        other = RetrievalEngine(D, d_start=4, k0=8, buckets=(1,),
+                                capacity=64, block_n=32, backend=other_kind,
+                                backend_opts=other_opts)
+        other.add_docs(RNG.normal(size=(40, D)).astype(np.float32))
+        with pytest.raises(IndexMismatch, match="backend"):
+            other.load_index(str(tmp_path))
+
+    def test_round_trip_same_config_still_works(self, tmp_path):
+        eng = RetrievalEngine(D, d_start=4, k0=8, buckets=(1,), capacity=64,
+                              block_n=32, backend="quantized",
+                              backend_opts=dict(min_rebuild_rows=8))
+        db = RNG.normal(size=(40, D)).astype(np.float32)
+        eng.add_docs(db)
+        eng.search(db[:1])
+        eng.save_index(str(tmp_path))
+        twin = RetrievalEngine(D, d_start=4, k0=8, buckets=(1,),
+                               capacity=64, block_n=32, backend="quantized",
+                               backend_opts=dict(min_rebuild_rows=8))
+        twin.add_docs(db)
+        assert twin.load_index(str(tmp_path))
+        np.testing.assert_array_equal(
+            twin.search(db[:4])[1], eng.search(db[:4])[1])
+
+
+# ---------------------------------------------------------------------------
+# deep health over HTTP
+# ---------------------------------------------------------------------------
+class TestDeepHealth:
+    def test_deep_healthz_reports_ft_state(self, tmp_path):
+        import urllib.request
+
+        from repro.serve import serve_in_thread
+
+        eng, db = make_engine(n_docs=0)
+        eng.enable_durability(str(tmp_path))
+        eng.add_docs(RNG.normal(size=(8, D)).astype(np.float32))
+        driver = EngineDriver(eng, max_wait_ms=1.0)
+        driver.start(supervised=True)
+        sup = Supervisor(driver).start()
+        try:
+            with serve_in_thread(eng, driver,
+                                 require_tenant=False) as handle:
+                with urllib.request.urlopen(
+                        handle.url + "/healthz?deep=1", timeout=WAIT) as r:
+                    payload = json.loads(r.read())
+                with urllib.request.urlopen(
+                        handle.url + "/healthz", timeout=WAIT) as r:
+                    shallow = json.loads(r.read())
+        finally:
+            sup.stop()
+            driver.stop()
+        assert "deep" not in shallow
+        deep = payload["deep"]
+        assert deep["driver"]["state"] == "running"
+        assert deep["driver"]["heartbeat_age_s"] >= 0.0
+        assert deep["supervisor"]["attached"]
+        assert deep["wal"]["last_seq"] == 0       # the one add above
+        assert deep["last_recovery"] is None
+        assert deep["n_quarantined"] == 0
