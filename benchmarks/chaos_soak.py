@@ -20,9 +20,17 @@ or explicit file surgery (never racing real hardware faults), recorded to
    index once a build succeeds.
 5. **poison isolation** — a batch carrying poison requests; bisection must
    quarantine exactly the offenders while every clean request is served.
+6. **replica kill** — a primary + two WAL-tailing followers behind an
+   in-process `ReplicaRouter`; one follower is SIGKILLed under open-loop
+   search load.  Zero non-429 search failures are tolerated, the router
+   must open the dead replica's breaker within the probe window, and the
+   restarted follower must rejoin via snapshot + WAL catch-up and serve
+   again.  Includes a read-your-writes sub-check (a ``min_seq`` token from
+   a mutation is honoured on every replica) and a deterministic
+   ``replica_apply`` fault-injection sub-check.
 
 Exit status is non-zero if any check fails.  ``--smoke`` (CI) shrinks the
-corpus and the storm but enforces every check — all five phases are
+corpus and the storm but enforces every check — all six phases are
 deterministic, so nothing is skipped:
 
     PYTHONPATH=src python -m benchmarks.chaos_soak --smoke
@@ -306,6 +314,193 @@ def phase_poison(args) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# phase 6: SIGKILL a replica under load; failover, rejoin, read-your-writes
+# ---------------------------------------------------------------------------
+def _free_ports(n: int):
+    import socket
+
+    socks = [socket.socket() for _ in range(n)]
+    try:
+        for s in socks:
+            s.bind(("127.0.0.1", 0))
+        return [s.getsockname()[1] for s in socks]
+    finally:
+        for s in socks:
+            s.close()
+
+
+def _spawn_server(role: str, state: str, port: int, dim: int, log_path: str,
+                  snapshot_every_s: float = 0.0) -> subprocess.Popen:
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--serve-http",
+           f"--role={role}", "--state-dir", state, "--port", str(port),
+           "--allow-anonymous", "--docs", "0", "--d-emb", str(dim)]
+    if snapshot_every_s > 0:
+        cmd += ["--snapshot-every-s", str(snapshot_every_s)]
+    env = dict(os.environ, PYTHONPATH=src)
+    log = open(log_path, "ab")
+    return subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT,
+                            env=env)
+
+
+def phase_replica_kill(args, state: str) -> dict:
+    from repro.serve import ReplicaRouter, http_call
+
+    os.makedirs(state, exist_ok=True)
+    p_prim, p_f1, p_f2 = _free_ports(3)
+    urls = [f"http://127.0.0.1:{p}" for p in (p_prim, p_f1, p_f2)]
+    procs: dict = {}
+
+    def boot(name, role, port):
+        procs[name] = _spawn_server(
+            role, state, port, args.dim,
+            os.path.join(state, f"{name}.log"),
+            snapshot_every_s=1.0 if role == "primary" else 0.0)
+
+    def wait_ready_url(url, timeout=WAIT):
+        wait_until(lambda: http_call(url, "/healthz?ready=1",
+                                     timeout=2.0)[0] == 200,
+                   timeout=timeout, msg=f"{url} ready")
+
+    router = None
+    try:
+        boot("primary", "primary", p_prim)
+        wait_ready_url(urls[0])
+        boot("f1", "follower", p_f1)
+        boot("f2", "follower", p_f2)
+        wait_ready_url(urls[1])
+        wait_ready_url(urls[2])
+
+        router = ReplicaRouter(urls, probe_interval_s=0.1,
+                               failure_threshold=2, breaker_open_s=0.2,
+                               request_timeout_s=WAIT).start()
+        router.wait_ready(3, timeout=WAIT)
+
+        rng = np.random.default_rng(args.seed + 6)
+        docs = rng.normal(size=(args.docs, args.dim)).astype(np.float32)
+        status, payload, _ = router.mutate("/v1/docs", {
+            "vectors": docs.tolist(), "tenant": "chaos"})
+        assert status == 200, f"seed add failed: {status} {payload}"
+
+        # read-your-writes: a fresh mutation's seq token must be honoured
+        # on EVERY replica — no replica may serve a pre-mutation view
+        marker = (rng.normal(size=(1, args.dim)) + 50.0).astype(np.float32)
+        status, payload, _ = router.mutate("/v1/docs", {
+            "vectors": marker.tolist(), "tenant": "chaos"})
+        assert status == 200, f"marker add failed: {status} {payload}"
+        marker_id, marker_seq = payload["ids"][0], payload["seq"]
+        ryw = {}
+        for url in urls:
+            s, p = http_call(url, "/v1/search", {
+                "query": marker[0].tolist(), "tenant": "chaos", "k": 1,
+                "min_seq": marker_seq, "deadline_ms": 30_000}, timeout=WAIT)
+            ryw[url] = bool(s == 200 and p["ids"][0] == marker_id)
+
+        # open-loop load; SIGKILL one follower a third of the way in
+        n_req = args.replica_requests
+        queries = rng.normal(size=(n_req, args.dim)).astype(np.float32)
+        codes = []
+        kill_at = n_req // 3
+        t_kill = t_detect = None
+        f1_ep = next(ep for ep in router.replicas if ep.url == urls[1])
+        for i in range(n_req):
+            if i == kill_at:
+                os.kill(procs["f1"].pid, signal.SIGKILL)
+                procs["f1"].wait(timeout=WAIT)
+                t_kill = time.perf_counter()
+            s, _, _ = router.search({
+                "query": queries[i].tolist(), "tenant": "chaos", "k": 1,
+                "deadline_ms": 30_000})
+            codes.append(s)
+            if t_kill is not None and t_detect is None \
+                    and not (f1_ep.alive and f1_ep.breaker.allow()):
+                t_detect = time.perf_counter()
+        if t_detect is None and not (f1_ep.alive and f1_ep.breaker.allow()):
+            t_detect = time.perf_counter()
+        bad = [c for c in codes if c not in (200, 429)]
+        detect_s = (t_detect - t_kill) if t_detect else None
+
+        # rejoin: wait for a primary snapshot so the restart exercises the
+        # snapshot + WAL-tail bootstrap path, then bring f1 back
+        wait_until(lambda: any(d.startswith("step_")
+                               for d in os.listdir(state)),
+                   msg="primary snapshot on disk")
+        boot("f1", "follower", p_f1)
+        wait_ready_url(urls[1])
+        s, deep = http_call(urls[1], "/healthz?deep=1", timeout=WAIT)
+        repl = (deep.get("deep") or {}).get("replication") or {}
+        boot_report = repl.get("last_bootstrap") or {}
+        prim_seq = http_call(urls[0], "/healthz",
+                             timeout=WAIT)[1]["applied_seq"]
+        wait_until(lambda: http_call(
+            urls[1], "/healthz",
+            timeout=2.0)[1].get("applied_seq", -1) >= prim_seq,
+            msg="restarted follower catches up")
+        s, p = http_call(urls[1], "/v1/search", {
+            "query": marker[0].tolist(), "tenant": "chaos", "k": 1,
+            "min_seq": marker_seq, "deadline_ms": 30_000}, timeout=WAIT)
+        rejoined_serves = bool(s == 200 and p["ids"][0] == marker_id)
+
+        return {
+            "requests": n_req,
+            "codes": {str(c): codes.count(c) for c in sorted(set(codes))},
+            "non_retryable_failures": len(bad),
+            "failover_detect_s": detect_s,
+            "read_your_writes": ryw,
+            "rejoin_bootstrap_snapshot": boot_report.get("snapshot_step"),
+            "rejoined_serves_min_seq": rejoined_serves,
+            "router": router.status(),
+        }
+    finally:
+        if router is not None:
+            router.stop()
+        for proc in procs.values():
+            if proc.poll() is None:
+                proc.kill()
+                proc.wait(timeout=WAIT)
+
+
+def phase_replica_faults(args) -> dict:
+    """In-process ``wal_ship``/``replica_apply`` fault-site sub-check: the
+    applier counts and retries injected faults, then converges."""
+    import tempfile
+
+    from repro.engine import FaultPlan, ReplicaApplier, RetrievalEngine
+
+    rng = np.random.default_rng(args.seed + 7)
+    with tempfile.TemporaryDirectory() as td:
+        prim = RetrievalEngine(args.dim, d_start=8, k0=16, buckets=(1,),
+                               capacity=1024, block_n=64)
+        prim.enable_durability(td)
+        prim.add_docs(rng.normal(size=(32, args.dim)).astype(np.float32))
+        want = prim.wal.last_seq
+
+        foll = RetrievalEngine(args.dim, d_start=8, k0=16, buckets=(1,),
+                               capacity=1024, block_n=64)
+        foll.faults = FaultPlan.parse(
+            "wal_ship:error@first=1;replica_apply:error@first=2",
+            seed=args.seed)
+        applier = ReplicaApplier(foll, td, poll_s=0.01)
+        applier.bootstrap()
+        applier.start()
+        try:
+            wait_until(lambda: applier.applied_seq >= want,
+                       msg="applier converges through injected faults")
+        finally:
+            applier.stop()
+            prim.wal.close()
+        st = applier.status()
+        return {
+            "applied_seq": st["applied_seq"],
+            "want_seq": want,
+            "n_poll_errors": st["n_poll_errors"],
+            "n_apply_errors": st["n_apply_errors"],
+            "n_docs": foll.n_docs,
+        }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--docs", type=int, default=512)
@@ -316,6 +511,9 @@ def main() -> None:
                     help="child iteration that cuts a mid-churn snapshot")
     ap.add_argument("--storm-requests", type=int, default=200)
     ap.add_argument("--crash-p", type=float, default=0.2)
+    ap.add_argument("--replica-requests", type=int, default=120,
+                    help="open-loop searches driven through the router "
+                         "while a replica is SIGKILLed")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=str, default=None)
     ap.add_argument("--smoke", action="store_true",
@@ -326,6 +524,7 @@ def main() -> None:
         args.docs, args.dim = 128, 32
         args.churn_s, args.churn_snapshot_at = 0.6, 15
         args.storm_requests = 60
+        args.replica_requests = 60
 
     import tempfile
 
@@ -358,6 +557,19 @@ def main() -> None:
     print(f"poison: isolated={poison['isolated']}/{poison['poisoned']} "
           f"clean={poison['clean_served']}/{poison['batch'] - 2}")
 
+    with tempfile.TemporaryDirectory() as td:
+        replica = phase_replica_kill(args, os.path.join(td, "replica"))
+    print(f"replica: codes={replica['codes']} "
+          f"detect_s={replica['failover_detect_s']} "
+          f"ryw={sum(replica['read_your_writes'].values())}/"
+          f"{len(replica['read_your_writes'])} "
+          f"rejoined={replica['rejoined_serves_min_seq']}")
+
+    rfaults = phase_replica_faults(args)
+    print(f"replica-faults: poll_errors={rfaults['n_poll_errors']} "
+          f"apply_errors={rfaults['n_apply_errors']} "
+          f"applied={rfaults['applied_seq']}/{rfaults['want_seq']}")
+
     checks = {
         # 1: every fsync-acked mutation survives SIGKILL
         "sigkill_child_did_real_work": sigkill["acked_adds"] > 4,
@@ -387,6 +599,22 @@ def main() -> None:
             and poison["quarantined"] == poison["poisoned"],
         "poison_clean_unharmed":
             poison["clean_served"] == poison["batch"] - poison["poisoned"],
+        # 6: a SIGKILLed replica never surfaces as a non-429 failure; the
+        #    breaker opens within the probe window; the restarted follower
+        #    rejoins (snapshot + WAL tail) and honours old min_seq tokens
+        "replica_zero_nonretryable_failures":
+            replica["non_retryable_failures"] == 0,
+        "replica_failover_within_probe_window":
+            replica["failover_detect_s"] is not None
+            and replica["failover_detect_s"] < 5.0,
+        "replica_read_your_writes":
+            all(replica["read_your_writes"].values()),
+        "replica_rejoined_from_snapshot":
+            replica["rejoin_bootstrap_snapshot"] is not None,
+        "replica_rejoined_serves": replica["rejoined_serves_min_seq"],
+        "replica_fault_sites_retried":
+            rfaults["n_poll_errors"] >= 1 and rfaults["n_apply_errors"] >= 1
+            and rfaults["applied_seq"] == rfaults["want_seq"],
     }
 
     record = {
@@ -395,13 +623,15 @@ def main() -> None:
         "config": {
             "docs": args.docs, "dim": args.dim, "churn_s": args.churn_s,
             "storm_requests": args.storm_requests, "crash_p": args.crash_p,
-            "seed": args.seed,
+            "replica_requests": args.replica_requests, "seed": args.seed,
         },
         "sigkill": sigkill,
         "torn_checkpoint": torn,
         "crash_storm": storm,
         "rebuild_retry": rebuild,
         "poison": poison,
+        "replica_kill": replica,
+        "replica_faults": rfaults,
         "checks": checks,
     }
 

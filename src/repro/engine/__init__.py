@@ -40,6 +40,15 @@ Public API:
                                    structurally by store/mask/rebuild bumps
   MutationWAL, WALError          — fsync'd mutation write-ahead log behind
                                    ``enable_durability``/``recover``
+  WALCursor, WALGap              — seq-keyed tailing reader over a WAL
+                                   directory (replication shipping:
+                                   rotate/prune-safe, gap detection)
+  ReplicaApplier,
+  PrimaryReplication             — WAL-shipped replication: follower
+                                   snapshot bootstrap + tail catch-up,
+                                   replica_lag, min_seq waits
+  ReplicationConfig              — role/poll/lag-bound knobs on
+                                   ``EngineConfig.replication``
   FaultToleranceConfig           — WAL/supervision/injection knobs on
                                    ``EngineConfig.fault``
   FaultPlan, InjectedFault,
@@ -74,6 +83,7 @@ from repro.engine.config import (
     FlatConfig,
     IVFConfig,
     QuantizedConfig,
+    ReplicationConfig,
     backend_config,
 )
 from repro.engine.driver import (
@@ -100,8 +110,9 @@ from repro.engine.faults import (
     InjectedFault,
     PoisonError,
 )
+from repro.engine.replication import PrimaryReplication, ReplicaApplier
 from repro.engine.supervise import Supervisor, SupervisorGaveUp
-from repro.engine.wal import MutationWAL, WALError
+from repro.engine.wal import MutationWAL, WALCursor, WALError, WALGap
 from repro.checkpoint import CorruptCheckpoint
 from repro.engine.qcache import QueryCache
 from repro.engine.request import FilterError, SearchRequest, canonical_filter
@@ -122,6 +133,7 @@ __all__ = [
     "ResultEvicted", "RetrievalEngine", "RetrievalResult", "SearchRequest",
     "StoreStats", "UnknownRequest", "canonical_filter",
     "CorruptCheckpoint", "FaultPlan", "InjectedCrash", "InjectedFault",
-    "MutationWAL", "PoisonError", "Supervisor", "SupervisorGaveUp",
-    "WALError",
+    "MutationWAL", "PoisonError", "PrimaryReplication", "ReplicaApplier",
+    "ReplicationConfig", "Supervisor", "SupervisorGaveUp",
+    "WALCursor", "WALError", "WALGap",
 ]

@@ -336,6 +336,52 @@ class CacheConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ReplicationConfig:
+    """Replication section (see `repro.engine.replication`).
+
+    * ``role`` — ``single`` (no replication), ``primary`` (owns the WAL;
+      mutations land here), or ``follower`` (read-only; bootstraps from the
+      shared state dir's newest snapshot and tails the primary's WAL).
+    * ``poll_s`` — follower WAL-tail poll interval.
+    * ``ready_lag_max`` — readiness bound: a follower reports ready only
+      once bootstrapped and within this many records of the primary's tail
+      (``/healthz?ready=1``).
+    * ``min_seq_wait_s`` — serving-side cap on how long a search holding a
+      ``min_seq`` consistency token waits for catch-up before returning a
+      retryable 503 (bounded further by the request deadline).
+    """
+
+    role: str = "single"
+    poll_s: float = 0.05
+    ready_lag_max: int = 0
+    min_seq_wait_s: float = 1.0
+
+    def __post_init__(self):
+        _validate_choice(self, "role", ("single", "primary", "follower"))
+        if self.poll_s <= 0:
+            raise ValueError(
+                f"ReplicationConfig.poll_s must be > 0, got {self.poll_s}")
+        if self.ready_lag_max < 0:
+            raise ValueError(
+                f"ReplicationConfig.ready_lag_max must be >= 0, got "
+                f"{self.ready_lag_max}")
+        if self.min_seq_wait_s < 0:
+            raise ValueError(
+                f"ReplicationConfig.min_seq_wait_s must be >= 0, got "
+                f"{self.min_seq_wait_s}")
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ReplicationConfig":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = sorted(set(d) - known)
+        if bad:
+            raise ValueError(
+                f"ReplicationConfig does not take field(s) {bad}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class FaultToleranceConfig:
     """Fault-tolerance section (see `repro.engine.wal` / ``.supervise`` /
     ``.faults``).
@@ -427,6 +473,8 @@ class EngineConfig:
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
     fault: FaultToleranceConfig = dataclasses.field(
         default_factory=FaultToleranceConfig)
+    replication: ReplicationConfig = dataclasses.field(
+        default_factory=ReplicationConfig)
 
     def __post_init__(self):
         _validate_positive(self, "d_emb", "d_start", "k0", "final_k",
@@ -447,6 +495,10 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.fault must be a FaultToleranceConfig, got "
                 f"{type(self.fault).__name__}")
+        if not isinstance(self.replication, ReplicationConfig):
+            raise ValueError(
+                f"EngineConfig.replication must be a ReplicationConfig, "
+                f"got {type(self.replication).__name__}")
         if self.d_start > self.d_emb:
             raise ValueError(
                 f"EngineConfig.d_start={self.d_start} exceeds "
@@ -494,6 +546,8 @@ class EngineConfig:
             d["cache"] = CacheConfig.from_dict(d["cache"])
         if "fault" in d:
             d["fault"] = FaultToleranceConfig.from_dict(d["fault"])
+        if "replication" in d:
+            d["replication"] = ReplicationConfig.from_dict(d["replication"])
         if "buckets" in d:
             d["buckets"] = tuple(d["buckets"])
         known = {f.name for f in dataclasses.fields(cls)}
@@ -594,6 +648,19 @@ class EngineConfig:
                              "(chaos testing; empty = inert)")
         ap.add_argument("--inject-seed", type=int, default=0,
                         help="seed for probabilistic (p=) fault rules")
+        ap.add_argument("--role", type=str, default="single",
+                        choices=("single", "primary", "follower", "router"),
+                        help="replication role: primary owns the WAL, "
+                             "followers tail it read-only from the shared "
+                             "--state-dir, router fronts --replicas")
+        ap.add_argument("--replica-poll-s", type=float, default=0.05,
+                        help="follower WAL-tail poll interval")
+        ap.add_argument("--ready-lag-max", type=int, default=0,
+                        help="follower readiness: max records behind the "
+                             "primary's tail for /healthz?ready=1")
+        ap.add_argument("--min-seq-wait-s", type=float, default=1.0,
+                        help="max wait for a min_seq consistency token "
+                             "before a retryable 503")
 
     @classmethod
     def from_flags(cls, args, *, d_emb: int,
@@ -651,6 +718,14 @@ class EngineConfig:
                 inject=args.inject,
                 inject_seed=args.inject_seed,
             ),
+            replication=ReplicationConfig(
+                # the router role builds no engine of its own
+                role=(args.role if args.role in ("primary", "follower")
+                      else "single"),
+                poll_s=args.replica_poll_s,
+                ready_lag_max=args.ready_lag_max,
+                min_seq_wait_s=args.min_seq_wait_s,
+            ),
         )
 
 
@@ -673,6 +748,7 @@ def legacy_config(
     adaptive: Optional[AdaptiveConfig] = None,
     cache: Optional[CacheConfig] = None,
     fault: Optional[FaultToleranceConfig] = None,
+    replication: Optional[ReplicationConfig] = None,
 ) -> "EngineConfig":
     """The deprecation shim: old-style engine kwargs -> ``EngineConfig``.
 
@@ -692,4 +768,6 @@ def legacy_config(
         adaptive=adaptive if adaptive is not None else AdaptiveConfig(),
         cache=cache if cache is not None else CacheConfig(),
         fault=fault if fault is not None else FaultToleranceConfig(),
+        replication=(replication if replication is not None
+                     else ReplicationConfig()),
     )

@@ -937,8 +937,6 @@ class RetrievalEngine:
         """
         import os
 
-        from repro.checkpoint import CorruptCheckpoint, all_steps, load_arrays
-
         t0 = time.perf_counter()
         with self.lock:
             self.faults.check("ckpt_load")
@@ -946,42 +944,7 @@ class RetrievalEngine:
                 "status": "ok", "snapshot_step": None, "fallbacks": 0,
                 "replayed": 0, "wal_truncated": False, "duration_ms": 0.0,
             }
-            loaded = None
-            for step in sorted(all_steps(ckpt_dir), reverse=True):
-                try:
-                    arrays, extra, _ = load_arrays(ckpt_dir, step=step)
-                except CorruptCheckpoint:
-                    report["fallbacks"] += 1
-                    continue
-                loaded = (step, arrays, extra)
-                break
-            wal_seq = -1
-            if loaded is not None:
-                step, arrays, extra = loaded
-                # capacity is NOT checked here: restore_state adopts the
-                # snapshot's buffer capacity, so only identity keys matter
-                self._check_index_meta(extra.get("engine_meta"),
-                                       f"snapshot step {step} in {ckpt_dir}",
-                                       keys=("backend", "d_emb", "metric"))
-                store_arrays = {
-                    k[len("store/"):]: v for k, v in arrays.items()
-                    if k.startswith("store/")}
-                self.store.restore_state(store_arrays, extra["store_meta"])
-                self._index_state = None
-                self._min_state_generation = 0
-                index_arrays = {
-                    k[len("index/"):]: v for k, v in arrays.items()
-                    if k.startswith("index/")}
-                if index_arrays and "index_meta" in extra:
-                    self._index_state = self.backend.load_state(
-                        {"meta": extra["index_meta"],
-                         "arrays": index_arrays},
-                        db=self.store.db, valid=self.store.valid,
-                        sq_prefix=self.store.sq_prefix,
-                        stats=self.store.stats(),
-                    )
-                wal_seq = int(extra["wal_seq"])
-                report["snapshot_step"] = step
+            wal_seq = self._restore_newest_snapshot(ckpt_dir, report)
             # open the WAL (truncating any torn tail) and replay the rest
             os.makedirs(ckpt_dir, exist_ok=True)
             self.ckpt_dir = ckpt_dir
@@ -997,6 +960,72 @@ class RetrievalEngine:
             self.stats.n_replayed += report["replayed"]
             self.last_recovery = report
             return report
+
+    def _restore_newest_snapshot(self, ckpt_dir: str, report: Dict) -> int:
+        """Restore store + index from the newest checksum-valid snapshot
+        under ``ckpt_dir`` (corrupt snapshots fall back a step).
+
+        Shared by ``recover`` (primary restart) and the replication
+        follower bootstrap — the follower restores read-only and must NOT
+        open the WAL, so this helper deliberately touches neither
+        ``self.wal`` nor ``self.ckpt_dir``.  Mutates ``report``
+        (``snapshot_step`` / ``fallbacks``) and returns the snapshot's WAL
+        seq, -1 when no usable snapshot exists.  Caller holds the lock.
+        """
+        from repro.checkpoint import CorruptCheckpoint, all_steps, load_arrays
+
+        loaded = None
+        for step in sorted(all_steps(ckpt_dir), reverse=True):
+            try:
+                arrays, extra, _ = load_arrays(ckpt_dir, step=step)
+            except CorruptCheckpoint:
+                report["fallbacks"] += 1
+                continue
+            loaded = (step, arrays, extra)
+            break
+        if loaded is None:
+            return -1
+        step, arrays, extra = loaded
+        # capacity is NOT checked here: restore_state adopts the
+        # snapshot's buffer capacity, so only identity keys matter
+        self._check_index_meta(extra.get("engine_meta"),
+                               f"snapshot step {step} in {ckpt_dir}",
+                               keys=("backend", "d_emb", "metric"))
+        store_arrays = {
+            k[len("store/"):]: v for k, v in arrays.items()
+            if k.startswith("store/")}
+        self.store.restore_state(store_arrays, extra["store_meta"])
+        self._index_state = None
+        self._min_state_generation = 0
+        index_arrays = {
+            k[len("index/"):]: v for k, v in arrays.items()
+            if k.startswith("index/")}
+        if index_arrays and "index_meta" in extra:
+            self._index_state = self.backend.load_state(
+                {"meta": extra["index_meta"],
+                 "arrays": index_arrays},
+                db=self.store.db, valid=self.store.valid,
+                sq_prefix=self.store.sq_prefix,
+                stats=self.store.stats(),
+            )
+        report["snapshot_step"] = step
+        return int(extra["wal_seq"])
+
+    def apply_replicated(self, rec) -> None:
+        """Apply one WAL record shipped from a primary (follower path).
+
+        Goes through the exact same ``_apply_record`` used by crash
+        recovery — tail injection, capacity doubling, and rebuild
+        scheduling all behave as if the mutation happened locally — but is
+        never re-logged: a follower must not own a WAL over the primary's
+        log directory (it would truncate or extend the live segment).
+        """
+        with self.lock:
+            if self.wal is not None:
+                raise WALError(
+                    "apply_replicated on an engine with its own WAL open — "
+                    "followers replicate, they do not log")
+            self._apply_record(rec)
 
     def _apply_record(self, rec) -> None:
         """Re-apply one WAL record during recovery (never re-logged)."""

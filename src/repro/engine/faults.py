@@ -8,6 +8,8 @@ engine/driver consult at the failure-prone moments:
     wal_write   — WAL append on the mutation path
     ckpt_save   — snapshot/index save
     ckpt_load   — snapshot/index load during recovery
+    wal_ship    — replication: follower polling the primary's WAL tail
+    replica_apply — replication: follower applying one shipped record
 
 Spec grammar (``FaultToleranceConfig.inject`` / ``--inject``)::
 
@@ -49,7 +51,8 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
-SITES = ("dispatch", "rebuild", "wal_write", "ckpt_save", "ckpt_load")
+SITES = ("dispatch", "rebuild", "wal_write", "ckpt_save", "ckpt_load",
+         "wal_ship", "replica_apply")
 ACTIONS = ("error", "crash", "hang", "exit", "poison")
 
 

@@ -45,6 +45,12 @@ class WALError(RuntimeError):
     truncated silently."""
 
 
+class WALGap(WALError):
+    """A tailing reader's position was pruned away: the records between the
+    cursor and the oldest surviving segment are gone, so the reader must
+    re-bootstrap from a snapshot instead of replaying."""
+
+
 class WALRecord:
     """One replayable mutation."""
 
@@ -63,35 +69,64 @@ def _segment_name(first_seq: int) -> str:
     return f"wal-{first_seq:012d}.log"
 
 
-def _scan_segment(path: str) -> Tuple[List[WALRecord], int, bool]:
-    """Read one segment; returns (records, clean_byte_length, torn).
+def _list_segments(wal_dir: str) -> List[Tuple[int, str]]:
+    """All segment files in ``wal_dir`` as (first_seq, path), seq-sorted."""
+    out = []
+    try:
+        names = os.listdir(wal_dir)
+    except FileNotFoundError:
+        return []
+    for name in names:
+        if name.startswith("wal-") and name.endswith(".log"):
+            try:
+                first = int(name[4:-4])
+            except ValueError:
+                continue
+            out.append((first, os.path.join(wal_dir, name)))
+    return sorted(out)
 
-    ``clean_byte_length`` is the offset just past the last intact record —
-    the truncation point for a torn tail.  ``torn`` is True when trailing
-    bytes had to be discarded (partial frame, short payload, CRC mismatch).
+
+def _scan_tail(path: str, offset: int) -> Tuple[List[WALRecord], int, bool]:
+    """Parse frames starting at byte ``offset``; returns
+    (records, clean_byte_length, torn).
+
+    ``clean_byte_length`` is the *absolute* offset just past the last intact
+    record — the truncation point for a torn tail, and the resume point for
+    a tailing cursor.  ``torn`` is True when trailing bytes had to be
+    discarded (partial frame, short payload, CRC mismatch).  ``offset == 0``
+    verifies the segment magic first.
     """
     records: List[WALRecord] = []
     with open(path, "rb") as f:
+        if offset == 0:
+            if f.read(len(_MAGIC)) != _MAGIC:
+                # unreadable header: treat the whole segment as torn
+                return records, 0, True
+            offset = len(_MAGIC)
+        else:
+            f.seek(offset)
         blob = f.read()
-    if blob[: len(_MAGIC)] != _MAGIC:
-        # unreadable header: treat the whole segment as torn
-        return records, 0, True
-    off = len(_MAGIC)
-    clean = off
+    off = 0
+    clean = 0
     while off + _HEADER.size <= len(blob):
         length, crc = _HEADER.unpack_from(blob, off)
         start = off + _HEADER.size
         end = start + length
         if length > _MAX_RECORD or end > len(blob):
-            return records, clean, True           # partial frame
+            return records, offset + clean, True  # partial frame
         payload = blob[start:end]
         if zlib.crc32(payload) != crc:
-            return records, clean, True           # corrupt record
+            return records, offset + clean, True  # corrupt record
         rec = msgpack.unpackb(payload)
         records.append(WALRecord(int(rec["seq"]), rec["kind"], rec))
         off = end
         clean = off
-    return records, clean, off != len(blob)
+    return records, offset + clean, off != len(blob)
+
+
+def _scan_segment(path: str) -> Tuple[List[WALRecord], int, bool]:
+    """Read one whole segment; returns (records, clean_byte_length, torn)."""
+    return _scan_tail(path, 0)
 
 
 class MutationWAL:
@@ -130,15 +165,7 @@ class MutationWAL:
 
     # -- segment plumbing ---------------------------------------------------
     def _segments(self) -> List[Tuple[int, str]]:
-        out = []
-        for name in os.listdir(self.wal_dir):
-            if name.startswith("wal-") and name.endswith(".log"):
-                try:
-                    first = int(name[4:-4])
-                except ValueError:
-                    continue
-                out.append((first, os.path.join(self.wal_dir, name)))
-        return sorted(out)
+        return _list_segments(self.wal_dir)
 
     def _open_segment(self, path: str, *, fresh: bool) -> None:
         self._fh = open(path, "ab")
@@ -252,3 +279,116 @@ class MutationWAL:
     def describe(self) -> str:
         return (f"MutationWAL(dir={self.wal_dir!r}, last_seq={self.last_seq}, "
                 f"lag={self.lag}, segments={self.n_segments})")
+
+
+class WALCursor:
+    """Read-only tailing cursor over a live WAL directory.
+
+    Built for replication: a follower polls the primary's ``wal/`` directory
+    and applies records as they become durable.  The cursor is keyed by
+    *sequence number*, not file position, so ``rotate()`` / ``prune()``
+    racing a poll can never lose or double-apply a record:
+
+    * records come back strictly in seq order, each exactly once — a
+      re-read after rotation is filtered out by ``next_seq``;
+    * a segment pruned *behind* the cursor held only consumed records —
+      invisible;
+    * a prune that removed records the cursor has not read yet (the reader
+      fell further behind than the writer's snapshot retention) raises
+      ``WALGap`` — the caller must re-bootstrap from a snapshot rather than
+      silently skip the missing mutations.
+
+    A torn tail on the newest segment is the writer mid-append (or a crash
+    artifact the writer truncates on restart): ``poll`` stops before it and
+    picks up from the same byte next time.  A tear in an *older* segment can
+    never heal and raises ``WALError``.
+    """
+
+    def __init__(self, wal_dir: str, *, after_seq: int = -1):
+        self.wal_dir = wal_dir
+        self.next_seq = int(after_seq) + 1
+        self._offsets: Dict[str, int] = {}     # path -> bytes fully parsed
+
+    @property
+    def applied_seq(self) -> int:
+        """Highest seq this cursor has handed out (-1 before the first)."""
+        return self.next_seq - 1
+
+    def seek(self, after_seq: int) -> None:
+        """Reposition so the next ``poll`` starts after ``after_seq``."""
+        self.next_seq = int(after_seq) + 1
+        self._offsets.clear()
+
+    def poll(self, max_records: Optional[int] = None) -> List[WALRecord]:
+        """Return new intact records with ``seq >= next_seq``, in order.
+
+        Returns ``[]`` when the reader is caught up (or the writer is
+        mid-append).  Raises ``WALGap`` when pruning outran the cursor.
+        """
+        for _attempt in range(3):
+            try:
+                return self._poll_once(max_records)
+            except FileNotFoundError:
+                # a segment vanished between listing and scan (prune racing
+                # the poll): re-list — the seq filter keeps this idempotent
+                self._offsets.clear()
+                continue
+        raise WALError(f"WAL segments under {self.wal_dir!r} keep vanishing "
+                       "mid-scan")
+
+    def _poll_once(self, max_records: Optional[int]) -> List[WALRecord]:
+        segs = _list_segments(self.wal_dir)
+        if not segs:
+            return []
+        if self.next_seq < segs[0][0]:
+            raise WALGap(
+                f"cursor at seq {self.next_seq} but oldest surviving segment "
+                f"starts at {segs[0][0]}: records were pruned before they "
+                "were read — re-bootstrap from a snapshot")
+        live = {path for _first, path in segs}
+        for stale in [p for p in self._offsets if p not in live]:
+            del self._offsets[stale]
+        out: List[WALRecord] = []
+        for i, (first, path) in enumerate(segs):
+            newest = i + 1 == len(segs)
+            nxt = None if newest else segs[i + 1][0]
+            if nxt is not None and nxt <= self.next_seq:
+                continue                           # fully consumed segment
+            recs, clean, torn = _scan_tail(path, self._offsets.get(path, 0))
+            for rec in recs:
+                if rec.seq < self.next_seq:
+                    continue
+                if rec.seq != self.next_seq:
+                    raise WALError(
+                        f"WAL sequence gap inside {path!r}: expected "
+                        f"{self.next_seq}, found {rec.seq}")
+                out.append(rec)
+                self.next_seq = rec.seq + 1
+                if max_records is not None and len(out) >= max_records:
+                    return out
+            self._offsets[path] = clean
+            if torn:
+                if newest:
+                    return out                     # writer mid-append: retry
+                raise WALError(
+                    f"torn record inside non-active segment {path!r}")
+        return out
+
+    def last_available_seq(self) -> int:
+        """Highest intact seq currently durable in the directory (-1 when
+        empty) — the target the cursor is chasing."""
+        segs = _list_segments(self.wal_dir)
+        if not segs:
+            return -1
+        first, path = segs[-1]
+        try:
+            recs, _clean, _torn = _scan_segment(path)
+        except FileNotFoundError:
+            return self.applied_seq
+        if recs:
+            return recs[-1].seq
+        return first - 1
+
+    def lag(self) -> int:
+        """How many durable records the cursor has not yet handed out."""
+        return max(0, self.last_available_seq() - self.applied_seq)

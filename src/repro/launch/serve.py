@@ -114,14 +114,38 @@ def http_json(url: str, path: str, body=None, method: str = "GET",
 
 
 def serve_http(args) -> None:
-    """Boot the HTTP front-end over a fresh engine and block until ^C."""
+    """Boot the HTTP front-end over a fresh engine and block until ^C.
+
+    ``--role`` picks the replication mode: ``single`` (default) and
+    ``primary`` own the WAL under ``--state-dir`` and serve mutations;
+    ``follower`` shares the same ``--state-dir``, bootstraps read-only
+    from its newest snapshot, and tails the primary's WAL — mutations get
+    403, searches wait on ``min_seq`` tokens.
+    """
+    from repro.engine import PrimaryReplication, ReplicaApplier
     from repro.serve import TenantQuotas, serve_in_thread
 
+    role = args.role if args.role in ("primary", "follower") else "single"
+    if role != "single" and not args.state_dir:
+        raise SystemExit(f"--role={role} needs --state-dir (the WAL-shipped "
+                         "replication channel is the shared state dir)")
     config = EngineConfig.from_flags(args, d_emb=args.d_emb,
                                      capacity=max(args.docs, 1024))
     engine = RetrievalEngine(config=config)
-    if args.state_dir:
+    replication = None
+    applier = None
+    if role == "follower":
+        applier = ReplicaApplier(engine, args.state_dir)
+        report = applier.bootstrap()
+        applier.start()
+        replication = applier
+        print(f"[state]  follower of {args.state_dir}: "
+              f"(snapshot={report['snapshot_step']} "
+              f"fallbacks={report['fallbacks']} "
+              f"in {report['duration_ms']:.1f}ms), tailing WAL")
+    elif args.state_dir:
         report = engine.recover(args.state_dir)
+        replication = PrimaryReplication(engine)
         print(f"[state]  {args.state_dir}: {report['status']} "
               f"(snapshot={report['snapshot_step']} "
               f"replayed={report['replayed']} "
@@ -144,10 +168,11 @@ def serve_http(args) -> None:
     handle = serve_in_thread(
         engine, driver, quotas=quotas,
         require_tenant=not args.allow_anonymous,
-        host=args.host, port=args.port)
+        host=args.host, port=args.port,
+        replication=replication, read_only=(role == "follower"))
     print(f"[engine] {engine.describe()}")
     print(f"[driver] {driver.describe()}")
-    print(f"[http]   serving on {handle.url} "
+    print(f"[http]   serving on {handle.url} role={role} "
           f"(tenancy {'optional' if args.allow_anonymous else 'required'})")
     # SIGTERM (kill, container stop) must take the same graceful path as
     # ^C: drain the driver and cut a final snapshot before exiting
@@ -158,7 +183,8 @@ def serve_http(args) -> None:
     try:
         while True:
             time.sleep(max(args.snapshot_every_s, 0) or 3600)
-            if args.state_dir and args.snapshot_every_s > 0:
+            if args.state_dir and role != "follower" \
+                    and args.snapshot_every_s > 0:
                 step = engine.save_snapshot()
                 print(f"[state]  snapshot step {step}")
     except KeyboardInterrupt:
@@ -168,26 +194,90 @@ def serve_http(args) -> None:
         if supervisor is not None:
             supervisor.stop()
         driver.stop()
-        if args.state_dir:
+        if applier is not None:
+            applier.stop()
+        elif args.state_dir:
+            # followers never snapshot — the primary owns the state dir
             engine.save_snapshot()
             engine.wal.close()
 
 
+def serve_router(args) -> None:
+    """Boot the replica-routing front door over ``--replicas`` and block."""
+    from repro.serve import (ReplicaRouter, RetryPolicy, RouterHTTPServer,
+                             run_server_in_thread)
+
+    urls = [u.strip() for u in args.replicas.split(",") if u.strip()]
+    if not urls:
+        raise SystemExit("--role=router needs --replicas URL[,URL...]")
+    router = ReplicaRouter(
+        urls,
+        probe_interval_s=args.probe_interval_s,
+        hedge_ms=args.hedge_ms if args.hedge_ms >= 0 else None,
+        retry=RetryPolicy(max_attempts=args.retries),
+    ).start()
+    handle = run_server_in_thread(RouterHTTPServer(
+        router, host=args.host, port=args.port), thread_name="router-http")
+    print(f"[router] serving on {handle.url} over {len(urls)} replicas "
+          f"(probe every {args.probe_interval_s:g}s, hedge_ms="
+          f"{args.hedge_ms if args.hedge_ms >= 0 else 'off'})")
+
+    def _sigterm(signum, frame):
+        raise KeyboardInterrupt
+
+    signal.signal(signal.SIGTERM, _sigterm)
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        print("\n[router] shutting down")
+    finally:
+        handle.stop()
+        router.stop()
+
+
 def connect_client(args) -> None:
-    """Open-loop HTTP client: seed docs, then drive concurrent searches."""
+    """Open-loop HTTP client: seed docs, then drive concurrent searches.
+
+    Shares the router's failure discipline: every call carries a
+    ``deadline_ms`` and retries 503/504/connection errors with jittered
+    backoff (`repro.serve.RetryPolicy`) — 4xx responses are never retried,
+    and seeding mutations only retry explicit 503/504 (a dropped
+    connection mid-mutation may already have applied).
+    """
+    from repro.serve import RetryPolicy, http_call
+
     url = args.connect
-    status, health = http_json(url, "/healthz")
+    retry = RetryPolicy(max_attempts=max(1, args.retries))
+    deadline_ms = args.deadline_ms if args.deadline_ms > 0 else None
+    timeout = (deadline_ms / 1e3 + 5.0) if deadline_ms else 60.0
+
+    def call(path, body=None, *, mutation=False):
+        def attempt(_n):
+            status, payload = http_call(url, path, body, timeout=timeout)
+            if mutation and status == 0:
+                # ambiguous: the server may have applied it — never re-send;
+                # -1 is not retryable, so run() returns it straight through
+                return -1, payload
+            return status, payload
+        status, payload = retry.run(attempt, sleep=time.sleep)
+        return (0, payload) if status == -1 else (status, payload)
+
+    status, health = call("/healthz")
     if status != 200:
         raise SystemExit(f"server unhealthy: {status} {health}")
     rng = np.random.default_rng(0)
     d = args.d_emb
+    min_seq = None
     if args.docs:
         docs = rng.standard_normal((args.docs, d)).astype(np.float32)
-        status, added = http_json(url, "/v1/docs", {
-            "vectors": docs.tolist(), "tenant": args.tenant})
+        status, added = call("/v1/docs", {
+            "vectors": docs.tolist(), "tenant": args.tenant}, mutation=True)
         if status != 200:
             raise SystemExit(f"seed add failed: {status} {added}")
-        print(f"[seed]   {added['n_added']} docs under {args.tenant!r}")
+        min_seq = added.get("seq")
+        print(f"[seed]   {added['n_added']} docs under {args.tenant!r}"
+              + (f" (seq={min_seq})" if min_seq is not None else ""))
     queries = rng.standard_normal((args.requests, d)).astype(np.float32)
     lat = [None] * args.requests
     codes = [0] * args.requests
@@ -198,10 +288,14 @@ def connect_client(args) -> None:
     def client(shard):
         barrier.wait()
         for i in shard:
+            body = {"query": queries[i].tolist(), "tenant": args.tenant,
+                    "k": args.final_k}
+            if deadline_ms:
+                body["deadline_ms"] = deadline_ms
+            if min_seq is not None:
+                body["min_seq"] = min_seq
             t0 = time.perf_counter()
-            codes[i], _ = http_json(url, "/v1/search", {
-                "query": queries[i].tolist(), "tenant": args.tenant,
-                "k": args.final_k})
+            codes[i], _ = call("/v1/search", body)
             lat[i] = time.perf_counter() - t0
 
     threads = [threading.Thread(target=client, args=(s,), daemon=True)
@@ -328,17 +422,34 @@ def main():
     ap.add_argument("--supervise", action="store_true",
                     help="watchdog the driver thread: restart it with "
                          "capped backoff if it dies or hangs")
+    # replication / routing
+    ap.add_argument("--replicas", type=str, default="",
+                    help="--role=router: comma-separated replica base URLs "
+                         "to spread searches across")
+    ap.add_argument("--hedge-ms", type=float, default=-1.0,
+                    help="--role=router: fire a hedged search after this "
+                         "many ms (0 = adaptive p95, <0 = off)")
+    ap.add_argument("--probe-interval-s", type=float, default=0.25,
+                    help="--role=router: per-replica health-probe period")
     # HTTP client mode
     ap.add_argument("--connect", type=str, default="",
                     help="drive a running HTTP server at this URL instead "
                          "of serving locally")
     ap.add_argument("--tenant", type=str, default="bench",
                     help="--connect: tenant to seed and search under")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="--connect: propagate this per-request deadline "
+                         "(0 = none)")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="--connect/--role=router: max attempts per call "
+                         "(retries only 503/504/connection errors)")
     EngineConfig.add_flags(ap)
     args = ap.parse_args()
     if args.serve_http and args.connect:
         raise SystemExit("--serve-http and --connect are mutually exclusive")
-    if args.serve_http:
+    if args.serve_http and args.role == "router":
+        serve_router(args)
+    elif args.serve_http:
         serve_http(args)
     elif args.connect:
         connect_client(args)

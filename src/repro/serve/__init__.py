@@ -4,9 +4,21 @@ engine driver.
   RetrievalHTTPServer — stdlib asyncio HTTP/1.1 server (health, search,
                         add/delete docs, stats) mapping the engine's error
                         taxonomy onto status codes (429 backpressure,
-                        504 deadline, 400 bad filter, 403 cross-tenant)
+                        504 deadline, 400 bad filter, 403 cross-tenant);
+                        liveness vs readiness split (``/healthz?ready=1``),
+                        replication deep-health, read-only follower mode,
+                        and ``min_seq`` read-your-writes waits
+  ReplicaRouter,
+  RouterHTTPServer    — replicated serving front door: health-probed
+                        failover, per-replica circuit breakers, bounded
+                        retries, request hedging, consistency-token
+                        routing (see `repro.serve.router`)
+  RetryPolicy,
+  CircuitBreaker      — the shared failure-handling primitives (also used
+                        by the ``--connect`` CLI client)
   serve_in_thread,
-  ServerHandle        — boot the server on its own event-loop thread;
+  run_server_in_thread,
+  ServerHandle        — boot a server on its own event-loop thread;
                         used by tests, the launcher, and the load bench
   TenantQuotas,
   QuotaExceeded       — per-tenant admission control (in-flight + doc
@@ -17,13 +29,24 @@ Tenancy and filtering live in the engine (`repro.engine.SearchRequest`,
 """
 
 from repro.serve.http import (
+    AsyncHTTPBase,
     RetrievalHTTPServer,
     ServerHandle,
+    run_server_in_thread,
     serve_in_thread,
 )
 from repro.serve.quota import QuotaExceeded, TenantQuotas
+from repro.serve.router import (
+    CircuitBreaker,
+    ReplicaRouter,
+    RetryPolicy,
+    RouterHTTPServer,
+    http_call,
+)
 
 __all__ = [
-    "QuotaExceeded", "RetrievalHTTPServer", "ServerHandle",
-    "TenantQuotas", "serve_in_thread",
+    "AsyncHTTPBase", "CircuitBreaker", "QuotaExceeded", "ReplicaRouter",
+    "RetrievalHTTPServer", "RetryPolicy", "RouterHTTPServer",
+    "ServerHandle", "TenantQuotas", "http_call", "run_server_in_thread",
+    "serve_in_thread",
 ]

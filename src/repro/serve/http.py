@@ -12,16 +12,24 @@ Endpoints (JSON in, JSON out — except ``/metrics``, which is Prometheus
 text exposition):
 
   GET  /healthz          liveness: 200 once the driver thread is running;
+                         ``?ready=1`` additionally 503s until recovery/WAL
+                         replay (and, on followers, catch-up within the
+                         lag bound) completes — the router probes this;
                          ``?deep=1`` adds driver heartbeat age, supervisor
-                         state, WAL lag and the last recovery report
+                         state, WAL lag, replication status and the last
+                         recovery report
   GET  /metrics          Prometheus text exposition of the engine registry
   GET  /v1/stats         engine + driver counters, tenants, config, quotas
   GET  /v1/traces        recent request traces + slow-query records
   POST /v1/search        {"query": [f32...], "k", "tenant", "filter",
-                          "deadline_ms"} -> {"ids", "scores", "spans", ...}
+                          "deadline_ms", "min_seq"} -> {"ids", "scores",
+                          "spans", ...}; ``min_seq`` is a read-your-writes
+                          token: the replica waits (bounded) until its
+                          applied WAL seq covers it, else a retryable 503
   POST /v1/docs          {"vectors": [[f32...]...], "tenant", "metadata"}
-                          -> {"ids": [...]}
-  POST /v1/docs/delete   {"ids": [...], "tenant"} -> {"n_deleted": ...}
+                          -> {"ids": [...], "seq"} (seq = the mutation's
+                          WAL position: the consistency token)
+  POST /v1/docs/delete   {"ids": [...], "tenant"} -> {"n_deleted", "seq"}
 
 Every response is also counted into the engine's metrics registry
 (``repro_http_requests_total{route,status}`` +
@@ -112,60 +120,34 @@ class _Raw:
     content_type: str = "text/plain; charset=utf-8"
 
 
-class RetrievalHTTPServer:
-    """Asyncio HTTP server over one engine + driver pair.
+class AsyncHTTPBase:
+    """Connection plumbing shared by every server in the serving tier.
 
-    Args:
-      engine:          the engine (used directly for corpus mutations and
-                       stats; its lock makes quota-check + add atomic).
-      driver:          the running driver that serves searches.
-      quotas:          per-tenant admission limits (default: a permissive
-                       ``TenantQuotas()`` — 64 in-flight, unlimited docs).
-      require_tenant:  refuse tenantless search/add/delete with 400
-                       (default True; turn off for single-tenant or admin
-                       deployments).
-      host/port:       bind address; port 0 picks a free port (read it
-                       back from ``server.port`` after ``start()``).
-      submit_timeout:  seconds a search waits for driver-queue space
-                       before 429 (small on purpose: shed, don't buffer).
-      result_timeout:  hard cap on one search round trip before 504.
-      max_body:        request-body byte limit (413 past it).
+    Owns the listener lifecycle, HTTP/1.1 request framing (keep-alive,
+    body limits), response writing, query-string merging, executor
+    dispatch of blocking handlers, and the error-taxonomy -> status-code
+    mapping.  Subclasses (`RetrievalHTTPServer`, the router's
+    `RouterHTTPServer`) provide a route table via ``_routes()`` and may
+    override ``_observe`` to count responses into their own registry.
     """
 
-    def __init__(
-        self,
-        engine: RetrievalEngine,
-        driver: EngineDriver,
-        *,
-        quotas: Optional[TenantQuotas] = None,
-        require_tenant: bool = True,
-        host: str = "127.0.0.1",
-        port: int = 0,
-        submit_timeout: float = 0.05,
-        result_timeout: float = 60.0,
-        max_body: int = 64 << 20,
-    ):
-        self.engine = engine
-        self.driver = driver
-        self.quotas = quotas if quotas is not None else TenantQuotas()
-        self.require_tenant = bool(require_tenant)
+    # (method, path) pairs the subclass routes — also the bounded label
+    # universe for per-route metrics (unknown paths collapse together)
+    route_paths: Tuple[Tuple[str, str], ...] = ()
+
+    def __init__(self, *, host: str = "127.0.0.1", port: int = 0,
+                 max_body: int = 64 << 20):
         self._host = host
         self._port = int(port)
-        self.submit_timeout = float(submit_timeout)
-        self.result_timeout = float(result_timeout)
         self.max_body = int(max_body)
         self._server: Optional[asyncio.base_events.Server] = None
-        # HTTP-layer metrics live in the engine's registry so one /metrics
-        # scrape covers the whole serving spine; quota rejections join it
-        reg = engine.metrics
-        self._c_http = reg.counter(
-            "repro_http_requests_total",
-            "HTTP responses, by route and status code",
-            labels=("route", "status"))
-        self._h_http = reg.histogram(
-            "repro_http_request_ms", "HTTP request handling latency",
-            labels=("route",))
-        self.quotas.bind_registry(reg)
+
+    # -- subclass surface ----------------------------------------------------
+    def _routes(self) -> Dict[Tuple[str, str], Any]:
+        raise NotImplementedError
+
+    def _observe(self, route: str, status: int, dt_ms: float) -> None:
+        """Per-response metrics hook (default: none)."""
 
     # -- lifecycle -----------------------------------------------------------
     async def start(self) -> None:
@@ -266,7 +248,7 @@ class RetrievalHTTPServer:
     # -- routing -------------------------------------------------------------
     async def _route(self, method: str, path: str,
                      body: bytes) -> Tuple[int, Dict, Dict[str, str]]:
-        """Instrumented routing: every response lands in the registry's
+        """Instrumented routing: every response lands in the subclass's
         per-route status counter and latency histogram (unknown paths
         collapse into one ``__other__`` route so scans can't explode the
         label space past the registry's own series cap)."""
@@ -274,10 +256,9 @@ class RetrievalHTTPServer:
         status, payload, headers = await self._route_inner(
             method, path, body)
         bare = path.split("?", 1)[0]
-        route = bare if any(p == bare for (_, p) in _ROUTE_PATHS) \
+        route = bare if any(p == bare for (_, p) in self.route_paths) \
             else "__other__"
-        self._c_http.inc(route=route, status=status)
-        self._h_http.observe((time.perf_counter() - t0) * 1e3, route=route)
+        self._observe(route, status, (time.perf_counter() - t0) * 1e3)
         return status, payload, headers
 
     async def _route_inner(self, method: str, path: str,
@@ -287,15 +268,7 @@ class RetrievalHTTPServer:
                                   f"{self.max_body} bytes"}, {}
         path, _, qs = path.partition("?")
         params = dict(urllib.parse.parse_qsl(qs)) if qs else {}
-        routes = {
-            ("GET", "/healthz"): self._do_health,
-            ("GET", "/metrics"): self._do_metrics,
-            ("GET", "/v1/stats"): self._do_stats,
-            ("GET", "/v1/traces"): self._do_traces,
-            ("POST", "/v1/search"): self._do_search,
-            ("POST", "/v1/docs"): self._do_add,
-            ("POST", "/v1/docs/delete"): self._do_delete,
-        }
+        routes = self._routes()
         handler = routes.get((method, path))
         if handler is None:
             if any(p == path for (_, p) in routes):
@@ -341,6 +314,88 @@ class RetrievalHTTPServer:
         except Exception as e:                 # pragma: no cover
             return 500, {"error": f"{type(e).__name__}: {e}"}, {}
 
+
+class RetrievalHTTPServer(AsyncHTTPBase):
+    """Asyncio HTTP server over one engine + driver pair.
+
+    Args:
+      engine:          the engine (used directly for corpus mutations and
+                       stats; its lock makes quota-check + add atomic).
+      driver:          the running driver that serves searches.
+      quotas:          per-tenant admission limits (default: a permissive
+                       ``TenantQuotas()`` — 64 in-flight, unlimited docs).
+      require_tenant:  refuse tenantless search/add/delete with 400
+                       (default True; turn off for single-tenant or admin
+                       deployments).
+      host/port:       bind address; port 0 picks a free port (read it
+                       back from ``server.port`` after ``start()``).
+      submit_timeout:  seconds a search waits for driver-queue space
+                       before 429 (small on purpose: shed, don't buffer).
+      result_timeout:  hard cap on one search round trip before 504.
+      max_body:        request-body byte limit (413 past it).
+      replication:     this replica's replication surface
+                       (``PrimaryReplication`` / ``ReplicaApplier``):
+                       drives ``/healthz?ready=1``, the deep-health
+                       ``replication`` section, and ``min_seq``
+                       read-your-writes waits.  None = unreplicated.
+      read_only:       refuse mutations with 403 (follower replicas: the
+                       primary owns the log; a 403 is deliberately
+                       non-retryable so a misrouted write fails loudly).
+    """
+
+    route_paths = _ROUTE_PATHS
+
+    def __init__(
+        self,
+        engine: RetrievalEngine,
+        driver: EngineDriver,
+        *,
+        quotas: Optional[TenantQuotas] = None,
+        require_tenant: bool = True,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        submit_timeout: float = 0.05,
+        result_timeout: float = 60.0,
+        max_body: int = 64 << 20,
+        replication: Optional[Any] = None,
+        read_only: bool = False,
+    ):
+        super().__init__(host=host, port=port, max_body=max_body)
+        self.engine = engine
+        self.driver = driver
+        self.quotas = quotas if quotas is not None else TenantQuotas()
+        self.require_tenant = bool(require_tenant)
+        self.submit_timeout = float(submit_timeout)
+        self.result_timeout = float(result_timeout)
+        self.replication = replication
+        self.read_only = bool(read_only)
+        # HTTP-layer metrics live in the engine's registry so one /metrics
+        # scrape covers the whole serving spine; quota rejections join it
+        reg = engine.metrics
+        self._c_http = reg.counter(
+            "repro_http_requests_total",
+            "HTTP responses, by route and status code",
+            labels=("route", "status"))
+        self._h_http = reg.histogram(
+            "repro_http_request_ms", "HTTP request handling latency",
+            labels=("route",))
+        self.quotas.bind_registry(reg)
+
+    def _observe(self, route: str, status: int, dt_ms: float) -> None:
+        self._c_http.inc(route=route, status=status)
+        self._h_http.observe(dt_ms, route=route)
+
+    def _routes(self) -> Dict[Tuple[str, str], Any]:
+        return {
+            ("GET", "/healthz"): self._do_health,
+            ("GET", "/metrics"): self._do_metrics,
+            ("GET", "/v1/stats"): self._do_stats,
+            ("GET", "/v1/traces"): self._do_traces,
+            ("POST", "/v1/search"): self._do_search,
+            ("POST", "/v1/docs"): self._do_add,
+            ("POST", "/v1/docs/delete"): self._do_delete,
+        }
+
     # -- handlers (run on executor threads; blocking is fine) ----------------
     def _check_tenant(self, body: Dict) -> Optional[str]:
         tenant = body.get("tenant")
@@ -354,9 +409,25 @@ class RetrievalHTTPServer:
         return tenant
 
     def _do_health(self, body: Dict) -> Dict:
+        # liveness: the driver thread is up.  Readiness (?ready=1) is
+        # stricter: recovery/WAL replay is done and, on a follower,
+        # catch-up is within the configured lag bound — the router's
+        # probes use readiness so no traffic lands on a replaying replica
         if not self.driver.running:
             raise _HTTPError(503, "engine driver is not running")
         out: Dict[str, Any] = {"status": "ok", "n_docs": self.engine.n_docs}
+        if self.replication is not None:
+            out["role"] = self.replication.role
+            out["applied_seq"] = self.replication.applied_seq
+            out["replica_lag"] = self.replication.lag()
+            out["ready"] = self.replication.ready()
+        else:
+            out["ready"] = True
+        if str(body.get("ready", "")).lower() in ("1", "true", "yes"):
+            if not out["ready"]:
+                raise _HTTPError(
+                    503, "replica is not ready: "
+                         f"{self.replication.status()}")
         if str(body.get("deep", "")).lower() in ("1", "true", "yes"):
             sup = self.driver.supervisor
             with self.engine.lock:
@@ -368,6 +439,9 @@ class RetrievalHTTPServer:
                     "wal": (self.engine.wal.summary()
                             if self.engine.wal is not None else None),
                     "last_recovery": self.engine.last_recovery,
+                    "replication": (self.replication.status()
+                                    if self.replication is not None
+                                    else None),
                     "n_quarantined": self.driver.stats.n_quarantined,
                     "n_recoveries": stats.n_recoveries,
                     "n_rebuild_failures": stats.n_rebuild_failures,
@@ -426,6 +500,12 @@ class RetrievalHTTPServer:
             filter=body.get("filter"),
             deadline_ms=body.get("deadline_ms"),
         )
+        min_seq = body.get("min_seq")
+        if min_seq is not None:
+            # read-your-writes: block (bounded) until this replica has
+            # applied the client's consistency token; runs BEFORE acquire
+            # so the wait never holds a quota slot
+            self._await_min_seq(int(min_seq), request.deadline_ms)
         self.quotas.acquire(tenant)
         try:
             future = self.driver.submit(request,
@@ -459,7 +539,32 @@ class RetrievalHTTPServer:
             },
         }, headers
 
+    def _await_min_seq(self, min_seq: int,
+                       deadline_ms: Optional[float]) -> None:
+        """Wait until this replica's applied seq covers the client's
+        consistency token; retryable 503 if it cannot within the bound
+        (the router then fails over to a caught-up replica)."""
+        if self.replication is None:
+            raise _HTTPError(
+                503, "this server tracks no replication state; min_seq "
+                     "consistency tokens are not supported here")
+        wait_s = self.engine.config.replication.min_seq_wait_s
+        if deadline_ms is not None:
+            wait_s = min(wait_s, float(deadline_ms) / 1e3)
+        if not self.replication.wait_for_seq(min_seq, wait_s):
+            raise _HTTPError(
+                503, f"replica applied seq "
+                     f"{self.replication.applied_seq} has not reached "
+                     f"min_seq {min_seq} within {wait_s:.3f}s")
+
+    def _check_writable(self) -> None:
+        if self.read_only:
+            raise _HTTPError(
+                403, "this replica is a read-only follower — send "
+                     "mutations to the primary (or through the router)")
+
     def _do_add(self, body: Dict) -> Dict:
+        self._check_writable()
         tenant = self._check_tenant(body)
         vectors = np.asarray(_body_field(body, "vectors"), np.float32)
         if vectors.ndim == 1:
@@ -477,9 +582,14 @@ class RetrievalHTTPServer:
                 len(vectors))
             ids = self.engine.add_docs(vectors, tenant=tenant,
                                        metadata=metadata)
-        return {"ids": ids.tolist(), "n_added": len(ids)}
+            # seq is the mutation's WAL position — the client's
+            # read-your-writes token (pass back as min_seq on searches)
+            seq = (self.engine.wal.last_seq
+                   if self.engine.wal is not None else None)
+        return {"ids": ids.tolist(), "n_added": len(ids), "seq": seq}
 
     def _do_delete(self, body: Dict) -> Dict:
+        self._check_writable()
         tenant = self._check_tenant(body)
         ids = np.asarray(_body_field(body, "ids"), np.int64).reshape(-1)
         with self.engine.lock:                 # ownership check + delete
@@ -495,7 +605,9 @@ class RetrievalHTTPServer:
                             403, f"doc {doc_id} does not belong to "
                                  f"tenant {tenant!r}")
             n_deleted = self.engine.delete_docs(ids)
-        return {"n_deleted": n_deleted}
+            seq = (self.engine.wal.last_seq
+                   if self.engine.wal is not None else None)
+        return {"n_deleted": n_deleted, "seq": seq}
 
 
 @dataclasses.dataclass
@@ -503,7 +615,7 @@ class ServerHandle:
     """A server running on its own event-loop thread (see
     ``serve_in_thread``); ``stop()`` is idempotent and joins the thread."""
 
-    server: RetrievalHTTPServer
+    server: AsyncHTTPBase
     _loop: asyncio.AbstractEventLoop
     _thread: threading.Thread
 
@@ -538,7 +650,12 @@ def serve_in_thread(engine: RetrievalEngine, driver: EngineDriver,
     The caller keeps ownership of the driver's lifecycle — stopping the
     handle closes the listener but leaves engine and driver running.
     """
-    server = RetrievalHTTPServer(engine, driver, **kwargs)
+    return run_server_in_thread(RetrievalHTTPServer(engine, driver, **kwargs))
+
+
+def run_server_in_thread(server: AsyncHTTPBase,
+                         thread_name: str = "retrieval-http") -> ServerHandle:
+    """Boot any ``AsyncHTTPBase`` server on its own event-loop thread."""
     started = threading.Event()
     boot_error: list = []
     loop = asyncio.new_event_loop()
@@ -559,7 +676,7 @@ def serve_in_thread(engine: RetrievalEngine, driver: EngineDriver,
             loop.run_until_complete(server.stop())
             loop.close()
 
-    thread = threading.Thread(target=run, name="retrieval-http",
+    thread = threading.Thread(target=run, name=thread_name,
                               daemon=True)
     thread.start()
     started.wait()

@@ -1,0 +1,556 @@
+"""WAL-shipped replication: cursor tailing (rotation, pruning, gaps, torn
+tails), follower bootstrap + catch-up, ``recover()`` corner cases for both
+roles, the router's failure-handling primitives, and the replicated HTTP
+surface (read-only followers, ``min_seq`` tokens, readiness, failover)."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.engine import (
+    EngineDriver,
+    FaultPlan,
+    InjectedFault,
+    MutationWAL,
+    PrimaryReplication,
+    ReplicaApplier,
+    ReplicationConfig,
+    RetrievalEngine,
+    WALCursor,
+    WALError,
+    WALGap,
+)
+from repro.serve import CircuitBreaker, ReplicaRouter, RetryPolicy
+
+D = 16
+RNG = np.random.default_rng(11)
+
+
+def fresh_engine(capacity=256):
+    return RetrievalEngine(D, d_start=8, k0=8, final_k=4, buckets=(1, 2),
+                           capacity=capacity, block_n=64)
+
+
+def make_primary(state_dir, n_docs=6):
+    eng = fresh_engine()
+    eng.enable_durability(state_dir)
+    if n_docs:
+        eng.add_docs(RNG.normal(size=(n_docs, D)).astype(np.float32))
+    return eng
+
+
+def wait_until(pred, timeout=30.0, msg="condition"):
+    deadline = time.perf_counter() + timeout
+    while not pred():
+        if time.perf_counter() >= deadline:
+            raise TimeoutError(f"timed out waiting: {msg}")
+        time.sleep(0.005)
+
+
+# ---------------------------------------------------------------------------
+# WALCursor: the tailing reader the replication channel is built on
+# ---------------------------------------------------------------------------
+class TestWALCursor:
+    def test_poll_returns_records_in_seq_order_once(self, tmp_path):
+        wal = MutationWAL(str(tmp_path), fsync=False)
+        for i in range(5):
+            wal.append("add", {"i": i})
+        cur = WALCursor(str(tmp_path))
+        recs = cur.poll()
+        assert [r.seq for r in recs] == [0, 1, 2, 3, 4]
+        assert cur.applied_seq == 4
+        assert cur.poll() == []                 # nothing new: no re-read
+        wal.append("add", {"i": 5})
+        assert [r.seq for r in cur.poll()] == [5]
+        wal.close()
+
+    def test_poll_spans_rotation(self, tmp_path):
+        wal = MutationWAL(str(tmp_path), fsync=False)
+        wal.append("add", {})
+        wal.rotate()
+        wal.append("add", {})
+        wal.rotate()
+        wal.append("add", {})
+        cur = WALCursor(str(tmp_path))
+        assert [r.seq for r in cur.poll()] == [0, 1, 2]
+        wal.close()
+
+    def test_max_records_resumes_where_it_stopped(self, tmp_path):
+        wal = MutationWAL(str(tmp_path), fsync=False)
+        for _ in range(6):
+            wal.append("add", {})
+        cur = WALCursor(str(tmp_path))
+        assert [r.seq for r in cur.poll(max_records=2)] == [0, 1]
+        assert [r.seq for r in cur.poll(max_records=3)] == [2, 3, 4]
+        assert [r.seq for r in cur.poll()] == [5]
+        wal.close()
+
+    def test_seek_rewinds_and_skips(self, tmp_path):
+        wal = MutationWAL(str(tmp_path), fsync=False)
+        for _ in range(4):
+            wal.append("add", {})
+        cur = WALCursor(str(tmp_path))
+        cur.poll()
+        cur.seek(1)
+        assert [r.seq for r in cur.poll()] == [2, 3]
+        cur.seek(10)                            # ahead of the tail: nothing
+        assert cur.poll() == []
+        wal.close()
+
+    def test_prune_behind_cursor_is_invisible(self, tmp_path):
+        # regression: pruning consumed segments must not disturb the
+        # cursor or resurface old records (the prune-under-tail bug)
+        wal = MutationWAL(str(tmp_path), fsync=False)
+        for _ in range(3):
+            wal.append("add", {})
+        cur = WALCursor(str(tmp_path))
+        assert len(cur.poll()) == 3
+        wal.rotate()
+        wal.append("add", {})
+        assert wal.prune(upto_seq=2) == 1       # the consumed segment
+        assert [r.seq for r in cur.poll()] == [3]
+        assert cur.poll() == []
+
+        # and pruning between two polls of the SAME segment set
+        wal.rotate()
+        wal.append("add", {})
+        wal.prune(upto_seq=3)
+        assert [r.seq for r in cur.poll()] == [4]
+        wal.close()
+
+    def test_prune_ahead_of_cursor_raises_gap(self, tmp_path):
+        wal = MutationWAL(str(tmp_path), fsync=False)
+        for _ in range(3):
+            wal.append("add", {})
+        wal.rotate()
+        wal.append("add", {})
+        wal.prune(upto_seq=2)                   # drops seqs 0-2
+        cur = WALCursor(str(tmp_path))          # wants everything from 0
+        with pytest.raises(WALGap):
+            cur.poll()
+        wal.close()
+
+    def test_torn_newest_tail_returns_clean_prefix(self, tmp_path):
+        wal = MutationWAL(str(tmp_path), fsync=False)
+        for _ in range(3):
+            wal.append("add", {"pad": "x" * 64})
+        wal.close()
+        segs = sorted(os.listdir(tmp_path))
+        path = os.path.join(tmp_path, segs[-1])
+        with open(path, "r+b") as f:
+            f.truncate(os.path.getsize(path) - 7)   # tear the last record
+        cur = WALCursor(str(tmp_path))
+        recs = cur.poll()                       # no raise: writer mid-append
+        assert [r.seq for r in recs] == [0, 1]
+        assert cur.poll() == []
+
+    def test_last_available_seq_and_lag(self, tmp_path):
+        wal = MutationWAL(str(tmp_path), fsync=False)
+        cur = WALCursor(str(tmp_path))
+        assert cur.last_available_seq() == -1
+        assert cur.lag() == 0
+        for _ in range(4):
+            wal.append("add", {})
+        assert cur.last_available_seq() == 3
+        assert cur.lag() == 4
+        cur.poll()
+        assert cur.lag() == 0
+        wal.close()
+
+    def test_missing_dir_is_empty_not_error(self, tmp_path):
+        cur = WALCursor(str(tmp_path / "nonexistent"))
+        assert cur.poll() == []
+        assert cur.lag() == 0
+
+
+# ---------------------------------------------------------------------------
+# recover() corner cases, both roles (empty dir / snapshot-only / WAL-only)
+# ---------------------------------------------------------------------------
+class TestRecoverCorners:
+    def test_primary_empty_state_dir(self, tmp_path):
+        eng = fresh_engine()
+        report = eng.recover(str(tmp_path))
+        assert report["snapshot_step"] is None
+        assert report["replayed"] == 0
+        assert eng.n_docs == 0
+        assert eng.wal is not None              # durability is now armed
+        eng.add_docs(RNG.normal(size=(2, D)).astype(np.float32))
+        assert eng.wal.last_seq == 0
+        eng.wal.close()
+
+    def test_follower_empty_state_dir(self, tmp_path):
+        eng = fresh_engine()
+        applier = ReplicaApplier(eng, str(tmp_path))
+        report = applier.bootstrap()
+        assert report["snapshot_step"] is None
+        assert applier.applied_seq == -1
+        assert applier.ready()                  # nothing to lag behind
+        assert eng.wal is None                  # follower never opens a WAL
+        assert applier.catch_up() == 0
+
+    def test_primary_snapshot_with_zero_wal_tail(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=5)
+        prim.save_snapshot()
+        prim.wal.close()
+        eng = fresh_engine()
+        report = eng.recover(str(tmp_path))
+        assert report["snapshot_step"] is not None
+        assert report["replayed"] == 0
+        assert eng.n_docs == 5
+
+    def test_follower_snapshot_with_zero_wal_tail(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=5)
+        prim.save_snapshot()
+        foll = fresh_engine()
+        applier = ReplicaApplier(foll, str(tmp_path))
+        report = applier.bootstrap()
+        assert report["snapshot_step"] is not None
+        assert foll.n_docs == 5
+        assert applier.catch_up() == 0          # nothing past the snapshot
+        assert applier.applied_seq == prim.wal.last_seq
+        prim.wal.close()
+
+    def test_primary_wal_only(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=4)
+        prim.delete_docs([0])
+        prim.wal.close()
+        eng = fresh_engine()
+        report = eng.recover(str(tmp_path))
+        assert report["snapshot_step"] is None
+        assert report["replayed"] == 2          # one add batch + one delete
+        assert eng.n_docs == 3                  # live docs: 4 added - 1
+        assert not eng.store.is_live(0)
+        eng.wal.close()
+
+    def test_follower_wal_only(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=4)
+        prim.delete_docs([0])
+        foll = fresh_engine()
+        applier = ReplicaApplier(foll, str(tmp_path))
+        report = applier.bootstrap()
+        assert report["snapshot_step"] is None
+        assert applier.catch_up() == 2
+        assert foll.n_docs == 3                 # live docs: 4 added - 1
+        assert not foll.store.is_live(0)
+        assert applier.applied_seq == prim.wal.last_seq
+        prim.wal.close()
+
+
+# ---------------------------------------------------------------------------
+# ReplicaApplier: catch-up, lag, read-your-writes, gap re-bootstrap, faults
+# ---------------------------------------------------------------------------
+class TestReplicaApplier:
+    def test_catch_up_tracks_primary(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=6)
+        foll = fresh_engine()
+        applier = ReplicaApplier(foll, str(tmp_path))
+        applier.bootstrap()
+        applier.catch_up()
+        assert foll.n_docs == prim.n_docs
+        prim.add_docs(RNG.normal(size=(3, D)).astype(np.float32))
+        prim.delete_docs([1])
+        assert applier.lag() > 0
+        applier.catch_up()
+        assert applier.lag() == 0
+        assert foll.store.n_active == prim.store.n_active
+        assert not foll.store.is_live(1)
+        # the follower serves the primary's corpus
+        q = np.asarray(prim.store.db[2])[None]
+        _, ids = foll.search(q)
+        assert ids[0, 0] == 2
+        prim.wal.close()
+
+    def test_wait_for_seq(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=2)
+        foll = fresh_engine()
+        applier = ReplicaApplier(foll, str(tmp_path))
+        applier.bootstrap()
+        want = prim.wal.last_seq
+        assert not applier.wait_for_seq(want, timeout_s=0.05)
+        applier.catch_up()
+        assert applier.wait_for_seq(want, timeout_s=0.05)
+        assert PrimaryReplication(prim).wait_for_seq(want, timeout_s=0.0)
+        prim.wal.close()
+
+    def test_gap_triggers_rebootstrap(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=4)
+        foll = fresh_engine()
+        applier = ReplicaApplier(foll, str(tmp_path))
+        applier.bootstrap()                     # cursor at seq -1 (no snap)
+        # primary snapshots, rotates, and prunes the records the follower
+        # never saw: tailing must detect the gap and re-bootstrap
+        prim.save_snapshot()
+        prim.add_docs(RNG.normal(size=(2, D)).astype(np.float32))
+        prim.wal.prune(prim.wal.last_seq - 1)
+        assert applier.catch_up() == 0          # the re-bootstrap tick
+        assert applier.n_bootstraps == 2
+        applier.catch_up()
+        assert applier.applied_seq == prim.wal.last_seq
+        assert foll.n_docs == prim.n_docs
+        prim.wal.close()
+
+    def test_fault_sites_are_retried_not_skipped(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=3)
+        foll = fresh_engine()
+        foll.faults = FaultPlan.parse(
+            "wal_ship:error@first=1;replica_apply:error@first=1")
+        applier = ReplicaApplier(foll, str(tmp_path))
+        applier.bootstrap()
+        with pytest.raises(InjectedFault):      # wal_ship fires on poll
+            applier.catch_up()
+        assert applier.catch_up() == 0          # replica_apply fires
+        assert applier.n_apply_errors == 1
+        applier.catch_up()                      # clean: the record was NOT
+        assert applier.applied_seq == prim.wal.last_seq   # skipped
+        assert foll.n_docs == prim.n_docs
+        prim.wal.close()
+
+    def test_background_thread_converges(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=4)
+        foll = fresh_engine()
+        applier = ReplicaApplier(foll, str(tmp_path), poll_s=0.01)
+        applier.bootstrap()
+        applier.start()
+        try:
+            prim.add_docs(RNG.normal(size=(2, D)).astype(np.float32))
+            wait_until(lambda: applier.applied_seq == prim.wal.last_seq,
+                       msg="applier tails the live WAL")
+            assert applier.ready()
+        finally:
+            applier.stop()
+            prim.wal.close()
+
+    def test_apply_replicated_refuses_wal_owner(self, tmp_path):
+        prim = make_primary(str(tmp_path), n_docs=1)
+        with pytest.raises(WALError):
+            prim.apply_replicated(object())
+        prim.wal.close()
+
+
+# ---------------------------------------------------------------------------
+# failure-handling primitives shared by router and CLI client
+# ---------------------------------------------------------------------------
+class TestRetryPolicy:
+    def test_retryable_statuses(self):
+        rp = RetryPolicy()
+        assert all(rp.retryable(s) for s in (0, 503, 504))
+        assert not any(rp.retryable(s)
+                       for s in (200, 400, 403, 404, 429, 500))
+
+    def test_run_retries_until_final(self):
+        rp = RetryPolicy(max_attempts=4, jitter=0.0)
+        calls = []
+
+        def fn(attempt):
+            calls.append(attempt)
+            return (503, {}) if attempt < 2 else (200, {"ok": True})
+
+        status, payload = rp.run(fn, sleep=lambda s: None)
+        assert status == 200 and payload["ok"]
+        assert calls == [0, 1, 2]
+
+    def test_run_never_retries_4xx(self):
+        rp = RetryPolicy(max_attempts=5)
+        calls = []
+
+        def fn(attempt):
+            calls.append(attempt)
+            return 429, {}
+
+        status, _ = rp.run(fn, sleep=lambda s: None)
+        assert status == 429 and calls == [0]
+
+    def test_backoff_grows_and_caps(self):
+        rp = RetryPolicy(backoff_s=0.1, backoff_max_s=0.4, jitter=0.0)
+        assert rp.backoff(0) == pytest.approx(0.1)
+        assert rp.backoff(1) == pytest.approx(0.2)
+        assert rp.backoff(5) == pytest.approx(0.4)
+
+
+class TestCircuitBreaker:
+    def test_open_half_open_close_cycle(self):
+        now = [0.0]
+        br = CircuitBreaker(threshold=2, open_s=1.0, open_max_s=4.0,
+                            clock=lambda: now[0])
+        assert br.allow()
+        br.record_failure()
+        assert br.allow()                       # one failure: still closed
+        br.record_failure()
+        assert br.state == "open" and not br.allow()
+        now[0] = 1.01                           # backoff elapsed
+        assert br.allow()                       # non-consuming check
+        br.on_attempt()                         # the trial is claimed here
+        assert br.state == "half_open"
+        assert not br.allow()                   # single trial in flight
+        br.record_success()
+        assert br.state == "closed" and br.allow()
+
+    def test_reopen_doubles_backoff_capped(self):
+        now = [0.0]
+        br = CircuitBreaker(threshold=1, open_s=1.0, open_max_s=2.0,
+                            clock=lambda: now[0])
+        br.record_failure()                     # trip 1: 1s
+        now[0] = 1.01
+        br.allow(), br.on_attempt()
+        br.record_failure()                     # trip 2: 2s
+        now[0] = 2.0
+        assert not br.allow()
+        now[0] = 3.02
+        br.allow(), br.on_attempt()
+        br.record_failure()                     # trip 3: capped at 2s
+        assert br.summary()["n_trips"] == 3
+        now[0] = 5.05
+        assert br.allow()
+
+
+class TestReplicationConfig:
+    def test_defaults_and_round_trip(self):
+        from repro.engine import EngineConfig
+
+        cfg = EngineConfig(d_emb=D, d_start=8, replication=ReplicationConfig(
+            role="follower", poll_s=0.02, ready_lag_max=3))
+        again = EngineConfig.from_dict(cfg.to_dict())
+        assert again.replication == cfg.replication
+        assert ReplicationConfig().role == "single"
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ReplicationConfig(role="leader")
+        with pytest.raises(ValueError):
+            ReplicationConfig(poll_s=0.0)
+        with pytest.raises(ValueError):
+            ReplicationConfig(ready_lag_max=-1)
+        with pytest.raises(ValueError):
+            ReplicationConfig.from_dict({"role": "single", "bogus": 1})
+
+
+# ---------------------------------------------------------------------------
+# the replicated HTTP surface: primary + read-only follower + router
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def replicated(tmp_path):
+    from repro.serve import serve_in_thread
+
+    state = str(tmp_path / "state")
+    prim = make_primary(state, n_docs=0)
+    foll = fresh_engine()
+    applier = ReplicaApplier(foll, state, poll_s=0.01)
+    applier.bootstrap()
+    applier.start()
+    with EngineDriver(prim, max_wait_ms=1.0) as pdrv, \
+            EngineDriver(foll, max_wait_ms=1.0) as fdrv:
+        ph = serve_in_thread(prim, pdrv, require_tenant=False,
+                             replication=PrimaryReplication(prim))
+        fh = serve_in_thread(foll, fdrv, require_tenant=False,
+                             replication=applier, read_only=True)
+        try:
+            yield ph, fh, prim, foll, applier
+        finally:
+            fh.stop()
+            ph.stop()
+            applier.stop()
+            prim.wal.close()
+
+
+class TestReplicatedHTTP:
+    def test_min_seq_read_your_writes_and_read_only(self, replicated):
+        from repro.serve import http_call
+
+        ph, fh, prim, foll, applier = replicated
+        vecs = RNG.normal(size=(4, D)).astype(np.float32)
+        status, added = http_call(ph.url, "/v1/docs",
+                                  {"vectors": vecs.tolist()})
+        assert status == 200 and added["seq"] is not None
+        status, got = http_call(fh.url, "/v1/search", {
+            "query": vecs[2].tolist(), "k": 1, "min_seq": added["seq"],
+            "deadline_ms": 10_000})
+        assert status == 200
+        assert got["ids"][0] == added["ids"][2]
+
+        # followers refuse mutations outright
+        status, payload = http_call(fh.url, "/v1/docs",
+                                    {"vectors": vecs[:1].tolist()})
+        assert status == 403
+        status, payload = http_call(fh.url, "/v1/docs/delete",
+                                    {"ids": [0]})
+        assert status == 403
+
+    def test_health_reports_replication(self, replicated):
+        from repro.serve import http_call
+
+        ph, fh, *_ = replicated
+        _, h = http_call(fh.url, "/healthz")
+        assert h["role"] == "follower" and h["ready"]
+        _, deep = http_call(fh.url, "/healthz?deep=1")
+        assert deep["deep"]["replication"]["bootstrapped"]
+        _, h = http_call(ph.url, "/healthz")
+        assert h["role"] == "primary"
+
+    def test_readiness_503_until_bootstrapped(self, tmp_path):
+        from repro.serve import http_call, serve_in_thread
+
+        state = str(tmp_path / "state")
+        prim = make_primary(state, n_docs=2)
+        prim.wal.close()
+        foll = fresh_engine()
+        applier = ReplicaApplier(foll, state)   # NOT bootstrapped
+        with EngineDriver(foll, max_wait_ms=1.0) as drv:
+            handle = serve_in_thread(foll, drv, require_tenant=False,
+                                     replication=applier, read_only=True)
+            try:
+                status, _ = http_call(handle.url, "/healthz")
+                assert status == 200            # alive
+                status, _ = http_call(handle.url, "/healthz?ready=1")
+                assert status == 503            # but not ready
+                applier.bootstrap()
+                applier.catch_up()
+                status, _ = http_call(handle.url, "/healthz?ready=1")
+                assert status == 200
+            finally:
+                handle.stop()
+
+    def test_router_spreads_and_fails_over(self, replicated):
+        ph, fh, prim, foll, applier = replicated
+        vecs = RNG.normal(size=(4, D)).astype(np.float32)
+        router = ReplicaRouter([ph.url, fh.url], probe_interval_s=0.05,
+                               failure_threshold=2,
+                               breaker_open_s=0.1).start()
+        try:
+            router.wait_ready(2, timeout=30)
+            status, added, _ = router.mutate("/v1/docs",
+                                             {"vectors": vecs.tolist()})
+            assert status == 200
+            served_by = set()
+            for i in range(8):
+                s, payload, by = router.search({
+                    "query": vecs[i % 4].tolist(), "k": 1,
+                    "min_seq": added["seq"], "deadline_ms": 10_000})
+                assert s == 200
+                assert payload["ids"][0] == added["ids"][i % 4]
+                served_by.add(by)
+            assert len(served_by) == 2          # both replicas took reads
+
+            fh.stop()                           # kill the follower
+            for i in range(6):
+                s, _, by = router.search({
+                    "query": vecs[i % 4].tolist(), "k": 1,
+                    "deadline_ms": 10_000})
+                assert s == 200                 # zero client-visible errors
+                assert by == ph.url
+            f_ep = next(ep for ep in router.replicas if ep.url == fh.url)
+            wait_until(lambda: not f_ep.alive, msg="probe notices the kill")
+        finally:
+            router.stop()
+
+    def test_router_hedge_delay_knobs(self):
+        router = ReplicaRouter(["http://127.0.0.1:1"], hedge_ms=25.0)
+        assert router._hedge_delay_s() == pytest.approx(0.025)
+        adaptive = ReplicaRouter(["http://127.0.0.1:1"], hedge_ms=0.0)
+        assert adaptive._hedge_delay_s() is None     # needs p95 samples
+        for ms in [10.0] * 20:
+            adaptive._latencies.append(ms)
+        assert adaptive._hedge_delay_s() == pytest.approx(0.010, abs=5e-3)
+        off = ReplicaRouter(["http://127.0.0.1:1"], hedge_ms=None)
+        assert off._hedge_delay_s() is None
